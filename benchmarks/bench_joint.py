@@ -1,0 +1,61 @@
+"""Paper §4.2 (Tables 5/6): joint application with H2O eviction and KIVI
+quantization — accuracy proxies showing composition does not break pruning."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import attn_output_error, emit, synthetic_kv
+from repro.core import pruning
+from repro.core.eviction import h2o_keep_mask
+from repro.core.quantization import kivi_quantize_key, kivi_quantize_value
+
+
+def h2o(rng) -> None:
+    """Table 5: Mustafar on top of a 20% H2O budget."""
+    B, H, T, d = 2, 4, 256, 128
+    k = synthetic_kv(rng, T=T, key_like=True)
+    v = synthetic_kv(rng, T=T, key_like=False)
+    attn_acc = jnp.asarray(np.abs(rng.normal(size=(B, H, T))).astype(np.float32))
+    keep = h2o_keep_mask(attn_acc, T, heavy_budget=T // 10,
+                         recent_budget=T // 10)              # 20% budget
+    keep4 = keep[..., None]
+    k_h2o = jnp.where(keep4, k, 0.0)
+    v_h2o = jnp.where(keep4, v, 0.0)
+    base = attn_output_error(k, k_h2o, v, v_h2o, rng)
+    emit("table5/h2o20_dense", 0.0, f"rel_err={base:.4f}")
+    for ks, vs in ((0.5, 0.0), (0.0, 0.5), (0.5, 0.5), (0.7, 0.7)):
+        kp = pruning.prune(k_h2o, ks, "per_token_magnitude") if ks else k_h2o
+        vp = pruning.prune(v_h2o, vs, "per_token_magnitude") if vs else v_h2o
+        err = attn_output_error(k, kp, v, vp, rng)
+        emit(f"table5/h2o20_K{ks}_V{vs}", 0.0,
+             f"rel_err={err:.4f} delta_vs_h2o={err-base:+.4f}")
+
+
+def kivi(rng) -> None:
+    """Table 6: prune-then-quantize (Harma et al. ordering), 4- and 2-bit."""
+    k = synthetic_kv(rng, key_like=True)
+    v = synthetic_kv(rng, key_like=False)
+    for bits in (4, 2):
+        kq = kivi_quantize_key(k, bits)
+        vq = kivi_quantize_value(v, bits)
+        base = attn_output_error(k, kq, v, vq, rng)
+        emit(f"table6/kivi{bits}_dense", 0.0, f"rel_err={base:.4f}")
+        for ks, vs in ((0.5, 0.0), (0.0, 0.5), (0.5, 0.5), (0.7, 0.7)):
+            kp = pruning.prune(k, ks, "per_token_magnitude") if ks else k
+            vp = pruning.prune(v, vs, "per_token_magnitude") if vs else v
+            kpq = kivi_quantize_key(kp, bits)
+            vpq = kivi_quantize_value(vp, bits)
+            err = attn_output_error(k, kpq, v, vpq, rng)
+            emit(f"table6/kivi{bits}_K{ks}_V{vs}", 0.0,
+                 f"rel_err={err:.4f} delta_vs_quant={err-base:+.4f}")
+
+
+def main(rng=None) -> None:
+    rng = rng or np.random.default_rng(1)
+    h2o(rng)
+    kivi(rng)
+
+
+if __name__ == "__main__":
+    main()

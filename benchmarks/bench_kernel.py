@@ -1,0 +1,86 @@
+"""Paper Fig. 6a: decode-kernel latency breakdown.
+
+Two views per component (this container has no TPU):
+  * measured — wall-clock of the jit'd jnp formulation on CPU (relative
+    sanity between components);
+  * modeled — HBM-bytes/819GB/s on the v5e target (the quantity the paper's
+    normalized-latency plot reports, since decode is memory-bound).
+Components mirror Fig. 6a: dense batched MV (cuBLAS analogue), batched SpMV
+over the compressed cache, dense MV of the local window, runtime pruning,
+and compression.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from functools import partial
+
+from benchmarks.common import emit, time_fn
+from repro.configs import get_config
+from repro.core.attention import (MustafarCacheView, decode_attention_dense,
+                                  decode_attention_mustafar_chunked,
+                                  hbm_bytes_dense, hbm_bytes_mustafar)
+from repro.core.sparse_format import pack_fixedk, topk_mask
+from repro.kernels import ref as kref
+from repro.roofline import HBM_BW
+
+
+def main(rng=None) -> None:
+    rng = rng or np.random.default_rng(2)
+    for arch, T in (("llama2-7b", 2048), ("llama3-8b", 4096)):
+        cfg = get_config(arch)
+        # one layer's decode operands, batch 1 (paper: per-kernel breakdown)
+        B, Hkv, Hq, d = 1, cfg.n_kv_heads, cfg.n_heads, cfg.d_head
+        W = cfg.mustafar.local_window
+        s = 0.7
+        kk = cfg.mustafar.keep_k(d, s)
+        k_cache = jnp.asarray(rng.normal(size=(B, Hkv, T, d))
+                              ).astype(jnp.bfloat16)
+        v_cache = jnp.asarray(rng.normal(size=(B, Hkv, T, d))
+                              ).astype(jnp.bfloat16)
+        q = jnp.asarray(rng.normal(size=(B, Hq, d))).astype(jnp.bfloat16)
+        L = jnp.full((B,), T)
+
+        # dense decode MV (cuBLAS analogue)
+        f_dense = jax.jit(lambda q, k, v: decode_attention_dense(q, k, v, L))
+        us_dense = time_fn(f_dense, q, k_cache, v_cache)
+        by_dense = 2 * Hkv * T * d * 2
+        t_dense = by_dense / HBM_BW * 1e6
+        emit(f"fig6a/{arch}/dense_mv", us_dense,
+             f"model_us={t_dense:.1f} bytes={by_dense}")
+
+        # pruning (top-k mask) + compression (pack) on one tile group
+        tile = cfg.mustafar.tile_tokens
+        k_tile = k_cache[:, :, :tile, :]
+        f_prune = jax.jit(lambda x: topk_mask(x, kk))
+        us_prune = time_fn(f_prune, k_tile)
+        f_pack = jax.jit(lambda x: pack_fixedk(x, topk_mask(x, kk), kk))
+        us_pack = time_fn(f_pack, k_tile)
+        amort = T / tile  # one tile compression per tile_tokens decode steps
+        emit(f"fig6a/{arch}/prune", us_prune,
+             f"pct_of_dense={us_prune/amort/us_dense*100:.2f}% (amortized)")
+        emit(f"fig6a/{arch}/compress", us_pack,
+             f"pct_of_dense={us_pack/amort/us_dense*100:.2f}% (amortized)")
+
+        # SpMV over compressed + window MV (Mustafar attention)
+        km = topk_mask(k_cache, kk)
+        vm = topk_mask(v_cache, kk)
+        ckv, ckb = pack_fixedk(k_cache, km, kk)
+        cvv, cvb = pack_fixedk(v_cache, vm, kk)
+        k_win = k_cache[:, :, :W + tile, :]
+        v_win = v_cache[:, :, :W + tile, :]
+        view = MustafarCacheView(ckv, ckb, cvv, cvb, jnp.full((B,), T),
+                                 k_win, v_win, jnp.full((B,), W))
+        f_sp = jax.jit(partial(decode_attention_mustafar_chunked,
+                               chunk=min(4096, T)))
+        us_sp = time_fn(f_sp, q, view)
+        by_sp = hbm_bytes_mustafar(T, W, d, kk, kk) * Hkv
+        t_sp = by_sp / HBM_BW * 1e6
+        emit(f"fig6a/{arch}/spmv_plus_window", us_sp,
+             f"model_us={t_sp:.1f} model_pct_of_dense="
+             f"{by_sp/by_dense*100:.1f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Shared benchmark utilities: timing, CSV output, small trained models."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall-clock microseconds per call (jit'd fn, blocked)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def emit(name: str, us: float, derived: str = "") -> None:
+    """CSV row: name,us_per_call,derived."""
+    print(f"{name},{us:.1f},{derived}")
+
+
+def attn_output_error(k_cache, k_pruned, v_cache, v_pruned, rng, n_q=16):
+    """Mean relative decode-attention output error (accuracy proxy)."""
+    from repro.core.attention import decode_attention_dense
+    B, H, T, d = k_cache.shape
+    L = jnp.full((B,), T)
+    errs = []
+    for _ in range(n_q):
+        q = jnp.asarray(rng.normal(size=(B, H, d)).astype(np.float32))
+        ref = decode_attention_dense(q, k_cache, v_cache, L)
+        out = decode_attention_dense(q, k_pruned, v_pruned, L)
+        errs.append(float(jnp.linalg.norm(out - ref) / jnp.linalg.norm(ref)))
+    return float(np.mean(errs))
+
+
+def synthetic_kv(rng, B=2, H=4, T=256, d=128, key_like=True):
+    """Key caches get outlier channels (paper Fig. 2a); Values are uniform."""
+    x = rng.normal(size=(B, H, T, d)).astype(np.float32)
+    if key_like:
+        outliers = rng.choice(d, size=max(4, d // 16), replace=False)
+        x[..., outliers] *= 8.0
+    return jnp.asarray(x)

@@ -1,0 +1,35 @@
+"""Benchmark harness: one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig6a,...]
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from benchmarks import (bench_compression, bench_joint, bench_kernel,
+                        bench_pruning, bench_throughput)
+
+SUITES = {
+    "pruning": bench_pruning.main,        # Tables 1,2,3,11,12
+    "joint": bench_joint.main,            # Tables 5,6
+    "kernel": bench_kernel.main,          # Fig 6a
+    "compression": bench_compression.main,  # Fig 6b
+    "throughput": bench_throughput.main,  # Fig 7
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="all")
+    args = ap.parse_args()
+    names = list(SUITES) if args.only == "all" else args.only.split(",")
+    print("name,us_per_call,derived")
+    for n in names:
+        SUITES[n](np.random.default_rng(0))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Config registry: ``get_config('<arch-id>')`` for every assigned arch."""
+from repro.configs.base import (LM_SHAPES, ModelConfig, MustafarConfig,
+                                ShapeConfig, TrainConfig, get_shape)
+
+from repro.configs import (command_r_35b, deepseek_coder_33b,
+                           internvl2_1b, jamba_15_large_398b, llama2_7b,
+                           llama3_8b, mistral_7b, phi35_moe_42b_a66b,
+                           qwen3_moe_30b_a3b, rwkv6_7b, stablelm_3b,
+                           starcoder2_3b, whisper_medium)
+
+_REGISTRY = {}
+for _mod in (starcoder2_3b, deepseek_coder_33b, stablelm_3b, command_r_35b,
+             internvl2_1b, rwkv6_7b, whisper_medium, qwen3_moe_30b_a3b,
+             phi35_moe_42b_a66b, jamba_15_large_398b,
+             llama3_8b, llama2_7b, mistral_7b):
+    _REGISTRY[_mod.CONFIG.name] = _mod.CONFIG
+
+# assigned pool (dry-run grid) vs paper's own models
+ASSIGNED_ARCHS = (
+    "starcoder2-3b", "deepseek-coder-33b", "stablelm-3b", "command-r-35b",
+    "internvl2-1b", "rwkv6-7b", "whisper-medium", "qwen3-moe-30b-a3b",
+    "phi3.5-moe-42b-a6.6b", "jamba-1.5-large-398b",
+)
+PAPER_ARCHS = ("llama3-8b", "llama2-7b", "mistral-7b")
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def all_configs():
+    return dict(_REGISTRY)
+
+
+__all__ = ["ModelConfig", "MustafarConfig", "ShapeConfig", "TrainConfig",
+           "LM_SHAPES", "get_shape", "get_config", "all_configs",
+           "ASSIGNED_ARCHS", "PAPER_ARCHS"]

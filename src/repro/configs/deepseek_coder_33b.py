@@ -1,0 +1,9 @@
+"""DeepSeek-Coder-33B [arXiv:2401.14196; hf] — llama-arch dense GQA."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-coder-33b", family="dense",
+    n_layers=62, d_model=7168, n_heads=56, n_kv_heads=8, d_head=128,
+    d_ff=19200, vocab_size=32256,
+    norm="rmsnorm", activation="silu", rope_theta=1e5,
+)

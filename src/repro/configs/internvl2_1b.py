@@ -1,0 +1,14 @@
+"""InternVL2-1B [arXiv:2404.16821; hf] — InternLM2 backbone, stub InternViT frontend.
+
+The modality frontend is a STUB per the assignment: input_specs() provides
+precomputed patch embeddings [B, n_vision_tokens, d_model].
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-1b", family="vlm",
+    n_layers=24, d_model=896, n_heads=14, n_kv_heads=2, d_head=64,
+    d_ff=4864, vocab_size=151655,
+    norm="rmsnorm", activation="silu", rope_theta=1e6,
+    n_vision_tokens=256, tie_embeddings=True,
+)

@@ -1,0 +1,17 @@
+"""Jamba-1.5-Large [arXiv:2403.19887; hf] — Mamba+attn 1:7 interleave, MoE 16e top-2.
+
+Attention appears once per 8 layers; MoE replaces the dense FFN every other
+layer. Mustafar applies to the attention layers' KV cache only; Mamba layers
+carry O(1) recurrent state (see DESIGN.md §Arch-applicability).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="jamba-1.5-large-398b", family="hybrid",
+    n_layers=72, d_model=8192, n_heads=64, n_kv_heads=8, d_head=128,
+    d_ff=24576, vocab_size=65536,
+    norm="rmsnorm", activation="silu", rope_theta=0.0, pos_embedding="none",
+    n_experts=16, expert_top_k=2, moe_every=2, moe_d_ff=24576,
+    attn_every=8, attn_offset=4,
+    mamba_d_state=16, mamba_d_conv=4, mamba_expand=2,
+)

@@ -1,0 +1,9 @@
+"""Llama-2-7B — paper evaluation model (Tables 5,7-9), MHA."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama2-7b", family="dense",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=32, d_head=128,
+    d_ff=11008, vocab_size=32000,
+    norm="rmsnorm", activation="silu", rope_theta=1e4,
+)

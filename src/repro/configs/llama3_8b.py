@@ -1,0 +1,9 @@
+"""Llama-3-8B-Instruct — the paper's primary evaluation model (Tables 1-4,6)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3-8b", family="dense",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8, d_head=128,
+    d_ff=14336, vocab_size=128256,
+    norm="rmsnorm", activation="silu", rope_theta=5e5,
+)

@@ -1,0 +1,9 @@
+"""Mistral-7B-Instruct-v0.2 — paper evaluation model (Tables 3,4)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mistral-7b", family="dense",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8, d_head=128,
+    d_ff=14336, vocab_size=32000,
+    norm="rmsnorm", activation="silu", rope_theta=1e6,
+)

@@ -1,0 +1,10 @@
+"""Phi-3.5-MoE [hf:microsoft/Phi-3.5-MoE-instruct; hf] — 16 experts top-2."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi3.5-moe-42b-a6.6b", family="moe",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8, d_head=128,
+    d_ff=6400, vocab_size=32064,
+    norm="layernorm", activation="silu", use_bias=False, rope_theta=1e4,
+    n_experts=16, expert_top_k=2, moe_every=1, moe_d_ff=6400,
+)

@@ -1,0 +1,10 @@
+"""Qwen3-30B-A3B [hf:Qwen/Qwen3-30B-A3B; hf] — MoE 128 experts top-8."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-30b-a3b", family="moe",
+    n_layers=48, d_model=2048, n_heads=32, n_kv_heads=4, d_head=128,
+    d_ff=768, vocab_size=151936,
+    norm="rmsnorm", activation="silu", rope_theta=1e6,
+    n_experts=128, expert_top_k=8, moe_every=1, moe_d_ff=768,
+)

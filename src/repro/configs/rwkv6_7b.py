@@ -1,0 +1,14 @@
+"""RWKV6-7B "Finch" [arXiv:2404.05892; hf] — attention-free, data-dependent decay.
+
+No KV cache exists; Mustafar is inapplicable (see DESIGN.md §Arch-applicability).
+"""
+from repro.configs.base import MustafarConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-7b", family="ssm",
+    n_layers=32, d_model=4096, n_heads=64, n_kv_heads=64, d_head=64,
+    d_ff=14336, vocab_size=65536,
+    norm="layernorm", activation="relu_sq", pos_embedding="none",
+    rwkv_head_size=64,
+    mustafar=MustafarConfig(enabled=False),
+)

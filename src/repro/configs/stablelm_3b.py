@@ -1,0 +1,9 @@
+"""StableLM-3B [hf:stabilityai/stablelm-2-1_6b; unverified] — MHA (kv=heads)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="stablelm-3b", family="dense",
+    n_layers=32, d_model=2560, n_heads=32, n_kv_heads=32, d_head=80,
+    d_ff=6912, vocab_size=50304,
+    norm="layernorm", activation="silu", use_bias=False, rope_theta=1e4,
+)

@@ -1,0 +1,10 @@
+"""StarCoder2-3B [arXiv:2402.19173; hf] — dense GQA transformer."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-3b", family="dense",
+    n_layers=30, d_model=3072, n_heads=24, n_kv_heads=2, d_head=128,
+    d_ff=12288, vocab_size=49152,
+    norm="layernorm", activation="gelu", use_bias=True,
+    rope_theta=1e5, tie_embeddings=True,
+)

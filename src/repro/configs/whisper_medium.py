@@ -1,0 +1,15 @@
+"""Whisper-medium [arXiv:2212.04356; unverified] — enc-dec, conv frontend STUB.
+
+input_specs() provides precomputed frame embeddings [B, 1500, d_model]
+(the conv1d x2 + GELU frontend output), per the assignment's stub rule.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-medium", family="audio",
+    n_layers=24, d_model=1024, n_heads=16, n_kv_heads=16, d_head=64,
+    d_ff=4096, vocab_size=51865,
+    norm="layernorm", activation="gelu", use_bias=True,
+    pos_embedding="learned", n_encoder_layers=24, encoder_ctx=1500, max_position=32768,
+    tie_embeddings=True,
+)

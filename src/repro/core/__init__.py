@@ -1,0 +1,14 @@
+"""Mustafar core: pruning strategies, bitmap sparse format, decode attention."""
+from repro.core.attention import (MustafarCacheView, decode_attention_dense,
+                                  decode_attention_mustafar)
+from repro.core.pruning import STRATEGIES, prune, prune_mask
+from repro.core.sparse_format import (compressed_bytes, compression_rate,
+                                      pack_fixedk, prune_and_pack, topk_mask,
+                                      unpack_bits, unpack_fixedk)
+
+__all__ = [
+    "MustafarCacheView", "decode_attention_dense", "decode_attention_mustafar",
+    "STRATEGIES", "prune", "prune_mask",
+    "compressed_bytes", "compression_rate", "pack_fixedk", "prune_and_pack",
+    "topk_mask", "unpack_bits", "unpack_fixedk",
+]

@@ -1,0 +1,191 @@
+"""Mustafar decode attention — reference formulation (paper §3, Fig. 5a).
+
+Decode attention is reformulated into two parts:
+  1. SpMV over the compressed cache:  q·K̂ᵀ and α·V̂ on (values, bitmap)
+  2. dense MV over the local window (recent ≤ local_window + un-compacted
+     tokens, kept dense)
+followed by a single joint softmax. This module is the pure-jnp oracle and
+the CPU execution path; ``repro.kernels.ops`` provides the Pallas TPU path
+with identical semantics (asserted in tests).
+
+Shapes (GQA): q [B, Hq, d]; compressed K/V values [B, Hkv, Tc, k] with
+bitmap [B, Hkv, Tc, d//32]; window K/V [B, Hkv, W, d].
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparse_format import unpack_fixedk
+
+NEG_INF = -1e30
+
+
+class MustafarCacheView(NamedTuple):
+    """One layer's decode-attention operands."""
+    ck_values: jax.Array      # [B, Hkv, Tc, k_k]
+    ck_bitmap: jax.Array      # [B, Hkv, Tc, d//32] uint32
+    cv_values: jax.Array      # [B, Hkv, Tc, k_v]
+    cv_bitmap: jax.Array      # [B, Hkv, Tc, d//32] uint32
+    n_compressed: jax.Array   # [B] int32 — valid compressed tokens
+    k_window: jax.Array       # [B, Hkv, W, d]
+    v_window: jax.Array       # [B, Hkv, W, d]
+    n_window: jax.Array       # [B] int32 — valid window tokens
+
+
+def _expand_gqa(x: jax.Array, n_q_heads: int) -> jax.Array:
+    """[B, Hkv, ...] -> [B, Hq, ...] by repeating each KV head."""
+    B, Hkv = x.shape[:2]
+    rep = n_q_heads // Hkv
+    return jnp.repeat(x, rep, axis=1) if rep > 1 else x
+
+
+def decode_attention_dense(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                           length: jax.Array, scale: Optional[float] = None) -> jax.Array:
+    """Baseline dense decode attention (the cuBLAS-MV analogue).
+
+    q [B,Hq,d]; k/v_cache [B,Hkv,T,d]; length [B] valid tokens.
+    """
+    B, Hq, d = q.shape
+    T = k_cache.shape[2]
+    scale = scale if scale is not None else d ** -0.5
+    k = _expand_gqa(k_cache, Hq)
+    v = _expand_gqa(v_cache, Hq)
+    s = jnp.einsum("bhd,bhtd->bht", q.astype(k.dtype), k,
+                   preferred_element_type=jnp.float32) * scale
+    valid = jnp.arange(T)[None, None, :] < length[:, None, None]
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bht,bhtd->bhd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+def decode_attention_mustafar(q: jax.Array, cache: MustafarCacheView,
+                              scale: Optional[float] = None) -> jax.Array:
+    """Two-part decode attention over (compressed ⊕ window) with joint softmax."""
+    B, Hq, d = q.shape
+    Tc = cache.ck_values.shape[2]
+    W = cache.k_window.shape[2]
+    scale = scale if scale is not None else d ** -0.5
+
+    # --- part 1: scores over the compressed cache (SpMV q·K̂ᵀ) ---
+    k_dense = unpack_fixedk(cache.ck_values, cache.ck_bitmap, d)     # [B,Hkv,Tc,d]
+    s_c = jnp.einsum("bhd,bhtd->bht", q.astype(k_dense.dtype),
+                     _expand_gqa(k_dense, Hq),
+                     preferred_element_type=jnp.float32) * scale
+    valid_c = jnp.arange(Tc)[None, None, :] < cache.n_compressed[:, None, None]
+    s_c = jnp.where(valid_c, s_c, NEG_INF)
+
+    # --- part 2: scores over the dense local window ---
+    s_w = jnp.einsum("bhd,bhtd->bht", q.astype(cache.k_window.dtype),
+                     _expand_gqa(cache.k_window, Hq),
+                     preferred_element_type=jnp.float32) * scale
+    valid_w = jnp.arange(W)[None, None, :] < cache.n_window[:, None, None]
+    s_w = jnp.where(valid_w, s_w, NEG_INF)
+
+    # --- joint softmax ---
+    s = jnp.concatenate([s_c, s_w], axis=-1)
+    p = jax.nn.softmax(s, axis=-1)
+    p_c, p_w = p[..., :Tc], p[..., Tc:]
+
+    # --- α·V: SpMV over compressed V + dense MV over window V ---
+    v_dense = unpack_fixedk(cache.cv_values, cache.cv_bitmap, d)
+    pd = v_dense.dtype
+    out = jnp.einsum("bht,bhtd->bhd", p_c.astype(pd),
+                     _expand_gqa(v_dense, Hq),
+                     preferred_element_type=jnp.float32)
+    out += jnp.einsum("bht,bhtd->bhd", p_w.astype(pd),
+                      _expand_gqa(cache.v_window, Hq),
+                      preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+DECODE_CHUNK = 4096  # pool tokens per online-softmax chunk (mirrors the
+                     # fused Pallas kernel's grid; plan_pools rounds Tc to it)
+
+
+def decode_attention_mustafar_chunked(q: jax.Array, cache: MustafarCacheView,
+                                      scale: Optional[float] = None,
+                                      chunk: int = DECODE_CHUNK) -> jax.Array:
+    """Single-pass decode attention over the compressed pools with an online
+    softmax over Tc chunks (flash-decoding style). Identical math to
+    ``decode_attention_mustafar`` (asserted in tests) but with temp memory
+    bounded by one chunk — this is the jnp mirror of the fused Pallas kernel
+    and the production decode path.
+    """
+    B, Hq, d = q.shape
+    Tc = cache.ck_values.shape[2]
+    W = cache.k_window.shape[2]
+    scale = scale if scale is not None else d ** -0.5
+    chunk = min(chunk, Tc)
+    assert Tc % chunk == 0, (Tc, chunk)
+    n_chunks = Tc // chunk
+    Hkv = cache.ck_values.shape[1]
+    cdt = cache.ck_values.dtype
+
+    def reshape_c(x):  # [B,Hkv,Tc,·] -> chunk-major [n,B,Hkv,chunk,·]
+        return jnp.moveaxis(
+            x.reshape(B, Hkv, n_chunks, chunk, x.shape[-1]), 2, 0)
+
+    xs = (reshape_c(cache.ck_values), reshape_c(cache.ck_bitmap),
+          reshape_c(cache.cv_values), reshape_c(cache.cv_bitmap),
+          jnp.arange(n_chunks))
+
+    def body(carry, inp):
+        m_prev, l_prev, acc = carry
+        ckv, ckb, cvv, cvb, ci = inp
+        k_dense = unpack_fixedk(ckv, ckb, d)               # [B,Hkv,chunk,d]
+        s = jnp.einsum("bhd,bhtd->bht", q.astype(cdt),
+                       _expand_gqa(k_dense, Hq),
+                       preferred_element_type=jnp.float32) * scale
+        tok = ci * chunk + jnp.arange(chunk)[None, None, :]
+        s = jnp.where(tok < cache.n_compressed[:, None, None], s, NEG_INF)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        v_dense = unpack_fixedk(cvv, cvb, d)
+        pv = jnp.einsum("bht,bhtd->bhd", p.astype(cdt),
+                        _expand_gqa(v_dense, Hq),
+                        preferred_element_type=jnp.float32)
+        acc = acc * alpha[..., 0][..., None] + pv
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        return (m_new, l_new, acc), None
+
+    init = (jnp.full((B, Hq, 1), NEG_INF, jnp.float32),
+            jnp.zeros((B, Hq, 1), jnp.float32),
+            jnp.zeros((B, Hq, d), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(body, init, xs)
+
+    # window part joins the same online softmax as the final chunk
+    s_w = jnp.einsum("bhd,bhtd->bht", q.astype(cache.k_window.dtype),
+                     _expand_gqa(cache.k_window, Hq),
+                     preferred_element_type=jnp.float32) * scale
+    valid_w = jnp.arange(W)[None, None, :] < cache.n_window[:, None, None]
+    s_w = jnp.where(valid_w, s_w, NEG_INF)
+    m_w = jnp.max(s_w, axis=-1, keepdims=True)
+    m_fin = jnp.maximum(m, m_w)
+    alpha = jnp.exp(m - m_fin)
+    p_w = jnp.exp(s_w - m_fin)
+    pv_w = jnp.einsum("bht,bhtd->bhd", p_w.astype(cache.v_window.dtype),
+                      _expand_gqa(cache.v_window, Hq),
+                      preferred_element_type=jnp.float32)
+    acc = acc * alpha[..., 0][..., None] + pv_w
+    l_fin = l * alpha + jnp.sum(p_w, axis=-1, keepdims=True)
+    out = acc / jnp.maximum(l_fin, 1e-30)
+    return out.astype(q.dtype)
+
+
+def hbm_bytes_dense(T: int, d: int, itemsize: int = 2) -> int:
+    """Decode-step HBM traffic model: read K + V rows."""
+    return 2 * T * d * itemsize
+
+
+def hbm_bytes_mustafar(Tc: int, W: int, d: int, k_k: int, k_v: int,
+                       itemsize: int = 2) -> int:
+    """Compressed K + V reads plus the dense window (paper Fig. 6a model)."""
+    comp = Tc * ((k_k + k_v) * itemsize + 2 * (d // 8))
+    return comp + 2 * W * d * itemsize

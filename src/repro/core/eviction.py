@@ -1,0 +1,36 @@
+"""H2O-style token eviction (paper §4.2.1 joint-application baseline).
+
+H2O keeps a fixed budget of (a) heavy-hitter tokens — highest accumulated
+attention score — and (b) recent tokens. Joint with Mustafar, the retained
+tokens' K/V rows are additionally pruned per-token (paper Table 5: 10% budget
+each for heavy hitters and recent tokens).
+
+Pure-functional: returns a boolean keep-mask over token positions, suitable
+for static-shape serving (evicted rows are zeroed / skipped by masking).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def h2o_keep_mask(attn_acc: jax.Array, T: int,
+                  heavy_budget: int, recent_budget: int) -> jax.Array:
+    """attn_acc: [..., T] accumulated attention mass per cached token.
+
+    Returns bool [..., T]: True for tokens kept (heavy hitters ∪ recent).
+    """
+    positions = jnp.arange(T)
+    recent = positions >= (T - recent_budget)                      # [T]
+    # heavy hitters chosen among non-recent tokens
+    masked_scores = jnp.where(recent, -jnp.inf, attn_acc)
+    thresh_idx = jnp.argsort(-masked_scores, axis=-1)[..., :heavy_budget]
+    heavy = jnp.zeros(attn_acc.shape, bool)
+    heavy = jnp.put_along_axis(heavy, thresh_idx, True, axis=-1,
+                               inplace=False)
+    return heavy | recent
+
+
+def accumulate_attention(probs: jax.Array) -> jax.Array:
+    """probs: [..., Q, T] attention probabilities -> [..., T] accumulated mass."""
+    return jnp.sum(probs, axis=-2)

@@ -1,0 +1,159 @@
+"""KV-cache pruning strategies (paper §2, Tables 1/2/7/8/12).
+
+All strategies operate on cache tensors shaped ``[..., T, d]`` where the last
+two dims are (tokens, head channels); leading dims are batch/heads.
+
+The paper's verdict — ``per_token_magnitude`` for both K and V — is the
+production path; every alternative it was compared against is implemented as
+a baseline so the accuracy-ordering experiments reproduce:
+
+    per_token_magnitude      exact top-k |.| per token row          (Mustafar)
+    per_token_output_aware   |K| ⊙ broadcast(Σ_t |Q_t|)             (Fig. 3)
+    per_channel_magnitude    top-k |.| per channel, 32-token groups (Table 2)
+    per_channel_output_aware |V| ⊙ broadcast(Σ_t |α_t|)             (§2.2)
+    think                    ThinK structured channel removal       (baseline)
+    semi_structured_2_4      2:4 pattern on channel dim             (Appx. B)
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparse_format import topk_mask
+
+STRATEGIES = ("per_token_magnitude", "per_token_output_aware",
+              "per_channel_magnitude", "per_channel_output_aware",
+              "think", "semi_structured_2_4")
+
+
+# ----------------------------------------------------------------------
+# scores
+
+def gqa_query_accumulate(q_window: jax.Array, n_kv_heads: int) -> jax.Array:
+    """Σ_t |Q_t| over the score window, summed over query heads per KV head.
+
+    q_window: [B, H_q, W, d] -> [B, H_kv, d]   (paper §2.1: "for GQA we sum
+    the pruning score of all queries mapped to each KV cache")
+    """
+    B, Hq, W, d = q_window.shape
+    acc = jnp.sum(jnp.abs(q_window.astype(jnp.float32)), axis=2)   # [B, Hq, d]
+    acc = acc.reshape(B, n_kv_heads, Hq // n_kv_heads, d)
+    return jnp.sum(acc, axis=2)                                    # [B, Hkv, d]
+
+
+def key_output_aware_scores(k_cache: jax.Array, q_acc: jax.Array) -> jax.Array:
+    """S = |K| ⊙ broadcast(Σ|Q|)  — paper Fig. 3 / eq. in §2.1.
+
+    k_cache: [B, H_kv, T, d]; q_acc: [B, H_kv, d] -> scores [B, H_kv, T, d]
+    """
+    return jnp.abs(k_cache.astype(jnp.float32)) * q_acc[..., None, :]
+
+
+def value_output_aware_scores(v_cache: jax.Array, attn_acc: jax.Array) -> jax.Array:
+    """S = |V| ⊙ broadcast(Σ|α|)  — paper §2.2 (per-channel value pruning).
+
+    v_cache: [B, H, T, d]; attn_acc: [B, H, T] (Σ of the window's attention
+    scores per cached token) -> scores [B, H, T, d]
+    """
+    return jnp.abs(v_cache.astype(jnp.float32)) * attn_acc[..., :, None]
+
+
+def think_channel_scores(k_cache: jax.Array, q_acc: jax.Array) -> jax.Array:
+    """ThinK-style per-channel structured score: channel importance =
+    (Σ_t |Q_t[c]|) · ‖K[:, c]‖₁ — one scalar per channel, whole channels
+    pruned (the structured baseline Mustafar beats).
+    Returns [B, H, d].
+    """
+    return q_acc * jnp.sum(jnp.abs(k_cache.astype(jnp.float32)), axis=-2)
+
+
+# ----------------------------------------------------------------------
+# masks
+
+def per_token_topk_mask(x: jax.Array, k: int) -> jax.Array:
+    """Keep the k largest-magnitude elements of each token row. [..., T, d]"""
+    return topk_mask(x, k)
+
+
+def per_token_score_mask(scores: jax.Array, k: int) -> jax.Array:
+    """Top-k per token row under an arbitrary score tensor."""
+    return topk_mask(jnp.where(scores >= 0, scores, -scores), k)  # scores >= 0 anyway
+
+
+def per_channel_group_mask(scores: jax.Array, sparsity: float,
+                           group: int = 32) -> jax.Array:
+    """Per-channel pruning in token groups (paper: groups of 32 for local-
+    window compatibility). scores [..., T, d]; within each (group, channel)
+    column keep the top (1-s) fraction of tokens.
+    """
+    *lead, T, d = scores.shape
+    assert T % group == 0, f"T={T} not divisible by group={group}"
+    keep = max(1, int(round(group * (1.0 - sparsity))))
+    g = scores.reshape(*lead, T // group, group, d)
+    gt = jnp.swapaxes(g, -1, -2)                     # [..., G, d, group]
+    mask = topk_mask(gt, keep)
+    return jnp.swapaxes(mask, -1, -2).reshape(*lead, T, d)
+
+
+def think_mask(k_cache: jax.Array, q_acc: jax.Array, sparsity: float) -> jax.Array:
+    """Structured: remove whole channels (lowest ThinK score). [B,H,T,d]"""
+    d = k_cache.shape[-1]
+    keep = max(1, int(round(d * (1.0 - sparsity))))
+    ch_scores = think_channel_scores(k_cache, q_acc)        # [B, H, d]
+    ch_mask = topk_mask(ch_scores, keep)                    # [B, H, d]
+    return jnp.broadcast_to(ch_mask[..., None, :], k_cache.shape)
+
+
+def semi_structured_2_4_mask(x: jax.Array) -> jax.Array:
+    """2:4 semi-structured — keep 2 of each 4 consecutive channels (Appx. B)."""
+    *lead, T, d = x.shape
+    assert d % 4 == 0
+    g = jnp.abs(x.astype(jnp.float32)).reshape(*lead, T, d // 4, 4)
+    mask = topk_mask(g, 2)
+    return mask.reshape(*lead, T, d)
+
+
+# ----------------------------------------------------------------------
+# dispatcher
+
+def prune_mask(cache: jax.Array, sparsity: float, strategy: str, *,
+               keep_k: Optional[int] = None,
+               q_acc: Optional[jax.Array] = None,
+               attn_acc: Optional[jax.Array] = None,
+               group: int = 32) -> jax.Array:
+    """Boolean keep-mask for ``cache`` [..., T, d] under a named strategy.
+
+    ``keep_k`` overrides the per-token k (lane-aligned fixed-k format);
+    defaults to round(d*(1-s)).
+    """
+    d = cache.shape[-1]
+    k = keep_k if keep_k is not None else max(1, int(round(d * (1.0 - sparsity))))
+    if strategy == "per_token_magnitude":
+        return per_token_topk_mask(cache, k)
+    if strategy == "per_token_output_aware":
+        if q_acc is None:
+            raise ValueError("per_token_output_aware needs q_acc (Σ|Q| window)")
+        return per_token_score_mask(key_output_aware_scores(cache, q_acc), k)
+    if strategy == "per_channel_magnitude":
+        return per_channel_group_mask(jnp.abs(cache.astype(jnp.float32)),
+                                      sparsity, group)
+    if strategy == "per_channel_output_aware":
+        if attn_acc is None:
+            raise ValueError("per_channel_output_aware needs attn_acc (Σ|α| window)")
+        return per_channel_group_mask(value_output_aware_scores(cache, attn_acc),
+                                      sparsity, group)
+    if strategy == "think":
+        if q_acc is None:
+            raise ValueError("think needs q_acc")
+        return think_mask(cache, q_acc, sparsity)
+    if strategy == "semi_structured_2_4":
+        return semi_structured_2_4_mask(cache)
+    raise ValueError(f"unknown strategy {strategy!r}; have {STRATEGIES}")
+
+
+def prune(cache: jax.Array, sparsity: float, strategy: str, **kw) -> jax.Array:
+    """Return the pruned (masked, still dense) cache."""
+    mask = prune_mask(cache, sparsity, strategy, **kw)
+    return jnp.where(mask, cache, jnp.zeros_like(cache))

@@ -1,0 +1,58 @@
+"""KIVI-style KV-cache quantization (paper §4.2.2 joint-application baseline).
+
+KIVI: per-CHANNEL asymmetric quantization of the Key cache, per-TOKEN of the
+Value cache. We implement fake-quant (quantize→dequantize) since the accuracy
+experiments in the paper were likewise run on a sparse-quantized cache ("the
+current Mustafar kernel does not support low-bit precision").
+
+Following Harma et al. (paper §4.2.2): prune FIRST, then quantize. With the
+fixed-k format only the packed non-zeros are quantized; scales/zeros are kept
+per group of 32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _asym_quant(x: jax.Array, bits: int, axis: int, group: int = 32):
+    """Asymmetric group quantization along ``axis``. Returns dequantized x."""
+    x = x.astype(jnp.float32)
+    orig_shape = x.shape
+    axis = axis % x.ndim
+    n = x.shape[axis]
+    pad = (-n) % group
+    if pad:
+        pad_width = [(0, 0)] * x.ndim
+        pad_width[axis] = (0, pad)
+        x = jnp.pad(x, pad_width)
+    # split axis into (groups, group)
+    new_shape = x.shape[:axis] + (x.shape[axis] // group, group) + x.shape[axis + 1:]
+    xg = x.reshape(new_shape)
+    ax = axis + 1
+    lo = jnp.min(xg, axis=ax, keepdims=True)
+    hi = jnp.max(xg, axis=ax, keepdims=True)
+    levels = (1 << bits) - 1
+    scale = jnp.maximum(hi - lo, 1e-8) / levels
+    q = jnp.clip(jnp.round((xg - lo) / scale), 0, levels)
+    deq = (q * scale + lo).reshape(x.shape)
+    if pad:
+        sl = [slice(None)] * deq.ndim
+        sl[axis] = slice(0, n)
+        deq = deq[tuple(sl)]
+    return deq.reshape(orig_shape)
+
+
+def kivi_quantize_key(k_cache: jax.Array, bits: int = 4, group: int = 32) -> jax.Array:
+    """Per-channel quantization: group along the TOKEN axis (axis=-2)."""
+    return _asym_quant(k_cache, bits, axis=-2, group=group).astype(k_cache.dtype)
+
+
+def kivi_quantize_value(v_cache: jax.Array, bits: int = 4, group: int = 32) -> jax.Array:
+    """Per-token quantization: group along the CHANNEL axis (axis=-1)."""
+    return _asym_quant(v_cache, bits, axis=-1, group=group).astype(v_cache.dtype)
+
+
+def quant_bytes_per_token(d: int, bits: int, group: int = 32) -> float:
+    """Storage model: packed ints + fp16 scale/zero per group."""
+    return d * bits / 8 + (d / group) * 4

@@ -1,0 +1,121 @@
+"""Fixed-k bitmap sparse format (paper §3, Figure 5b — TPU adaptation).
+
+The paper packs non-zeros of each 1x64 tile with a 64-bit bitmap plus a
+tile-offset array (nnz varies per tile on GPU). Our per-token exact top-k
+pruning makes nnz *constant* (= k) per token row, so the layout is regular:
+
+    values : [..., T, k]        bf16/fp32   packed non-zeros, row-major order
+    bitmap : [..., T, d // 32]  uint32      bit c%32 of word c//32 = keep(c)
+
+No offsets, no padding. Compressed bytes per token row (bf16):
+``2*k + d/8`` vs dense ``2*d``.
+
+This module is the pure-jnp oracle; the Pallas kernels in
+``repro/kernels/`` implement the same format with VMEM tiling.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+BITS_PER_WORD = 32
+
+
+def topk_mask(x: jax.Array, k: int) -> jax.Array:
+    """Boolean mask of the k largest-|.| elements per last-dim row.
+
+    Deterministic tie-break: lower channel index wins (matches the Pallas
+    kernel's rank comparison).
+    """
+    d = x.shape[-1]
+    if k >= d:
+        return jnp.ones_like(x, dtype=bool)
+    mag = jnp.abs(x).astype(jnp.float32)
+    # strictly ordered key: magnitude desc, then channel index asc
+    idx = jnp.argsort(-mag, axis=-1, stable=True)
+    ranks = jnp.argsort(idx, axis=-1)          # rank of each channel in sort order
+    return ranks < k
+
+
+def pad_to_words(d: int) -> int:
+    """Channels padded up to a whole number of 32-bit bitmap words."""
+    return (d + BITS_PER_WORD - 1) // BITS_PER_WORD * BITS_PER_WORD
+
+
+def pack_fixedk(x: jax.Array, mask: jax.Array, k: int):
+    """Compress ``x`` under ``mask`` (exactly k True per row) into (values, bitmap)."""
+    d = x.shape[-1]
+    d_pad = pad_to_words(d)
+    if d_pad != d:  # e.g. d_head=80 (stablelm): pad channels, bits stay 0
+        pad = [(0, 0)] * (x.ndim - 1) + [(0, d_pad - d)]
+        x = jnp.pad(x, pad)
+        mask = jnp.pad(mask, pad)
+        d = d_pad
+    x = jnp.where(mask, x, jnp.zeros_like(x))
+    # positions of kept elements in ascending channel order
+    order = jnp.argsort(jnp.where(mask, jnp.arange(d), d), axis=-1, stable=True)
+    nz_pos = order[..., :k]
+    values = jnp.take_along_axis(x, nz_pos, axis=-1)
+    bits = mask.astype(jnp.uint32).reshape(*mask.shape[:-1], d // BITS_PER_WORD, BITS_PER_WORD)
+    weights = (jnp.uint32(1) << jnp.arange(BITS_PER_WORD, dtype=jnp.uint32))
+    bitmap = jnp.sum(bits * weights, axis=-1, dtype=jnp.uint32)
+    return values, bitmap
+
+
+def unpack_bits(bitmap: jax.Array, d: int) -> jax.Array:
+    """uint32 bitmap [..., d//32] -> float {0,1} mask [..., d]."""
+    words = bitmap[..., :, None]                       # [..., d//32, 1]
+    shifts = jnp.arange(BITS_PER_WORD, dtype=jnp.uint32)
+    bits = (words >> shifts) & jnp.uint32(1)           # [..., d//32, 32]
+    return bits.reshape(*bitmap.shape[:-1], d).astype(jnp.float32)
+
+
+def unpack_fixedk(values: jax.Array, bitmap: jax.Array, d: int) -> jax.Array:
+    """Decompress (values, bitmap) back to a dense [..., d] array.
+
+    dense[t, c] = bits[t, c] ? values[t, rank[t, c]] : 0
+    where rank = exclusive prefix-sum of bits along c — the same rank-match
+    the Pallas kernel computes on the VPU.
+    """
+    d_pad = pad_to_words(d)
+    words = bitmap[..., :, None]
+    shifts = jnp.arange(BITS_PER_WORD, dtype=jnp.uint32)
+    bits = ((words >> shifts) & jnp.uint32(1)).astype(jnp.int8)
+    bits = bits.reshape(*bitmap.shape[:-1], d_pad)
+    rank = jnp.cumsum(bits.astype(jnp.int32), axis=-1) - 1
+    gathered = jnp.take_along_axis(
+        values, jnp.clip(rank, 0, values.shape[-1] - 1), axis=-1)
+    dense = jnp.where(bits > 0, gathered, jnp.zeros((), values.dtype))
+    return dense[..., :d]
+
+
+def prune_and_pack(x: jax.Array, k: int):
+    """One-shot: per-token top-k magnitude prune + compress."""
+    mask = topk_mask(x, k)
+    return pack_fixedk(x, mask, k)
+
+
+# ----------------------------------------------------------------------
+# accounting (paper Fig. 6b — compression rate)
+
+def dense_bytes(T: int, d: int, itemsize: int = 2) -> int:
+    return T * d * itemsize
+
+
+def compressed_bytes(T: int, d: int, k: int, itemsize: int = 2) -> int:
+    return T * (k * itemsize + d // 8)
+
+
+def compression_rate(d: int, k: int, itemsize: int = 2) -> float:
+    """Compressed size as a fraction of dense (paper reports ~0.45 at s=0.7)."""
+    return compressed_bytes(1, d, k, itemsize) / dense_bytes(1, d, itemsize)
+
+
+def paper_compression_rate(d: int, sparsity: float, itemsize: int = 2) -> float:
+    """Paper's GPU format: nnz + bitmap + tile offsets + multiples-of-8 padding."""
+    tiles = d // 64
+    nnz = d * (1 - sparsity)
+    nnz_padded = np.ceil(nnz / 8) * 8      # coalescing padding
+    per_row = nnz_padded * itemsize + tiles * 8 + tiles * 4  # values+bitmap+offset
+    return float(per_row / (d * itemsize))

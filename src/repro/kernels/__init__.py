@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for Mustafar hot spots + pure-jnp oracles.
+
+compress (prune+pack), sparse_qk / sparse_av (bitmap SpMV, paper Fig. 5a),
+decode_attention_fused (beyond-paper online-softmax fusion), flash_prefill.
+"""
+from repro.kernels.ops import (compress, decode_attention_fused, sparse_av,
+                               sparse_qk)

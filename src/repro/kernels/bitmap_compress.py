@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: per-token top-k prune + fixed-k bitmap compression.
+
+Paper §3 performs pruning + compression on-the-fly with a Triton kernel as
+64-token tile groups retire from the local dense window. TPU adaptation:
+
+* grid over (rows, token-tiles); each step owns a ``[TILE_T, d]`` VMEM tile.
+* exact top-k per token via an all-pairs rank count on the VPU
+  (``rank[t,c] = #{c' : |x[t,c']| > |x[t,c]|}`` with index tie-break) —
+  no sort primitive needed, O(d²) compares vectorise across lanes.
+* value compaction via the rank-match contraction
+  ``vals[t,j] = Σ_c [pos[t,c]==j]·x[t,c]`` (MXU-shaped one-hot matmul).
+* bit-packing with broadcasted shifts into uint32 words.
+
+VMEM working set per step (TILE_T=8, d=128, k≤128):
+dense 8·128·4 + rank scratch 8·128·128·4 ≈ 0.5 MB — fits comfortably;
+the [TILE_T, d, d] compare cube bounds TILE_T.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from repro.core.sparse_format import pad_to_words
+
+TILE_T = 8  # token rows per grid step (bounds the [T,d,d] compare cube)
+
+
+def _compress_kernel(x_ref, vals_ref, bm_ref, *, k: int, d: int):
+    x = x_ref[0].astype(jnp.float32)                      # [T, d_pad]
+    T, d_pad = x.shape
+    mag = jnp.abs(x)
+    # channels beyond d (word padding, e.g. d_head=80) never win top-k
+    ch = lax.broadcasted_iota(jnp.int32, (T, d_pad), 1)
+    mag = jnp.where(ch < d, mag, -1.0)
+
+    # --- exact top-k via all-pairs rank (VPU) ---
+    m_c = mag[:, :, None]                                 # [T, d, 1] candidate
+    m_o = mag[:, None, :]                                 # [T, 1, d] other
+    i_c = lax.broadcasted_iota(jnp.int32, (T, d_pad, d_pad), 1)
+    i_o = lax.broadcasted_iota(jnp.int32, (T, d_pad, d_pad), 2)
+    beats = (m_o > m_c) | ((m_o == m_c) & (i_o < i_c))
+    rank = jnp.sum(beats.astype(jnp.int32), axis=2)       # [T, d_pad]
+    keep = (rank < k) & (ch < d)                          # exactly k per row
+    keep_f = keep.astype(jnp.float32)
+
+    # --- value compaction: vals[t,j] = Σ_c [pos==j]·x ---
+    pos = jnp.cumsum(keep_f, axis=1) - 1.0                # [T, d_pad]
+    j = lax.broadcasted_iota(jnp.float32, (T, d_pad, k), 2)
+    onehot = ((pos[:, :, None] == j) & keep[:, :, None]).astype(jnp.float32)
+    vals = jnp.einsum("tcj,tc->tj", onehot, x,
+                      preferred_element_type=jnp.float32)  # [T, k]
+    vals_ref[0] = vals.astype(vals_ref.dtype)
+
+    # --- bit-packing into uint32 words ---
+    n_words = d_pad // 32
+    bits = keep.astype(jnp.uint32).reshape(T, n_words, 32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)[None, None, :]
+    bm_ref[0] = jnp.sum(bits << shifts, axis=2, dtype=jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def mustafar_compress(x: jax.Array, k: int, *, interpret: bool = False):
+    """x [R, T, d] -> (values [R, T, k], bitmap [R, T, ceil32(d)/32] uint32).
+
+    R = flattened batch·heads·…; T must be a multiple of TILE_T.
+    """
+    R, T, d = x.shape
+    d_pad = pad_to_words(d)
+    if d_pad != d:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, d_pad - d)))
+    assert T % TILE_T == 0, f"T={T} not a multiple of TILE_T={TILE_T}"
+    n_words = d_pad // 32
+    grid = (R, T // TILE_T)
+    kernel = functools.partial(_compress_kernel, k=k, d=d)
+    vals, bm = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, TILE_T, d_pad), lambda r, t: (r, t, 0))],
+        out_specs=[
+            pl.BlockSpec((1, TILE_T, k), lambda r, t: (r, t, 0)),
+            pl.BlockSpec((1, TILE_T, n_words), lambda r, t: (r, t, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((R, T, k), x.dtype),
+            jax.ShapeDtypeStruct((R, T, n_words), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(x)
+    return vals, bm

@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: causal flash attention for the prefill phase.
+
+The paper keeps prefill dense and FlashAttention-compatible (§3). This is the
+TPU flash kernel used by the serving engine's prefill step (inference-only;
+the differentiable training path uses the XLA formulation with remat).
+
+GQA is handled in the BlockSpec index map (kv block row = q_head // G) — no
+materialised head expansion. Causal blocks above the diagonal are skipped.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+BLOCK_Q = 256
+BLOCK_K = 256
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                  *, scale, block_q, block_k):
+    qi, ki = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # causal: process only blocks with k_start <= q_end
+    @pl.when(ki * block_k <= qi * block_q + block_q - 1)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)               # [bq, d]
+        k = k_ref[0, 0].astype(jnp.float32)               # [bk, d]
+        v = v_ref[0, 0].astype(jnp.float32)               # [bk, d]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        q_idx = qi * block_q + lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        k_idx = ki * block_k + lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(q_idx >= k_idx, s, NEG_INF)
+
+        m_prev, l_prev = m_ref[0, 0], l_ref[0, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        acc_ref[0, 0] = acc_ref[0, 0] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        l_ref[0, 0] = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+        m_ref[0, 0] = m_new
+
+    @pl.when(ki == pl.num_programs(3) - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[0, 0] /
+                       jnp.maximum(l_ref[0, 0], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("scale", "interpret", "block_q", "block_k"))
+def flash_prefill(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  scale: float, interpret: bool = False,
+                  block_q: int = BLOCK_Q, block_k: int = BLOCK_K) -> jax.Array:
+    """Causal attention. q [B,Hq,T,d]; k,v [B,Hkv,T,d] -> [B,Hq,T,d]."""
+    B, Hq, T, d = q.shape
+    Hkv = k.shape[1]
+    G = Hq // Hkv
+    block_q = min(block_q, T)
+    block_k = min(block_k, T)
+    assert T % block_q == 0 and T % block_k == 0
+    grid = (B, Hq, T // block_q, T // block_k)
+    kernel = functools.partial(_flash_kernel, scale=scale,
+                               block_q=block_q, block_k=block_k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b, h, qi, ki: (b, h // G, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b, h, qi, ki: (b, h // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d), lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, T, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1, block_q, 1), jnp.float32),
+            pltpu.VMEM((1, 1, block_q, 1), jnp.float32),
+            pltpu.VMEM((1, 1, block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

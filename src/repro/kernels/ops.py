@@ -1,0 +1,107 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Shape normalisation ([B, H, ...] <-> [B·H, ...]), GQA head grouping, and
+backend dispatch: on TPU the Pallas kernels run compiled; on CPU they run
+with ``interpret=True`` (kernel body executed in Python — correctness path),
+and the pure-jnp reference is used inside traced/pjit graphs (the dry-run
+lowers the jnp formulation, whose HBM traffic is equivalent).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import bitmap_compress, ref, sparse_decode
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+# ----------------------------------------------------------------------
+def compress(x: jax.Array, k: int, *, use_pallas: Optional[bool] = None):
+    """Per-token top-k prune + pack. x [..., T, d] -> (values, bitmap)."""
+    lead = x.shape[:-2]
+    T, d = x.shape[-2:]
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not use_pallas:
+        return ref.mustafar_compress_ref(x, k)
+    xr = x.reshape(-1, T, d)
+    vals, bm = bitmap_compress.mustafar_compress(xr, k, interpret=not _on_tpu())
+    return (vals.reshape(*lead, T, k), bm.reshape(*lead, T, bm.shape[-1]))
+
+
+def _group_q(q: jax.Array, n_kv_heads: int):
+    """[B, Hq, d] -> [B·Hkv, G, d] (query head h attends kv head h//G)."""
+    B, Hq, d = q.shape
+    G = Hq // n_kv_heads
+    return q.reshape(B * n_kv_heads, G, d), G
+
+
+def sparse_qk(q: jax.Array, values: jax.Array, bitmap: jax.Array, *,
+              scale: float, use_pallas: Optional[bool] = None) -> jax.Array:
+    """q [B,Hq,d], compressed K [B,Hkv,T,·] -> scores [B,Hq,T] fp32."""
+    B, Hkv, T, k = values.shape
+    d = q.shape[-1]
+    qg, G = _group_q(q, Hkv)
+    v2, b2 = values.reshape(B * Hkv, T, k), bitmap.reshape(B * Hkv, T, -1)
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        s = sparse_decode.sparse_qk(qg, v2, b2, scale=scale,
+                                    interpret=not _on_tpu(),
+                                    tile_t=min(T, sparse_decode.TILE_T))
+    else:
+        s = ref.sparse_qk_ref(qg, v2, b2, d, scale)
+    return s.reshape(B, Hkv * G, T)
+
+
+def sparse_av(p: jax.Array, values: jax.Array, bitmap: jax.Array, *, d: int,
+              use_pallas: Optional[bool] = None) -> jax.Array:
+    """p [B,Hq,T], compressed V [B,Hkv,T,·] -> out [B,Hq,d] fp32."""
+    B, Hkv, T, k = values.shape
+    Hq = p.shape[1]
+    G = Hq // Hkv
+    pg = p.reshape(B * Hkv, G, T)
+    v2, b2 = values.reshape(B * Hkv, T, k), bitmap.reshape(B * Hkv, T, -1)
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        o = sparse_decode.sparse_av(pg, v2, b2, interpret=not _on_tpu(),
+                                    tile_t=min(T, sparse_decode.TILE_T))
+        o = o[..., :d]
+    else:
+        o = ref.sparse_av_ref(pg, v2, b2, d)
+    return o.reshape(B, Hq, d)
+
+
+def decode_attention_fused(q: jax.Array,
+                           ck_values: jax.Array, ck_bitmap: jax.Array,
+                           cv_values: jax.Array, cv_bitmap: jax.Array,
+                           n_valid: jax.Array, *, scale: Optional[float] = None,
+                           use_pallas: Optional[bool] = None) -> jax.Array:
+    """Fused single-pass decode attention over the compressed cache.
+
+    q [B,Hq,d]; caches [B,Hkv,T,·]; n_valid [B] -> out [B,Hq,d] fp32.
+    """
+    B, Hkv, T, kk = ck_values.shape
+    d = q.shape[-1]
+    scale = scale if scale is not None else d ** -0.5
+    qg, G = _group_q(q, Hkv)
+    nv = jnp.repeat(n_valid.astype(jnp.int32), Hkv)
+    args = (qg,
+            ck_values.reshape(B * Hkv, T, kk), ck_bitmap.reshape(B * Hkv, T, -1),
+            cv_values.reshape(B * Hkv, T, -1), cv_bitmap.reshape(B * Hkv, T, -1))
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        o = sparse_decode.decode_attention_fused(
+            *args, nv, d=d, scale=scale, interpret=not _on_tpu(),
+            tile_t=min(T, sparse_decode.TILE_T))
+    else:
+        o = ref.decode_attention_fused_ref(*args, nv, d, scale)
+    return o.reshape(B, Hkv * G, d)

@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for every Pallas kernel (asserted allclose in tests).
+
+These are the ground truth for:
+  * ``mustafar_compress``  — per-token top-k prune + fixed-k bitmap pack
+  * ``sparse_qk``          — q · K̂ᵀ over the compressed Key cache (SpMV #1)
+  * ``sparse_av``          — α · V̂ over the compressed Value cache (SpMV #2)
+  * ``decode_attention_fused`` — both SpMVs + joint online softmax
+  * ``flash_prefill``      — causal flash attention (dense prefill path)
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparse_format import (pack_fixedk, pad_to_words, topk_mask,
+                                      unpack_fixedk)
+
+NEG_INF = -1e30
+
+
+def mustafar_compress_ref(x: jax.Array, k: int):
+    """x [..., T, d] -> (values [..., T, k], bitmap [..., T, ceil32(d)//32])."""
+    return pack_fixedk(x, topk_mask(x, k), k)
+
+
+def sparse_qk_ref(q: jax.Array, values: jax.Array, bitmap: jax.Array,
+                  d: int, scale: float) -> jax.Array:
+    """q [BH, G, d], values [BH, T, k], bitmap [BH, T, W] -> scores [BH, G, T]."""
+    k_dense = unpack_fixedk(values, bitmap, d).astype(jnp.float32)
+    return jnp.einsum("bgd,btd->bgt", q.astype(jnp.float32), k_dense) * scale
+
+
+def sparse_av_ref(p: jax.Array, values: jax.Array, bitmap: jax.Array,
+                  d: int) -> jax.Array:
+    """p [BH, G, T], values [BH, T, k] -> out [BH, G, d]."""
+    v_dense = unpack_fixedk(values, bitmap, d).astype(jnp.float32)
+    return jnp.einsum("bgt,btd->bgd", p.astype(jnp.float32), v_dense)
+
+
+def decode_attention_fused_ref(q: jax.Array,
+                               ck_values: jax.Array, ck_bitmap: jax.Array,
+                               cv_values: jax.Array, cv_bitmap: jax.Array,
+                               n_valid: jax.Array, d: int,
+                               scale: Optional[float] = None) -> jax.Array:
+    """Fused compressed-cache decode attention (softmax inside).
+
+    q [BH, G, d]; caches [BH, T, ·]; n_valid [BH] -> out [BH, G, d].
+    """
+    scale = scale if scale is not None else d ** -0.5
+    T = ck_values.shape[1]
+    s = sparse_qk_ref(q, ck_values, ck_bitmap, d, scale)
+    valid = jnp.arange(T)[None, None, :] < n_valid[:, None, None]
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return sparse_av_ref(p, cv_values, cv_bitmap, d)
+
+
+def flash_prefill_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                      scale: Optional[float] = None) -> jax.Array:
+    """Causal attention oracle. q,k,v [B, H, T, d] (k/v already GQA-expanded)."""
+    d = q.shape[-1]
+    scale = scale if scale is not None else d ** -0.5
+    T = q.shape[2]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    causal = jnp.tril(jnp.ones((T, T), bool))
+    s = jnp.where(causal, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)

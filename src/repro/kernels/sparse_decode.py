@@ -1,0 +1,204 @@
+"""Pallas TPU kernels: bitmap-SpMV decode attention (paper §3 / Appendix C).
+
+Load-as-compressed, compute-as-dense (FlashLLM/SpInfer paradigm, re-tiled
+for TPU): each grid step DMAs one compressed tile — values ``[TILE_T, k]``
++ bitmap ``[TILE_T, d/32]`` — from HBM into VMEM (≈(2k+d/8)/2d of the dense
+bytes), expands the bitmap with broadcasted shifts (VPU), reconstructs the
+dense tile via the rank-match one-hot contraction (MXU), then runs the dense
+tile product on the MXU.
+
+Two kernels mirror the paper's Fig. 5a decomposition:
+  * ``sparse_qk`` :  scores = q · K̂ᵀ      (grid: rows × token tiles)
+  * ``sparse_av`` :  out    = α · V̂       (accumulated over token tiles)
+
+plus ``decode_attention_fused`` — a beyond-paper flash-decoding-style fusion
+(single pass, online softmax, no [BH,G,T] score round-trip through HBM).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from repro.core.sparse_format import pad_to_words
+
+TILE_T = 128          # compressed tokens per grid step
+NEG_INF = -1e30
+
+
+def _decompress(vals, bm, d: int, k: int):
+    """(values [T,k], bitmap [T,W] uint32) -> dense [T, d_pad] fp32 in VMEM."""
+    T, W = bm.shape
+    d_pad = W * 32
+    shifts = jnp.arange(32, dtype=jnp.uint32)[None, None, :]
+    bits = ((bm[:, :, None] >> shifts) & jnp.uint32(1))            # [T, W, 32]
+    bits = bits.reshape(T, d_pad).astype(jnp.float32)
+    pos = jnp.cumsum(bits, axis=1) - 1.0                            # [T, d_pad]
+    j = lax.broadcasted_iota(jnp.float32, (T, d_pad, k), 2)
+    onehot = ((pos[:, :, None] == j) & (bits[:, :, None] > 0)).astype(jnp.float32)
+    dense = jnp.einsum("tcj,tj->tc", onehot, vals.astype(jnp.float32),
+                       preferred_element_type=jnp.float32)          # [T, d_pad]
+    return dense
+
+
+# ----------------------------------------------------------------------
+# SpMV #1: scores = q · K̂ᵀ
+
+def _qk_kernel(q_ref, vals_ref, bm_ref, out_ref, *, d, k, scale):
+    q = q_ref[0].astype(jnp.float32)                     # [G, d]
+    dense = _decompress(vals_ref[0], bm_ref[0], d, k)    # [T, d_pad]
+    s = jax.lax.dot_general(q, dense[:, :d], (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    out_ref[0] = (s * scale).astype(out_ref.dtype)       # [G, T]
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret", "tile_t"))
+def sparse_qk(q: jax.Array, values: jax.Array, bitmap: jax.Array, *,
+              scale: float, interpret: bool = False, tile_t: int = TILE_T):
+    """q [BH, G, d]; values [BH, T, k]; bitmap [BH, T, W] -> scores [BH, G, T] fp32."""
+    BH, G, d = q.shape
+    _, T, k = values.shape
+    W = bitmap.shape[-1]
+    assert T % tile_t == 0, (T, tile_t)
+    grid = (BH, T // tile_t)
+    kernel = functools.partial(_qk_kernel, d=d, k=k, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, G, d), lambda b, t: (b, 0, 0)),
+            pl.BlockSpec((1, tile_t, k), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((1, tile_t, W), lambda b, t: (b, t, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, tile_t), lambda b, t: (b, 0, t)),
+        out_shape=jax.ShapeDtypeStruct((BH, G, T), jnp.float32),
+        interpret=interpret,
+    )(q, values, bitmap)
+
+
+# ----------------------------------------------------------------------
+# SpMV #2: out = α · V̂  (accumulate over token tiles)
+
+def _av_kernel(p_ref, vals_ref, bm_ref, out_ref, *, d, k):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    p = p_ref[0].astype(jnp.float32)                     # [G, T]
+    dense = _decompress(vals_ref[0], bm_ref[0], d, k)    # [T, d_pad]
+    acc = jax.lax.dot_general(p, dense[:, :d], (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    out_ref[0] += acc.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "tile_t"))
+def sparse_av(p: jax.Array, values: jax.Array, bitmap: jax.Array, *,
+              interpret: bool = False, tile_t: int = TILE_T):
+    """p [BH, G, T]; values [BH, T, k] -> out [BH, G, d_pad→sliced d] fp32."""
+    BH, G, T = p.shape
+    k = values.shape[-1]
+    W = bitmap.shape[-1]
+    d = W * 32  # padded width; caller slices to true d
+    assert T % tile_t == 0, (T, tile_t)
+    grid = (BH, T // tile_t)
+    kernel = functools.partial(_av_kernel, d=d, k=k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, G, tile_t), lambda b, t: (b, 0, t)),
+            pl.BlockSpec((1, tile_t, k), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((1, tile_t, W), lambda b, t: (b, t, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, d), lambda b, t: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, G, d), jnp.float32),
+        interpret=interpret,
+    )(p, values, bitmap)
+
+
+# ----------------------------------------------------------------------
+# Beyond-paper: fused single-pass decode attention (online softmax).
+# Avoids materialising [BH, G, T] scores in HBM — the paper's two-kernel
+# formulation pays 2·G·T fp32 of extra HBM traffic that this removes.
+
+def _fused_kernel(q_ref, kv_ref, kb_ref, vv_ref, vb_ref, nv_ref,
+                  out_ref, m_ref, l_ref, acc_ref, *, d, kk, kv, scale, tile_t):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                       # [G, d]
+    k_dense = _decompress(kv_ref[0], kb_ref[0], d, kk)     # [T, d_pad]
+    s = jax.lax.dot_general(q, k_dense[:, :d], (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale  # [G, T]
+    # mask invalid tokens of the last tile
+    token_idx = t * tile_t + lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(token_idx < nv_ref[0], s, NEG_INF)
+
+    m_prev, l_prev = m_ref[0], l_ref[0]                    # [G, 1]
+    m_cur = jnp.max(s, axis=1, keepdims=True)              # [G, 1]
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)                        # rescale factor
+    p = jnp.exp(s - m_new)                                 # [G, T]
+    v_dense = _decompress(vv_ref[0], vb_ref[0], d, kv)     # [T, d_pad]
+    pv = jax.lax.dot_general(p, v_dense[:, :d], (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [G, d]
+    acc_ref[0] = acc_ref[0] * alpha + pv
+    l_ref[0] = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+    m_ref[0] = m_new
+
+    @pl.when(t == pl.num_programs(1) - 1)
+    def _finalize():
+        out_ref[0] = (acc_ref[0] / jnp.maximum(l_ref[0], 1e-30)).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("d", "scale", "interpret", "tile_t"))
+def decode_attention_fused(q: jax.Array,
+                           ck_values: jax.Array, ck_bitmap: jax.Array,
+                           cv_values: jax.Array, cv_bitmap: jax.Array,
+                           n_valid: jax.Array, *, d: int, scale: float,
+                           interpret: bool = False, tile_t: int = TILE_T):
+    """Fused compressed-cache decode attention.
+
+    q [BH, G, d]; caches [BH, T, ·]; n_valid [BH] int32 -> out [BH, G, d] fp32.
+    """
+    BH, G, _ = q.shape
+    T, kk = ck_values.shape[1:]
+    kv = cv_values.shape[-1]
+    W = ck_bitmap.shape[-1]
+    d_pad = W * 32
+    assert T % tile_t == 0, (T, tile_t)
+    grid = (BH, T // tile_t)
+    kernel = functools.partial(_fused_kernel, d=d, kk=kk, kv=kv,
+                               scale=scale, tile_t=tile_t)
+    from jax.experimental.pallas import tpu as pltpu
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, G, d), lambda b, t: (b, 0, 0)),
+            pl.BlockSpec((1, tile_t, kk), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((1, tile_t, W), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((1, tile_t, kv), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((1, tile_t, W), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((1,), lambda b, t: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, G, d), lambda b, t: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, G, d), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((1, G, 1), jnp.float32),   # running max
+            pltpu.VMEM((1, G, 1), jnp.float32),   # running sum
+            pltpu.VMEM((1, G, d), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(q, ck_values, ck_bitmap, cv_values, cv_bitmap, n_valid)
+    return out

@@ -1,0 +1,87 @@
+"""Distributed training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch starcoder2-3b \
+        --steps 200 --batch 8 --seq 256 [--smoke] [--mesh data=4,model=2] \
+        [--resume auto] [--ckpt-dir /tmp/run1]
+
+On a real cluster this is invoked once per host (jax.distributed.initialize
+picks up the coordinator from env); in this container it runs single-process.
+``--smoke`` uses the reduced config. Fault tolerance: any crash/restart with
+``--resume auto`` continues from the newest verified checkpoint; if the
+device count changed (elastic), params are resharded onto the new mesh.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import TrainConfig, get_config
+from repro.sharding import specs as sh
+from repro.training import init_train_state, make_train_step, train
+from repro.training.optimizer import OptState
+from repro.training.train_loop import TrainState
+
+
+def build_mesh(spec: str):
+    axes = []
+    sizes = []
+    for part in spec.split(","):
+        name, size = part.split("=")
+        axes.append(name)
+        sizes.append(int(size))
+    return jax.make_mesh(tuple(sizes), tuple(axes))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--mesh", default="")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", default="auto", choices=["auto", "none"])
+    ap.add_argument("--distributed", action="store_true",
+                    help="multi-host: call jax.distributed.initialize()")
+    args = ap.parse_args()
+
+    if args.distributed:
+        jax.distributed.initialize()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.reduced()
+    tc = TrainConfig(total_steps=args.steps, learning_rate=args.lr,
+                     warmup_steps=max(args.steps // 10, 1),
+                     microbatch=args.microbatch,
+                     checkpoint_every=args.ckpt_every,
+                     checkpoint_dir=args.ckpt_dir)
+
+    step_fn = None
+    state = None
+    if args.mesh:
+        mesh = build_mesh(args.mesh)
+        state = init_train_state(jax.random.PRNGKey(tc.seed), cfg)
+        pspecs = sh.param_specs(state.params, mesh, fsdp=True, cfg=cfg)
+        ospecs = OptState(P(), pspecs, pspecs, pspecs)
+        sspec = TrainState(sh.to_named(pspecs, mesh),
+                           sh.to_named(ospecs, mesh))
+        state = jax.device_put(state, sspec)
+        bspec = sh.to_named(sh.train_batch_specs(cfg, args.batch, mesh), mesh)
+        step_fn = jax.jit(make_train_step(cfg, tc),
+                          in_shardings=(sspec, bspec), donate_argnums=(0,))
+        print(f"[launch] mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}")
+
+    train(cfg, tc, batch_size=args.batch, seq_len=args.seq,
+          resume=args.resume == "auto", step_fn=step_fn, state=state)
+
+
+if __name__ == "__main__":
+    main()

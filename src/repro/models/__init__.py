@@ -1,0 +1,3 @@
+"""Config-driven model zoo (dense GQA, MoE, RWKV6, Mamba/Jamba, Whisper, VLM)."""
+from repro.models.model import (forward_train, init_params, lm_loss,
+                                param_shapes, structural_period)

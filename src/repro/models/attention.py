@@ -1,0 +1,207 @@
+"""GQA attention layer (projections + causal core + cross-attention).
+
+The differentiable training/prefill path is the XLA einsum formulation
+(remat-friendly); the serving prefill can swap in the Pallas flash kernel;
+the decode path lives in ``repro.serving`` on top of the Mustafar cache.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope, cdtype, dense_init, pdtype
+from repro.sharding.constraints import DP, shard_activation
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg: ModelConfig):
+    keys = jax.random.split(key, 4)
+    dt = pdtype(cfg)
+    n_q, n_kv = cfg.n_heads * cfg.d_head, cfg.n_kv_heads * cfg.d_head
+    p = {"wq": dense_init(keys[0], cfg.d_model, n_q, dt),
+         "wk": dense_init(keys[1], cfg.d_model, n_kv, dt),
+         "wv": dense_init(keys[2], cfg.d_model, n_kv, dt),
+         "wo": dense_init(keys[3], n_q, cfg.d_model, dt)}
+    if cfg.use_bias:
+        p["bq"] = jnp.zeros((n_q,), dt)
+        p["bk"] = jnp.zeros((n_kv,), dt)
+        p["bv"] = jnp.zeros((n_kv,), dt)
+        p["bo"] = jnp.zeros((cfg.d_model,), dt)
+    return p
+
+
+def qkv_proj(p, x: jax.Array, cfg: ModelConfig,
+             positions: Optional[jax.Array] = None,
+             rope: bool = True) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x [B, T, D] -> q [B, T, Hq, dh], k/v [B, T, Hkv, dh] (RoPE applied)."""
+    B, T, _ = x.shape
+    dt = cdtype(cfg)
+    q = jnp.einsum("btd,de->bte", x, p["wq"].astype(dt))
+    k = jnp.einsum("btd,de->bte", x, p["wk"].astype(dt))
+    v = jnp.einsum("btd,de->bte", x, p["wv"].astype(dt))
+    if cfg.use_bias:
+        q, k, v = q + p["bq"].astype(dt), k + p["bk"].astype(dt), v + p["bv"].astype(dt)
+    q = q.reshape(B, T, cfg.n_heads, cfg.d_head)
+    k = k.reshape(B, T, cfg.n_kv_heads, cfg.d_head)
+    v = v.reshape(B, T, cfg.n_kv_heads, cfg.d_head)
+    if rope and cfg.pos_embedding == "rope":
+        if positions is None:
+            positions = jnp.arange(T)[None, :]
+        # rope expects [..., T, d]: swap to [B, H, T, d]
+        q = apply_rope(q.swapaxes(1, 2), positions, cfg).swapaxes(1, 2)
+        k = apply_rope(k.swapaxes(1, 2), positions, cfg).swapaxes(1, 2)
+    # pin a consistent attention layout: batch on data axes, heads on
+    # "model" iff divisible (else dropped) — prevents GSPMD full-batch
+    # reshards at the head-split reshape for 24/56/14-head archs
+    q = shard_activation(q, DP, None, "model", None)
+    k = shard_activation(k, DP, None, "model", None)
+    v = shard_activation(v, DP, None, "model", None)
+    return q, k, v
+
+
+def o_proj(p, out: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """out [B, T, Hq, dh] -> [B, T, D]."""
+    B, T = out.shape[:2]
+    out = shard_activation(out, DP, None, "model", None)
+    dt = cdtype(cfg)
+    y = jnp.einsum("bte,ed->btd", out.reshape(B, T, -1), p["wo"].astype(dt))
+    if cfg.use_bias:
+        y = y + p["bo"].astype(dt)
+    return y
+
+
+def _expand_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """[B, T, Hkv, d] -> [B, T, Hq, d]."""
+    Hkv = k.shape[2]
+    if Hkv == n_heads:
+        return k
+    return jnp.repeat(k, n_heads // Hkv, axis=2)
+
+
+# query lengths at or above this use the chunked (flash-style) formulation
+CHUNKED_ATTN_THRESHOLD = 1024
+CHUNK_Q = 512
+
+
+def pick_chunk(T: int, target: int = CHUNK_Q) -> int:
+    """Largest divisor of T that is <= target (chunked scan needs T % c == 0)."""
+    for c in range(min(target, T), 0, -1):
+        if T % c == 0:
+            return c
+    return T
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      cfg: ModelConfig, causal: bool,
+                      chunk: int = 0) -> jax.Array:
+    """Memory-efficient attention: lax.scan over query chunks — peak score
+    memory [B, H, chunk, Tk] instead of [B, H, Tq, Tk]. Pure jnp
+    (differentiable); the Pallas flash kernel covers the TPU inference path,
+    this covers training/prefill lowering at long T. Handles self- (Tq == Tk,
+    causal) and cross- (Tq != Tk, bidirectional) attention."""
+    B, Tq, Hq, dh = q.shape
+    Tk = k.shape[1]
+    k = _expand_kv(k, cfg.n_heads)
+    v = _expand_kv(v, cfg.n_heads)
+    scale = cfg.d_head ** -0.5
+    chunk = chunk or pick_chunk(Tq)
+    n_chunks = Tq // chunk
+    qc = q.reshape(B, n_chunks, chunk, Hq, dh)
+
+    def body(_, inp):
+        qi, ci = inp
+        s = jnp.einsum("bqhd,bkhd->bhqk", qi, k,
+                       preferred_element_type=jnp.float32) * scale
+        if causal:
+            q_idx = ci * chunk + jnp.arange(chunk)[None, None, :, None]
+            k_idx = jnp.arange(Tk)[None, None, None, :]
+            s = jnp.where(q_idx >= k_idx, s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+        o = jnp.einsum("bhqk,bkhd->bqhd", p, v,
+                       preferred_element_type=jnp.float32)
+        return None, o.astype(q.dtype)
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    _, out = jax.lax.scan(body, None,
+                          (jnp.moveaxis(qc, 1, 0), jnp.arange(n_chunks)))
+    return jnp.moveaxis(out, 0, 1).reshape(B, Tq, Hq, dh)
+
+
+def chunked_causal_attention(q, k, v, cfg: ModelConfig,
+                             chunk: int = 0) -> jax.Array:
+    return chunked_attention(q, k, v, cfg, causal=True, chunk=chunk)
+
+
+def causal_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     cfg: ModelConfig,
+                     segment_ids: Optional[jax.Array] = None) -> jax.Array:
+    """Full causal attention [B, T, Hq, dh] (XLA path, fp32 softmax)."""
+    T = q.shape[1]
+    if T >= CHUNKED_ATTN_THRESHOLD and segment_ids is None:
+        return chunked_causal_attention(q, k, v, cfg)
+    k = _expand_kv(k, cfg.n_heads)
+    v = _expand_kv(v, cfg.n_heads)
+    scale = cfg.d_head ** -0.5
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    mask = jnp.tril(jnp.ones((T, T), bool))
+    if segment_ids is not None:
+        mask = mask[None, None] & (segment_ids[:, None, :, None]
+                                   == segment_ids[:, None, None, :])
+    s = jnp.where(mask, s, NEG_INF)
+    p_attn = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", p_attn, v,
+                      preferred_element_type=jnp.float32).astype(q.dtype)
+
+
+def bidirectional_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                            cfg: ModelConfig) -> jax.Array:
+    """Encoder / cross attention (no mask). Shapes as above, Tq may != Tk."""
+    if q.shape[1] >= CHUNKED_ATTN_THRESHOLD:
+        return chunked_attention(q, k, v, cfg, causal=False)
+    k = _expand_kv(k, cfg.n_heads)
+    v = _expand_kv(v, cfg.n_heads)
+    scale = cfg.d_head ** -0.5
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    p_attn = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", p_attn, v,
+                      preferred_element_type=jnp.float32).astype(q.dtype)
+
+
+def self_attention_block(p, x: jax.Array, cfg: ModelConfig,
+                         positions: Optional[jax.Array] = None) -> jax.Array:
+    """Full train-mode self-attention sublayer (proj → causal core → proj)."""
+    q, k, v = qkv_proj(p, x, cfg, positions)
+    out = causal_attention(q, k, v, cfg)
+    return o_proj(p, out, cfg)
+
+
+def cross_attention_block(p, x: jax.Array, enc_kv: Tuple[jax.Array, jax.Array],
+                          cfg: ModelConfig) -> jax.Array:
+    """Decoder cross-attention: q from x, K/V precomputed from encoder."""
+    B, T, _ = x.shape
+    dt = cdtype(cfg)
+    q = jnp.einsum("btd,de->bte", x, p["wq"].astype(dt))
+    if cfg.use_bias:
+        q = q + p["bq"].astype(dt)
+    q = q.reshape(B, T, cfg.n_heads, cfg.d_head)
+    k, v = enc_kv
+    out = bidirectional_attention(q, k, v, cfg)
+    return o_proj(p, out, cfg)
+
+
+def encoder_kv(p, enc_x: jax.Array, cfg: ModelConfig):
+    """Project encoder output once into cross-attention K/V."""
+    B, S, _ = enc_x.shape
+    dt = cdtype(cfg)
+    k = jnp.einsum("btd,de->bte", enc_x, p["wk"].astype(dt))
+    v = jnp.einsum("btd,de->bte", enc_x, p["wv"].astype(dt))
+    if cfg.use_bias:
+        k, v = k + p["bk"].astype(dt), v + p["bv"].astype(dt)
+    return (k.reshape(B, S, cfg.n_kv_heads, cfg.d_head),
+            v.reshape(B, S, cfg.n_kv_heads, cfg.d_head))

@@ -1,0 +1,142 @@
+"""Shared layers: norms, embeddings, RoPE, MLPs. Pure-functional pytrees.
+
+Params are nested dicts of jnp arrays. ``init_*`` builds params; ``*_apply``
+consumes them. Compute dtype is cfg.dtype (bf16), norm/softmax accumulate in
+fp32.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def cdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def pdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: Optional[float] = None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+# ----------------------------------------------------------------------
+# norms
+
+def init_norm(cfg: ModelConfig, d: Optional[int] = None):
+    d = d or cfg.d_model
+    p = {"scale": jnp.ones((d,), pdtype(cfg))}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), pdtype(cfg))
+    return p
+
+
+def norm_apply(p, x: jax.Array, kind: str) -> jax.Array:
+    """Stats in fp32; the scale/bias affine runs in x.dtype so backward
+    cotangents at layer boundaries stay bf16 (§Perf Cell A iter 6 — fp32
+    cotangent tensors doubled the TP all-reduce bytes)."""
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        y = (xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True)
+                                + 1e-6)).astype(x.dtype)
+        return y * p["scale"].astype(x.dtype)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = ((xf - mu) * jax.lax.rsqrt(var + 1e-5)).astype(x.dtype)
+    return y * p["scale"].astype(x.dtype) + p["bias"].astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# rotary embeddings
+
+def rope_freqs(cfg: ModelConfig) -> jax.Array:
+    d = cfg.d_head
+    return 1.0 / (cfg.rope_theta ** (jnp.arange(0, d, 2, jnp.float32) / d))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """x [..., T, d_head] (T axis second-to-last); positions [..., T]."""
+    if cfg.pos_embedding != "rope":
+        return x
+    freqs = rope_freqs(cfg)                                  # [d/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., T, d/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    # match broadcasting: x may have a heads dim before T
+    while cos.ndim < x.ndim:
+        cos, sin = cos[..., None, :, :], sin[..., None, :, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# embeddings
+
+def init_embed(key, cfg: ModelConfig):
+    p = {"tokens": (jax.random.normal(key, (cfg.vocab_size, cfg.d_model),
+                                      jnp.float32) * 0.02).astype(pdtype(cfg))}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(jax.random.fold_in(key, 1),
+                                  cfg.d_model, cfg.vocab_size, pdtype(cfg))
+    if cfg.pos_embedding == "learned":
+        n_pos = max(cfg.encoder_ctx, cfg.max_position)
+        p["positions"] = (jax.random.normal(jax.random.fold_in(key, 2),
+                                            (n_pos, cfg.d_model), jnp.float32)
+                          * 0.02).astype(pdtype(cfg))
+    return p
+
+
+def embed_tokens(p, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    return p["tokens"].astype(cdtype(cfg))[tokens]
+
+
+def lm_logits(p, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    w = p["tokens"] if cfg.tie_embeddings else p["lm_head"]
+    if cfg.tie_embeddings:
+        return jnp.einsum("...d,vd->...v", x, w.astype(cdtype(cfg)))
+    return jnp.einsum("...d,dv->...v", x, w.astype(cdtype(cfg)))
+
+
+# ----------------------------------------------------------------------
+# dense MLP (gated SiLU / plain GELU)
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None):
+    d_ff = d_ff or cfg.d_ff
+    keys = jax.random.split(key, 3)
+    dt = pdtype(cfg)
+    if cfg.activation == "silu":
+        p = {"gate": dense_init(keys[0], cfg.d_model, d_ff, dt),
+             "up": dense_init(keys[1], cfg.d_model, d_ff, dt),
+             "down": dense_init(keys[2], d_ff, cfg.d_model, dt)}
+    else:
+        p = {"up": dense_init(keys[0], cfg.d_model, d_ff, dt),
+             "down": dense_init(keys[1], d_ff, cfg.d_model, dt)}
+    if cfg.use_bias:
+        p["up_b"] = jnp.zeros((d_ff,), dt)
+        p["down_b"] = jnp.zeros((cfg.d_model,), dt)
+    return p
+
+
+def mlp_apply(p, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    dt = cdtype(cfg)
+    up = jnp.einsum("...d,df->...f", x, p["up"].astype(dt))
+    if cfg.use_bias:
+        up = up + p["up_b"].astype(dt)
+    if cfg.activation == "silu":
+        gate = jnp.einsum("...d,df->...f", x, p["gate"].astype(dt))
+        h = jax.nn.silu(gate.astype(jnp.float32)).astype(dt) * up
+    elif cfg.activation == "relu_sq":
+        h = jnp.square(jax.nn.relu(up))
+    else:
+        h = jax.nn.gelu(up.astype(jnp.float32)).astype(dt)
+    out = jnp.einsum("...f,fd->...d", h, p["down"].astype(dt))
+    if cfg.use_bias:
+        out = out + p["down_b"].astype(dt)
+    return out

@@ -1,0 +1,104 @@
+"""Mamba (selective SSM) block for the Jamba hybrid (arXiv:2403.19887).
+
+    h_t = exp(Δ_t A) h_{t-1} + (Δ_t B_t) x_t        h: [B, d_in, d_state]
+    y_t = C_t · h_t + D x_t
+
+Training/prefill: depthwise causal conv + ``lax.scan`` over time.
+Decode: O(1) state update (conv ring + SSM state) — no KV cache, which is
+why Jamba's Mamba layers need no Mustafar treatment (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import cdtype, dense_init, pdtype
+
+
+def _dt_rank(cfg: ModelConfig) -> int:
+    return max(1, cfg.d_model // 16)
+
+
+def init_mamba(key, cfg: ModelConfig):
+    d = cfg.d_model
+    d_in = cfg.mamba_expand * d
+    ds, dc = cfg.mamba_d_state, cfg.mamba_d_conv
+    dtr = _dt_rank(cfg)
+    keys = jax.random.split(key, 7)
+    dt = pdtype(cfg)
+    # S4D-real init for A
+    A = jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None, :], (d_in, 1))
+    return {
+        "in_proj": dense_init(keys[0], d, 2 * d_in, dt),
+        "conv_w": (jax.random.normal(keys[1], (dc, d_in), jnp.float32)
+                   * (dc ** -0.5)).astype(dt),
+        "conv_b": jnp.zeros((d_in,), dt),
+        "x_proj": dense_init(keys[2], d_in, dtr + 2 * ds, dt),
+        "dt_proj": dense_init(keys[3], dtr, d_in, jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((d_in,), 1e-2, jnp.float32))),
+        "A_log": jnp.log(A),
+        "D": jnp.ones((d_in,), jnp.float32),
+        "out_proj": dense_init(keys[4], d_in, d, dt),
+    }
+
+
+def _ssm_scan(u, dt_, B_, C_, A, D, h0):
+    """u/dt_ [B,T,din]; B_/C_ [B,T,ds]; A [din,ds]; h0 [B,din,ds] fp32.
+
+    Discretisation (exp(Δ·A), Δ·B·u) happens INSIDE the scan body: the
+    [B,T,din,ds] tensors would be ~1 TB at jamba's 32k-prefill shapes."""
+    Ae = -jnp.exp(A)                                           # [din,ds]
+
+    def step(h, inp):
+        u_t, dt_t, B_t, C_t = inp          # [B,din],[B,din],[B,ds],[B,ds]
+        dA_t = jnp.exp(dt_t[..., None] * Ae[None])             # [B,din,ds]
+        dBu_t = (dt_t * u_t)[..., None] * B_t[:, None, :]
+        h = dA_t * h + dBu_t                                   # [B,din,ds]
+        y = jnp.einsum("bds,bs->bd", h, C_t)
+        return h, y
+
+    xs = (jnp.moveaxis(u, 1, 0), jnp.moveaxis(dt_, 1, 0),
+          jnp.moveaxis(B_, 1, 0), jnp.moveaxis(C_, 1, 0))
+    h, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1) + u * D[None, None]
+    return y, h
+
+
+def mamba_apply(p, x: jax.Array, cfg: ModelConfig,
+                conv_state: jax.Array, ssm_state: jax.Array):
+    """x [B,T,D] -> (out [B,T,D], (new_conv [B,dc-1,din], new_ssm))."""
+    B, T, D = x.shape
+    d_in = cfg.mamba_expand * D
+    ds, dc = cfg.mamba_d_state, cfg.mamba_d_conv
+    dtr = _dt_rank(cfg)
+    dt = cdtype(cfg)
+
+    xz = jnp.einsum("btd,de->bte", x, p["in_proj"].astype(dt))
+    u, z = jnp.split(xz, 2, axis=-1)                           # [B,T,din]
+
+    # depthwise causal conv over time (carry = last dc-1 inputs)
+    u_pad = jnp.concatenate([conv_state.astype(dt), u], axis=1)  # [B,T+dc-1,din]
+    conv = sum(u_pad[:, i:i + T, :] * p["conv_w"][i].astype(dt)
+               for i in range(dc))
+    conv = conv + p["conv_b"].astype(dt)
+    new_conv = u_pad[:, T:, :] if dc == 1 else u_pad[:, -(dc - 1):, :]
+    uc = jax.nn.silu(conv.astype(jnp.float32))                 # [B,T,din] fp32
+
+    xdbc = jnp.einsum("bte,ef->btf", uc.astype(dt), p["x_proj"].astype(dt))
+    dt_in, B_, C_ = jnp.split(xdbc.astype(jnp.float32),
+                              [dtr, dtr + ds], axis=-1)
+    delta = jax.nn.softplus(dt_in @ p["dt_proj"] + p["dt_bias"])  # [B,T,din]
+
+    y, new_ssm = _ssm_scan(uc, delta, B_, C_, p["A_log"], p["D"], ssm_state)
+    y = y.astype(dt) * jax.nn.silu(z.astype(jnp.float32)).astype(dt)
+    out = jnp.einsum("bte,ed->btd", y, p["out_proj"].astype(dt))
+    return out, (new_conv.astype(jnp.float32), new_ssm)
+
+
+def mamba_state_shapes(cfg: ModelConfig, B: int):
+    d_in = cfg.mamba_expand * cfg.d_model
+    return {"conv": (B, cfg.mamba_d_conv - 1, d_in),
+            "ssm": (B, d_in, cfg.mamba_d_state)}

@@ -1,0 +1,286 @@
+"""Config-driven model assembly for every assigned architecture.
+
+Layers are stacked per *period position* and iterated with ``lax.scan`` so
+72-layer models compile one period, not 72 bodies. The structural period is
+``lcm(attn_every, moe_every)`` (Jamba: 8; everything else: 1).
+
+Param tree:
+    params = {
+      "embed":   token table (+ lm head / learned positions)
+      "blocks":  tuple over period positions j of a pytree whose leaves have
+                 leading dim n_periods (scanned)
+      "final_norm", and for enc-dec: "encoder" (same structure), "enc_norm"
+      "vis_proj" for the VLM stub frontend
+    }
+
+``forward_train`` runs the full differentiable pass (causal attention, WKV /
+SSM scans, MoE) and returns logits + aux losses. Serving prefill/decode live
+in ``repro.serving`` on the same param tree.
+"""
+from __future__ import annotations
+
+import math
+import os
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import mamba as mamba_mod
+from repro.models import moe as moe_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models.layers import (cdtype, dense_init, embed_tokens, init_embed,
+                                 init_mlp, init_norm, lm_logits, mlp_apply,
+                                 norm_apply, pdtype)
+from repro.sharding.constraints import DP, shard_activation
+
+
+def layer_scan_unroll() -> int:
+    """lax.scan unroll factor for the layer-period scan. The dry-run sets
+    REPRO_UNROLL_LAYERS high so cost_analysis counts every layer (XLA counts
+    a while-loop body once, not trip_count times)."""
+    return max(1, int(os.environ.get("REPRO_UNROLL_LAYERS", "1")))
+
+
+def structural_period(cfg: ModelConfig) -> int:
+    p = 1
+    if cfg.family == "hybrid":
+        p = math.lcm(cfg.attn_every, cfg.moe_every if cfg.n_experts else 1)
+    return p
+
+
+# ----------------------------------------------------------------------
+# init
+
+def init_block(key, cfg: ModelConfig, i: int, decoder: bool = True):
+    """Params for absolute layer index i (kind pattern is periodic)."""
+    kind = cfg.layer_kind(i) if decoder else "attn"
+    ffn = cfg.ffn_kind(i) if decoder else "dense"
+    keys = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"norm1": init_norm(cfg), "norm2": init_norm(cfg)}
+    if kind == "attn":
+        p["mixer"] = attn.init_attention(keys[0], cfg)
+    elif kind == "mamba":
+        p["mixer"] = mamba_mod.init_mamba(keys[0], cfg)
+    else:  # rwkv
+        p["mixer"] = rwkv_mod.init_rwkv_time_mix(keys[0], cfg)
+    if cfg.family == "audio" and decoder:
+        p["cross"] = attn.init_attention(keys[2], cfg)
+        p["norm_cross"] = init_norm(cfg)
+    if ffn == "moe":
+        p["ffn"] = moe_mod.init_moe(keys[1], cfg)
+    elif kind == "rwkv":
+        p["ffn"] = rwkv_mod.init_rwkv_channel_mix(keys[1], cfg)
+    else:
+        p["ffn"] = init_mlp(keys[1], cfg)
+    return p
+
+
+def _stack_blocks(key, cfg: ModelConfig, n_layers: int, decoder: bool = True):
+    period = structural_period(cfg) if decoder else 1
+    n_periods = n_layers // period
+    assert n_layers % period == 0, (n_layers, period)
+    blocks = []
+    for j in range(period):
+        per = [init_block(jax.random.fold_in(key, n * period + j), cfg,
+                          n * period + j, decoder) for n in range(n_periods)]
+        blocks.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per))
+    return tuple(blocks)
+
+
+def init_params(key, cfg: ModelConfig):
+    keys = jax.random.split(key, 5)
+    params: Dict[str, Any] = {
+        "embed": init_embed(keys[0], cfg),
+        "blocks": _stack_blocks(keys[1], cfg, cfg.n_layers),
+        "final_norm": init_norm(cfg),
+    }
+    if cfg.family == "audio":
+        params["encoder"] = _stack_blocks(keys[2], cfg, cfg.n_encoder_layers,
+                                          decoder=False)
+        params["enc_norm"] = init_norm(cfg)
+    if cfg.family == "vlm":
+        # stub frontend: a single projection of precomputed patch embeddings
+        params["vis_proj"] = dense_init(keys[3], cfg.d_model, cfg.d_model,
+                                        pdtype(cfg))
+    return params
+
+
+def param_shapes(cfg: ModelConfig):
+    """ShapeDtypeStructs of the param tree — no allocation (dry-run path)."""
+    return jax.eval_shape(lambda k: init_params(k, cfg),
+                          jax.random.PRNGKey(0))
+
+
+# ----------------------------------------------------------------------
+# training forward
+
+def _block_train(bp, x, cfg: ModelConfig, kind: str, ffn_kind: str,
+                 positions, enc_out, cross_p=None):
+    """One block, train mode. Returns (x, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = norm_apply(bp["norm1"], x, cfg.norm)
+    if kind == "attn":
+        mix = attn.self_attention_block(bp["mixer"], h, cfg, positions)
+    elif kind == "mamba":
+        B = x.shape[0]
+        st = mamba_mod.mamba_state_shapes(cfg, B)
+        mix, _ = mamba_mod.mamba_apply(
+            bp["mixer"], h, cfg,
+            jnp.zeros(st["conv"], jnp.float32), jnp.zeros(st["ssm"], jnp.float32))
+    else:  # rwkv
+        B = x.shape[0]
+        st = rwkv_mod.rwkv_state_shapes(cfg, B)
+        mix, _ = rwkv_mod.rwkv_time_mix(
+            bp["mixer"], h, cfg,
+            jnp.zeros(st["tm_shift"], x.dtype), jnp.zeros(st["wkv"], jnp.float32))
+    x = x + mix
+    if cfg.family == "audio" and "cross" in bp:
+        h = norm_apply(bp["norm_cross"], x, cfg.norm)
+        enc_kv = attn.encoder_kv(bp["cross"], enc_out, cfg)
+        x = x + attn.cross_attention_block(bp["cross"], h, enc_kv, cfg)
+    h = norm_apply(bp["norm2"], x, cfg.norm)
+    if ffn_kind == "moe":
+        f, aux = moe_mod.moe_apply(bp["ffn"], h, cfg)
+    elif kind == "rwkv":
+        B = x.shape[0]
+        f, _ = rwkv_mod.rwkv_channel_mix(
+            bp["ffn"], h, cfg, jnp.zeros((B, cfg.d_model), x.dtype))
+    else:
+        f = mlp_apply(bp["ffn"], h, cfg)
+    return x + f, aux
+
+
+def _scan_blocks_train(blocks, x, cfg: ModelConfig, positions, enc_out,
+                       decoder: bool = True, remat: str = "block"):
+    period = len(blocks)
+
+    def body(carry, per_period):
+        x, aux = carry
+        for j in range(period):
+            i = j  # absolute kind index within period
+            kind = cfg.layer_kind(i) if decoder else "attn"
+            ffn_kind = cfg.ffn_kind(i) if decoder else "dense"
+            if not decoder:
+                # encoder blocks: bidirectional attention
+                bp = per_period[j]
+                h = norm_apply(bp["norm1"], x, cfg.norm)
+                q, k, v = attn.qkv_proj(bp["mixer"], h, cfg, rope=False)
+                x = x + attn.o_proj(
+                    bp["mixer"], attn.bidirectional_attention(q, k, v, cfg), cfg)
+                h = norm_apply(bp["norm2"], x, cfg.norm)
+                x = x + mlp_apply(bp["ffn"], h, cfg)
+            else:
+                x, a = _block_train(per_period[j], x, cfg, kind, ffn_kind,
+                                    positions, enc_out)
+                aux = aux + a
+        return (x, aux), None
+
+    if remat != "none":
+        body = jax.checkpoint(body, prevent_cse=False)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), blocks,
+                               unroll=layer_scan_unroll())
+    return x, aux
+
+
+def encode(params, frames: jax.Array, cfg: ModelConfig,
+           remat: str = "block") -> jax.Array:
+    """Whisper encoder over stub frame embeddings [B, S, D]."""
+    S = frames.shape[1]
+    pos = params["embed"]["positions"][:S].astype(cdtype(cfg))
+    x = frames.astype(cdtype(cfg)) + pos[None]
+    x, _ = _scan_blocks_train(params["encoder"], x, cfg, None, None,
+                              decoder=False, remat=remat)
+    return norm_apply(params["enc_norm"], x, cfg.norm)
+
+
+def forward_hidden(params, tokens: jax.Array, cfg: ModelConfig, *,
+                   extra: Optional[Dict[str, jax.Array]] = None,
+                   remat: str = "block") -> Tuple[jax.Array, jax.Array]:
+    """tokens [B, T] -> (final hidden states [B, T_total, D], aux_loss).
+
+    extra["frames"]  (audio): [B, encoder_ctx, D] stub frame embeddings.
+    extra["patches"] (vlm):   [B, n_vision_tokens, D] stub patch embeddings —
+    prepended to the token sequence.
+    """
+    extra = extra or {}
+    x = embed_tokens(params["embed"], tokens, cfg)
+    B, T = tokens.shape
+    enc_out = None
+    if cfg.family == "vlm":
+        vis = extra["patches"].astype(cdtype(cfg))
+        vis = jnp.einsum("bvd,de->bve", vis, params["vis_proj"].astype(cdtype(cfg)))
+        x = jnp.concatenate([vis, x], axis=1)
+    if cfg.family == "audio":
+        enc_out = encode(params, extra["frames"], cfg, remat)
+        pos_tab = params["embed"]["positions"]
+        x = x + pos_tab[:T].astype(cdtype(cfg))[None]
+    positions = jnp.arange(x.shape[1])[None, :]
+    # pin the residual-stream layout (batch on data axes) before the blocks
+    x = shard_activation(x, DP, None, None)
+    x, aux = _scan_blocks_train(params["blocks"], x, cfg, positions, enc_out,
+                                decoder=True, remat=remat)
+    return norm_apply(params["final_norm"], x, cfg.norm), aux
+
+
+def forward_train(params, tokens: jax.Array, cfg: ModelConfig, *,
+                  extra: Optional[Dict[str, jax.Array]] = None,
+                  remat: str = "block") -> Tuple[jax.Array, jax.Array]:
+    """tokens [B, T] -> (logits [B, T_total, V], aux_loss)."""
+    x, aux = forward_hidden(params, tokens, cfg, extra=extra, remat=remat)
+    return lm_logits(params["embed"], x, cfg), aux
+
+
+# ----------------------------------------------------------------------
+# loss
+
+CE_CHUNK = 512  # tokens per chunked-cross-entropy step
+
+
+def lm_loss(params, batch: Dict[str, jax.Array], cfg: ModelConfig, *,
+            z_loss: float = 1e-4, moe_aux: float = 1e-2,
+            remat: str = "block") -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """batch: tokens [B,T], labels [B,T] (-1 = masked), optional extras.
+
+    Cross-entropy is computed in T-chunks with the vocab projection INSIDE
+    the (checkpointed) chunk scan — the full [B, T, V] fp32 logits tensor is
+    never materialised (command-r: 256k vocab x 4k seq would be 1.3 TB).
+    """
+    extra = {k: batch[k] for k in ("frames", "patches") if k in batch}
+    x, aux = forward_hidden(params, batch["tokens"], cfg,
+                            extra=extra, remat=remat)
+    labels = batch["labels"]
+    if cfg.family == "vlm":  # hidden covers [vis ; text]; loss on text only
+        x = x[:, cfg.n_vision_tokens:, :]
+    B, T, D = x.shape
+    from repro.models.attention import pick_chunk
+    chunk = pick_chunk(T, CE_CHUNK)
+    n_chunks = T // chunk
+    labels_safe = jnp.maximum(labels, 0)
+    mask = (labels >= 0).astype(jnp.float32)
+
+    def body(carry, inp):
+        nll_sum, z_sum = carry
+        xc, lc, mc = inp                                   # [B,chunk,·]
+        logits = lm_logits(params["embed"], xc, cfg).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        nll_sum = nll_sum + jnp.sum((logz - gold) * mc)
+        z_sum = z_sum + jnp.sum(jnp.square(logz) * mc)
+        return (nll_sum, z_sum), None
+
+    def split(t):
+        return jnp.moveaxis(t.reshape(B, n_chunks, chunk, *t.shape[2:]), 1, 0)
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    (nll_sum, z_sum), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (split(x), split(labels_safe), split(mask)))
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = nll_sum / denom
+    zl = z_loss * z_sum / denom
+    total = loss + zl + moe_aux * aux
+    return total, {"nll": loss, "z_loss": zl, "moe_aux": aux}

@@ -1,0 +1,106 @@
+"""Mixture-of-Experts FFN with sort-based top-k dispatch (MaxText-style).
+
+Tokens are replicated top_k times, stably sorted by assigned expert, placed
+into fixed-capacity per-expert slots (capacity-factor drop policy), run
+through batched expert matmuls, and combined back with routing weights.
+Everything is jit-able with static shapes; under pjit the [E, C, d] buffers
+are sharded on the "model" (expert) axis, which makes the dispatch/combine
+gathers lower to all-to-alls.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import cdtype, dense_init, pdtype
+
+def init_moe(key, cfg: ModelConfig):
+    e, d = cfg.n_experts, cfg.d_model
+    f = cfg.moe_d_ff or cfg.d_ff
+    keys = jax.random.split(key, 4)
+    dt = pdtype(cfg)
+    scale_in, scale_out = d ** -0.5, f ** -0.5
+
+    def ew(key, d_in, d_out, scale):
+        return (jax.random.normal(key, (e, d_in, d_out), jnp.float32)
+                * scale).astype(dt)
+
+    p = {"router": dense_init(keys[0], d, e, jnp.float32),
+         "up": ew(keys[1], d, f, scale_in),
+         "down": ew(keys[2], f, d, scale_out)}
+    if cfg.activation == "silu":
+        p["gate"] = ew(keys[3], d, f, scale_in)
+    return p
+
+
+def expert_capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    c = int(n_tokens * cfg.expert_top_k * cfg.moe_capacity_factor / cfg.n_experts)
+    return max(8, (c + 7) // 8 * 8)
+
+
+def moe_apply(p, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """x [B, T, D] -> (out [B, T, D], aux_loss scalar).
+
+    Dispatch is PER SEQUENCE (vmapped over B): the argsort / scatter /
+    gather stay local to each batch shard under GSPMD — a global sort over
+    B·T·K (token,expert) pairs would be all-gathered to every device
+    (measured: 398 GiB/device at qwen3's 32k prefill). Capacity is therefore
+    per-sequence (T·K·cf/E), a slightly stricter drop policy (documented).
+    The [B@data, E@model, C, ·] buffers give the expert einsums the standard
+    expert-parallel all-to-all pattern.
+    """
+    B, T, D = x.shape
+    E, K = cfg.n_experts, cfg.expert_top_k
+    C = expert_capacity(T, cfg)
+    dt = cdtype(cfg)
+
+    logits = jnp.einsum("btd,de->bte", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                    # [B, T, E]
+    top_p, top_e = jax.lax.top_k(probs, K)                     # [B, T, K]
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)     # renormalise
+
+    # load-balancing aux loss (Switch): E * Σ_e f_e · p_e (global)
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.zeros((E,), jnp.float32).at[top_e.reshape(-1)].add(
+        jnp.ones((B * T * K,), jnp.float32)) / (B * T * K)
+    aux = E * jnp.sum(me * ce)
+
+    def dispatch_one(xf, te, tp):
+        """xf [T,D]; te/tp [T,K] -> (buf [E,C,D], slot, st, contrib)."""
+        NK = T * K
+        flat_e = te.reshape(-1)
+        flat_p = tp.reshape(-1)
+        flat_tok = jnp.arange(NK, dtype=jnp.int32) // K
+        order = jnp.argsort(flat_e, stable=True)
+        se, sp, st = flat_e[order], flat_p[order], flat_tok[order]
+        first_idx = jnp.searchsorted(se, jnp.arange(E), side="left")
+        pos = jnp.arange(NK) - first_idx[se]
+        keep = pos < C
+        slot = jnp.where(keep, se * C + pos, E * C)
+        buf = jnp.zeros((E * C + 1, D), dt).at[slot].set(
+            xf[st].astype(dt), mode="drop")
+        contrib = jnp.where(keep, sp, 0.0).astype(jnp.float32)
+        return buf[:-1].reshape(E, C, D), slot, st, contrib
+
+    buf, slot, st, contrib = jax.vmap(dispatch_one)(x, top_e, top_p)
+
+    # ---- expert compute (batched over B and E; E sharded on "model") ----
+    up = jnp.einsum("becd,edf->becf", buf, p["up"].astype(dt))
+    if cfg.activation == "silu":
+        gate = jnp.einsum("becd,edf->becf", buf, p["gate"].astype(dt))
+        h = jax.nn.silu(gate.astype(jnp.float32)).astype(dt) * up
+    else:
+        h = jax.nn.gelu(up.astype(jnp.float32)).astype(dt)
+    out_buf = jnp.einsum("becf,efd->becd", h, p["down"].astype(dt))
+
+    def combine_one(out_flat2, slot, st, contrib):
+        safe_slot = jnp.minimum(slot, E * C - 1)
+        gathered = out_flat2.reshape(E * C, D)[safe_slot].astype(jnp.float32)
+        gathered = gathered * contrib[:, None]
+        return jnp.zeros((T, D), jnp.float32).at[st].add(gathered)
+
+    out = jax.vmap(combine_one)(out_buf, slot, st, contrib)
+    return out.astype(dt), aux

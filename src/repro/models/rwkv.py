@@ -1,0 +1,147 @@
+"""RWKV6 "Finch" blocks — attention-free, data-dependent decay (arXiv:2404.05892).
+
+Implements the WKV6 recurrence with per-channel data-dependent decay:
+
+    S_t = diag(w_t) · S_{t-1} + k_tᵀ v_t          (state  [B, H, hs, hs])
+    o_t = r_t · (S_{t-1} + diag(u·k_t) v_t)
+
+Training/prefill runs the recurrence with ``lax.scan`` over time (single HLO
+while-loop — compile-friendly at 500k tokens); decode is the O(1) single-step
+update, which is why this arch (no KV cache — Mustafar inapplicable, see
+DESIGN.md) runs the ``long_500k`` shape natively.
+
+Simplifications vs the full release (documented): static token-shift mix
+coefficients (RWKV5-style lerp) for r/k/v/g; the *decay* keeps the Finch
+signature — a per-token LoRA: w_t = exp(-exp(w0 + tanh(x·A)·B)).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import cdtype, dense_init, norm_apply, pdtype
+
+DECAY_LORA = 64
+
+
+def init_rwkv_time_mix(key, cfg: ModelConfig):
+    d = cfg.d_model
+    hs = cfg.rwkv_head_size
+    H = d // hs
+    keys = jax.random.split(key, 10)
+    dt = pdtype(cfg)
+    p = {
+        "wr": dense_init(keys[0], d, d, dt),
+        "wk": dense_init(keys[1], d, d, dt),
+        "wv": dense_init(keys[2], d, d, dt),
+        "wg": dense_init(keys[3], d, d, dt),
+        "wo": dense_init(keys[4], d, d, dt),
+        # token-shift mix coefficients in [0,1]
+        "mix_r": jnp.full((d,), 0.5, dt), "mix_k": jnp.full((d,), 0.5, dt),
+        "mix_v": jnp.full((d,), 0.5, dt), "mix_g": jnp.full((d,), 0.5, dt),
+        "mix_w": jnp.full((d,), 0.5, dt),
+        # data-dependent decay LoRA (Finch): w0 + tanh(x A) B
+        "w0": jnp.zeros((d,), jnp.float32),
+        "wA": dense_init(keys[5], d, DECAY_LORA, jnp.float32),
+        "wB": dense_init(keys[6], DECAY_LORA, d, jnp.float32, scale=0.01),
+        "u": (jax.random.normal(keys[7], (H, hs), jnp.float32) * 0.1),
+        # per-head group norm on the wkv output
+        "ln_x_scale": jnp.ones((d,), dt), "ln_x_bias": jnp.zeros((d,), dt),
+    }
+    return p
+
+
+def init_rwkv_channel_mix(key, cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    keys = jax.random.split(key, 2)
+    dt = pdtype(cfg)
+    return {"cm_k": dense_init(keys[0], d, f, dt),
+            "cm_v": dense_init(keys[1], f, d, dt),
+            "mix_k": jnp.full((d,), 0.5, dt)}
+
+
+def _token_shift(x: jax.Array, prev: jax.Array) -> jax.Array:
+    """x [B,T,D]; prev [B,D] (last token of previous segment) -> shifted x."""
+    return jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _wkv_scan(r, k, v, w, u, state):
+    """Run the WKV6 recurrence over time.
+
+    r/k/v/w: [B, T, H, hs]; u: [H, hs]; state: [B, H, hs, hs] fp32.
+    Returns (out [B, T, H, hs] fp32, new_state).
+    """
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp            # [B, H, hs]
+        kv = k_t[..., :, None] * v_t[..., None, :]           # [B,H,hs,hs]
+        out = jnp.einsum("bhi,bhij->bhj", r_t, S + u[..., :, None] * kv)
+        S = w_t[..., :, None] * S + kv
+        return S, out
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))  # time-major
+    state, out = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(out, 0, 1), state
+
+
+def rwkv_time_mix(p, x: jax.Array, cfg: ModelConfig,
+                  shift_state: jax.Array, wkv_state: jax.Array):
+    """x [B,T,D] -> (out, (new_shift, new_wkv))."""
+    B, T, D = x.shape
+    hs = cfg.rwkv_head_size
+    H = D // hs
+    dt = cdtype(cfg)
+    xs = _token_shift(x, shift_state)
+
+    def mixed(name):
+        m = p["mix_" + name].astype(dt)
+        return x * m + xs * (1.0 - m)
+
+    r = jnp.einsum("btd,de->bte", mixed("r"), p["wr"].astype(dt))
+    k = jnp.einsum("btd,de->bte", mixed("k"), p["wk"].astype(dt))
+    v = jnp.einsum("btd,de->bte", mixed("v"), p["wv"].astype(dt))
+    g = jnp.einsum("btd,de->bte", mixed("g"), p["wg"].astype(dt))
+    xw = mixed("w").astype(jnp.float32)
+    # Finch data-dependent decay
+    lora = jnp.tanh(xw @ p["wA"]) @ p["wB"]
+    w = jnp.exp(-jnp.exp(p["w0"] + lora))                    # (0,1), [B,T,D]
+
+    shp = (B, T, H, hs)
+    out, wkv_state = _wkv_scan(
+        r.reshape(shp).astype(jnp.float32), k.reshape(shp).astype(jnp.float32),
+        v.reshape(shp).astype(jnp.float32), w.reshape(shp),
+        p["u"], wkv_state)
+
+    # per-head group norm
+    mu = jnp.mean(out, axis=-1, keepdims=True)
+    var = jnp.var(out, axis=-1, keepdims=True)
+    out = (out - mu) * jax.lax.rsqrt(var + 1e-5)
+    out = out.reshape(B, T, D) * p["ln_x_scale"].astype(jnp.float32) \
+        + p["ln_x_bias"].astype(jnp.float32)
+    out = out.astype(dt) * jax.nn.silu(g.astype(jnp.float32)).astype(dt)
+    y = jnp.einsum("btd,de->bte", out, p["wo"].astype(dt))
+    return y, (x[:, -1, :], wkv_state)
+
+
+def rwkv_channel_mix(p, x: jax.Array, cfg: ModelConfig, shift_state: jax.Array):
+    dt = cdtype(cfg)
+    xs = _token_shift(x, shift_state)
+    m = p["mix_k"].astype(dt)
+    xk = x * m + xs * (1.0 - m)
+    h = jnp.square(jax.nn.relu(
+        jnp.einsum("btd,df->btf", xk, p["cm_k"].astype(dt))))
+    y = jnp.einsum("btf,fd->btd", h, p["cm_v"].astype(dt))
+    return y, x[:, -1, :]
+
+
+def rwkv_state_shapes(cfg: ModelConfig, B: int):
+    """Per-layer decode state: (tm_shift [B,D], wkv [B,H,hs,hs], cm_shift [B,D])."""
+    hs = cfg.rwkv_head_size
+    H = cfg.d_model // hs
+    return {
+        "tm_shift": (B, cfg.d_model),
+        "wkv": (B, H, hs, hs),
+        "cm_shift": (B, cfg.d_model),
+    }

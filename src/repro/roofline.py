@@ -1,0 +1,244 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Per (arch × shape × mesh):
+    compute term    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory term     = HLO_bytes / (chips × HBM_bw)
+    collective term = collective_bytes / (chips × link_bw)
+
+``cost_analysis()`` numbers are *per device* on the post-SPMD module, so no
+chip division is applied to them; collective bytes are parsed per-device from
+``compiled.as_text()``.
+
+Scan correction: XLA counts a while-loop body once, not trip_count times.
+The layer scan is unrolled at dry-run (REPRO_UNROLL_LAYERS), but the *time*
+scans (RWKV WKV, Mamba SSM, chunked attention) stay loops — their remaining
+(trip-1)·body cost is added analytically below and reported separately so
+the raw and corrected numbers are both visible.
+"""
+from __future__ import annotations
+
+import os
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+# TPU v5e-class constants (per assignment)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<result>[^=]*?)\s*"
+    r"(?P<kind>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<suffix>-start|-done)?\(")
+_SHAPE_RE = re.compile(r"\b(f64|f32|f16|bf16|s64|u64|s32|u32|s16|u16|s8|u8|"
+                       r"pred|f8e4m3fn|f8e5m2)\[([0-9,]*)\]")
+
+# bytes moved per device ≈ weight × result bytes (ring algorithms):
+# all-reduce moves ~2× the tensor (reduce-scatter + all-gather phases).
+_KIND_WEIGHT = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes_from_hlo(hlo_text: str,
+                              cond_amortize: float = 1.0) -> Dict[str, int]:
+    """Per-device collective traffic parsed from the post-SPMD module.
+
+    HLO call operands are bare ``%names`` (no types), so the RESULT shape of
+    each collective is used (= operand shape for all-reduce/all-to-all/
+    permute; = gathered shape for all-gather; ring all-reduce weighted 2x).
+    Async pairs (-start/-done) are counted once.
+
+    ``cond_amortize`` down-weights collectives inside conditional branches
+    (op_name contains "/cond/"): XLA cost analysis sums both branches every
+    step, but e.g. the decode compaction branch fires once per tile_tokens
+    steps. Amortized bytes are also reported under a ``*_cond`` key.
+    """
+    out: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if m is None:
+            continue
+        if m.group("suffix") == "-done":
+            continue
+        kind = m.group("kind").lower()
+        total = sum(_shape_bytes(t, d)
+                    for t, d in _SHAPE_RE.findall(m.group("result")))
+        total = int(total * _KIND_WEIGHT.get(kind, 1.0))
+        if cond_amortize != 1.0 and "/cond/" in line:
+            out[kind + "_cond"] = out.get(kind + "_cond", 0) + total
+            total = int(total * cond_amortize)
+        out[kind] = out.get(kind, 0) + total
+    return out
+
+
+@dataclass
+class RooflineTerms:
+    flops: float                   # per-device
+    bytes_hbm: float               # per-device
+    bytes_collective: float        # per-device
+    coll_breakdown: Dict[str, int] = field(default_factory=dict)
+    correction_flops: float = 0.0
+    correction_bytes: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return (self.flops + self.correction_flops) / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return (self.bytes_hbm + self.correction_bytes) / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.bytes_collective / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    def as_dict(self) -> Dict:
+        return {
+            "flops_per_dev": self.flops,
+            "bytes_per_dev": self.bytes_hbm,
+            "coll_bytes_per_dev": self.bytes_collective,
+            "coll_breakdown": self.coll_breakdown,
+            "corr_flops": self.correction_flops,
+            "corr_bytes": self.correction_bytes,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+        }
+
+
+def terms_from_compiled(compiled, n_chips: int,
+                        corr_flops: float = 0.0,
+                        corr_bytes: float = 0.0,
+                        cond_amortize: float = 1.0) -> RooflineTerms:
+    ca = compiled.cost_analysis()
+    flops = float(ca.get("flops", 0.0))
+    bytes_hbm = float(ca.get("bytes accessed", 0.0))
+    coll = collective_bytes_from_hlo(compiled.as_text(), cond_amortize)
+    total = sum(v for k, v in coll.items() if not k.endswith("_cond"))
+    return RooflineTerms(flops, bytes_hbm, float(total), coll,
+                         corr_flops / n_chips, corr_bytes / n_chips)
+
+
+# ----------------------------------------------------------------------
+# analytic corrections for loops left as scans (global numbers; divided by
+# chips by the caller)
+
+def scan_corrections(cfg: ModelConfig, shape: ShapeConfig,
+                     mode: str, train_factor: float = 3.0) -> Dict[str, float]:
+    """(flops, bytes) NOT counted by cost_analysis because they sit inside a
+    while-loop body that executes trip>1 times. ``train_factor`` accounts for
+    fwd+bwd (~3x) on those bodies in training mode."""
+    B, T = shape.global_batch, shape.seq_len
+    fl = 0.0
+    by = 0.0
+    if mode == "train":
+        # chunked cross-entropy scan: vocab matmul counted once, runs
+        # T/CE_CHUNK times (fwd+bwd)
+        from repro.models.model import CE_CHUNK
+        from repro.models.attention import pick_chunk as _pc
+        ce_chunk = _pc(T, CE_CHUNK)
+        n_ce = T // ce_chunk
+        if n_ce > 1:
+            body_fl = 2.0 * B * ce_chunk * cfg.d_model * cfg.vocab_size
+            body_by = cfg.d_model * cfg.vocab_size * 2     # W_vocab reread
+            fl += (n_ce - 1) * body_fl * train_factor
+            by += (n_ce - 1) * body_by * train_factor
+        # chunked causal attention scan: counted once, runs n_chunks times
+        from repro.models.attention import (CHUNKED_ATTN_THRESHOLD,
+                                            pick_chunk)
+        if T >= CHUNKED_ATTN_THRESHOLD and not cfg.is_attention_free:
+            c = pick_chunk(T)
+            n_chunks = T // c
+            n_attn = len(cfg.attention_layers())
+            body_fl = 4.0 * B * cfg.n_heads * c * T * cfg.d_head
+            body_by = 2.0 * B * cfg.n_kv_heads * T * cfg.d_head * 2  # K,V reread
+            fl += (n_chunks - 1) * n_attn * body_fl * train_factor
+            by += (n_chunks - 1) * n_attn * body_by * train_factor
+        if cfg.family == "ssm":
+            H = cfg.d_model // cfg.rwkv_head_size
+            hs = cfg.rwkv_head_size
+            body = 6.0 * B * H * hs * hs            # wkv update+readout
+            fl += (T - 1) * cfg.n_layers * body * train_factor
+        if cfg.family == "hybrid":
+            n_mamba = cfg.n_layers - len(cfg.attention_layers())
+            din = cfg.mamba_expand * cfg.d_model
+            body = 6.0 * B * din * cfg.mamba_d_state
+            fl += (T - 1) * n_mamba * body * train_factor
+    elif mode == "prefill":
+        from repro.models.attention import (CHUNKED_ATTN_THRESHOLD,
+                                            pick_chunk)
+        if T >= CHUNKED_ATTN_THRESHOLD and not cfg.is_attention_free:
+            c = pick_chunk(T)
+            n_chunks = T // c
+            n_attn = len(cfg.attention_layers())
+            body_fl = 4.0 * B * cfg.n_heads * c * T * cfg.d_head
+            body_by = 2.0 * B * cfg.n_kv_heads * T * cfg.d_head * 2
+            fl += (n_chunks - 1) * n_attn * body_fl
+            by += (n_chunks - 1) * n_attn * body_by
+        if cfg.family == "ssm":
+            H = cfg.d_model // cfg.rwkv_head_size
+            hs = cfg.rwkv_head_size
+            fl += (T - 1) * cfg.n_layers * 6.0 * B * H * hs * hs
+        if cfg.family == "hybrid":
+            n_mamba = cfg.n_layers - len(cfg.attention_layers())
+            din = cfg.mamba_expand * cfg.d_model
+            fl += (T - 1) * n_mamba * 6.0 * B * din * cfg.mamba_d_state
+    elif mode == "decode" and cfg.mustafar.enabled and not cfg.is_attention_free:
+        # chunked online-softmax decode scan over the compressed pools:
+        # body counted once, runs n_chunks times
+        from repro.core.attention import DECODE_CHUNK
+        from repro.serving.cache import plan_pools
+        Tc, _ = plan_pools(cfg, T + cfg.mustafar.tile_tokens * 2, batch=B)
+        chunk = min(DECODE_CHUNK, Tc)
+        n_chunks = Tc // chunk
+        if n_chunks > 1:
+            m = cfg.mustafar
+            d = cfg.d_head
+            kk = m.keep_k(d, m.key_sparsity)
+            kv = m.keep_k(d, m.value_sparsity)
+            n_attn = len(cfg.attention_layers())
+            itemsize = 2
+            # per-chunk: read compressed K+V chunk, decompress, 2 matvecs
+            body_by = B * cfg.n_kv_heads * chunk * (
+                (kk + kv) * itemsize + 2 * (d // 8))
+            body_fl = 4.0 * B * cfg.n_heads * chunk * d \
+                + 2.0 * B * cfg.n_kv_heads * chunk * d * 2   # decompress ops
+            fl += (n_chunks - 1) * n_attn * body_fl
+            by += (n_chunks - 1) * n_attn * body_by
+    return {"flops": fl, "bytes": by}
+
+
+# ----------------------------------------------------------------------
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE) for training;
+    2·N_active·D per generated token batch for decode; 2·N·D for prefill."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch          # decode: one token each

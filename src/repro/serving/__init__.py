@@ -1,0 +1,3 @@
+"""Serving: Mustafar KV-cache manager, prefill/decode engine, sampler."""
+from repro.serving.cache import cache_hbm_bytes, init_cache, plan_pools
+from repro.serving.engine import Engine, decode_step, prefill

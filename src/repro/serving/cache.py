@@ -1,0 +1,219 @@
+"""Mustafar KV-cache manager (paper §3 + Appendix C, TPU static-shape form).
+
+Per attention layer the cache is split into
+  * compressed pools — fixed-k bitmap format, preallocated to the max
+    context: values [P, B, Hkv, Tc_max, k] + bitmap [P, B, Hkv, Tc_max, W32]
+    for K and V (P = stacked periods for lax.scan);
+  * a dense local window buffer [P, B, Hkv, Wbuf, d] with
+    Wbuf = local_window + tile_tokens. Tokens append densely; every time the
+    buffer fills, the oldest ``tile_tokens`` (a tile group, paper Appx. C)
+    are pruned+compressed into the pools and the window rolls left.
+
+All updates are pure-functional ``dynamic_update_slice``s under jit —
+the XLA/pjit analogue of the paper's CUDA-side cache pointer management.
+Mamba layers carry (conv, ssm) state, RWKV layers carry (shift, wkv) state,
+Whisper decoder layers additionally hold static cross-attention K/V.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.sparse_format import pad_to_words
+from repro.kernels import ops as kops
+from repro.models import mamba as mamba_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models.model import structural_period
+
+
+CONTEXT_SHARDS = 16  # production mesh "data" size; batch-1 pools shard Tc
+
+
+def plan_pools(cfg: ModelConfig, max_total_tokens: int,
+               batch: int = 0) -> Tuple[int, int]:
+    """(Tc_max, Wbuf): compressed-pool capacity and window buffer size.
+
+    Tc_max rounds up to the decode-attention chunk (4096) so the online-
+    softmax scan divides evenly; below one chunk it rounds to tile_tokens.
+    For batch-1 long-context serving the pools are context-parallel (Tc
+    sharded over "data"), so Tc additionally aligns to chunk×shards —
+    otherwise the chunk reshape crosses shard boundaries and GSPMD
+    all-gathers the whole pool (measured: 62 GiB/step at 524k)."""
+    from repro.core.attention import DECODE_CHUNK
+    m = cfg.mustafar
+    Wbuf = m.local_window + m.tile_tokens
+    unit = DECODE_CHUNK if max_total_tokens >= DECODE_CHUNK else m.tile_tokens
+    if batch == 1 and max_total_tokens >= DECODE_CHUNK * CONTEXT_SHARDS:
+        unit = DECODE_CHUNK * CONTEXT_SHARDS
+    Tc_max = (max_total_tokens + unit - 1) // unit * unit
+    return Tc_max, Wbuf
+
+
+def layer_cache_shapes(cfg: ModelConfig, kind: str, B: int,
+                       max_total_tokens: int, enc_ctx: int = 0) -> Dict[str, Any]:
+    """Shape/dtype spec for one layer kind (without the stacked period dim)."""
+    d = cfg.d_head
+    Hkv = cfg.n_kv_heads
+    W32 = pad_to_words(d) // 32
+    m = cfg.mustafar
+    cdt = jnp.dtype(cfg.dtype)
+    if kind == "attn":
+        Tc_max, Wbuf = plan_pools(cfg, max_total_tokens, batch=B)
+        if m.enabled:
+            kk = m.keep_k(d, m.key_sparsity)
+            kv = m.keep_k(d, m.value_sparsity)
+            spec = {
+                "ck_vals": ((B, Hkv, Tc_max, kk), cdt),
+                "ck_bm": ((B, Hkv, Tc_max, W32), jnp.uint32),
+                "cv_vals": ((B, Hkv, Tc_max, kv), cdt),
+                "cv_bm": ((B, Hkv, Tc_max, W32), jnp.uint32),
+                "k_win": ((B, Hkv, Wbuf, d), cdt),
+                "v_win": ((B, Hkv, Wbuf, d), cdt),
+            }
+        else:
+            spec = {
+                "k": ((B, Hkv, max_total_tokens, d), cdt),
+                "v": ((B, Hkv, max_total_tokens, d), cdt),
+            }
+        if cfg.family == "audio":
+            spec["cross_k"] = ((B, enc_ctx, Hkv, d), cdt)
+            spec["cross_v"] = ((B, enc_ctx, Hkv, d), cdt)
+        return spec
+    if kind == "mamba":
+        st = mamba_mod.mamba_state_shapes(cfg, B)
+        return {"conv": (st["conv"], jnp.float32), "ssm": (st["ssm"], jnp.float32)}
+    # rwkv
+    st = rwkv_mod.rwkv_state_shapes(cfg, B)
+    return {"tm_shift": (st["tm_shift"], cdt), "wkv": (st["wkv"], jnp.float32),
+            "cm_shift": (st["cm_shift"], cdt)}
+
+
+def init_cache(cfg: ModelConfig, B: int, max_total_tokens: int,
+               enc_ctx: int = 0):
+    """Zero-filled cache pytree: (blocks=tuple over period positions of
+    stacked [n_periods, ...] dicts, position=0, w_len=0, n_compressed=0)."""
+    period = structural_period(cfg)
+    n_periods = cfg.n_layers // period
+    blocks = []
+    for j in range(period):
+        spec = layer_cache_shapes(cfg, cfg.layer_kind(j), B,
+                                  max_total_tokens, enc_ctx)
+        blocks.append({k: jnp.zeros((n_periods,) + shp, dt)
+                       for k, (shp, dt) in spec.items()})
+    return {
+        "blocks": tuple(blocks),
+        "position": jnp.zeros((), jnp.int32),       # total tokens so far
+        "w_len": jnp.zeros((), jnp.int32),          # valid window tokens
+        "n_compressed": jnp.zeros((), jnp.int32),   # tokens in pools
+    }
+
+
+# ----------------------------------------------------------------------
+# compaction (tile-group retirement: window -> compressed pools)
+
+def compact_layer(cfg: ModelConfig, lc: Dict[str, jax.Array],
+                  n_compressed: jax.Array) -> Dict[str, jax.Array]:
+    """Compress the oldest tile_tokens of the window into the pools and
+    roll the window left. Call only on attention-layer caches (no period
+    dim — operates inside the scan body on a single layer slice)."""
+    m = cfg.mustafar
+    d = cfg.d_head
+    tt = m.tile_tokens
+    kk = m.keep_k(d, m.key_sparsity)
+    kv = m.keep_k(d, m.value_sparsity)
+
+    k_tile = lc["k_win"][:, :, :tt, :]                 # [B,Hkv,tt,d]
+    v_tile = lc["v_win"][:, :, :tt, :]
+    ck_v, ck_b = kops.compress(k_tile, kk)
+    cv_v, cv_b = kops.compress(v_tile, kv)
+
+    def upd(pool, tile):
+        return jax.lax.dynamic_update_slice(
+            pool, tile.astype(pool.dtype), (0, 0, n_compressed, 0))
+
+    out = dict(lc)
+    out["ck_vals"] = upd(lc["ck_vals"], ck_v)
+    out["ck_bm"] = upd(lc["ck_bm"], ck_b)
+    out["cv_vals"] = upd(lc["cv_vals"], cv_v)
+    out["cv_bm"] = upd(lc["cv_bm"], cv_b)
+    # roll the window left by tile_tokens (retired tokens drop out)
+    out["k_win"] = jnp.roll(lc["k_win"], -tt, axis=2)
+    out["v_win"] = jnp.roll(lc["v_win"], -tt, axis=2)
+    return out
+
+
+def append_window(lc: Dict[str, jax.Array], k_new: jax.Array, v_new: jax.Array,
+                  w_len: jax.Array) -> Dict[str, jax.Array]:
+    """Append one token's K/V [B, Hkv, 1, d] at window position w_len."""
+    out = dict(lc)
+    out["k_win"] = jax.lax.dynamic_update_slice(
+        lc["k_win"], k_new.astype(lc["k_win"].dtype), (0, 0, w_len, 0))
+    out["v_win"] = jax.lax.dynamic_update_slice(
+        lc["v_win"], v_new.astype(lc["v_win"].dtype), (0, 0, w_len, 0))
+    return out
+
+
+def prefill_split(cfg: ModelConfig, T: int) -> Tuple[int, int]:
+    """(compressible_tokens, window_tokens) for a prefill of length T."""
+    m = cfg.mustafar
+    comp = max(0, (T - m.local_window) // m.tile_tokens) * m.tile_tokens
+    return comp, T - comp
+
+
+def build_layer_cache_from_prefill(cfg: ModelConfig, k: jax.Array, v: jax.Array,
+                                   max_total_tokens: int,
+                                   cross_kv=None) -> Dict[str, jax.Array]:
+    """k/v [B, T, Hkv, d] from a dense prefill -> one layer's Mustafar cache
+    (no period dim; the engine scans this per layer)."""
+    B, T, Hkv, d = k.shape
+    m = cfg.mustafar
+    kT = jnp.swapaxes(k, 1, 2)                         # [B,Hkv,T,d]
+    vT = jnp.swapaxes(v, 1, 2)
+    spec = layer_cache_shapes(cfg, "attn", B, max_total_tokens,
+                              enc_ctx=cross_kv[0].shape[1] if cross_kv else 0)
+    lc = {name: jnp.zeros(shp, dt) for name, (shp, dt) in spec.items()}
+    if m.enabled:
+        comp, win = prefill_split(cfg, T)
+        kk = m.keep_k(d, m.key_sparsity)
+        kv_ = m.keep_k(d, m.value_sparsity)
+        if comp > 0:
+            ck_v, ck_b = kops.compress(kT[:, :, :comp], kk)
+            cv_v, cv_b = kops.compress(vT[:, :, :comp], kv_)
+            lc["ck_vals"] = jax.lax.dynamic_update_slice(
+                lc["ck_vals"], ck_v.astype(lc["ck_vals"].dtype), (0, 0, 0, 0))
+            lc["ck_bm"] = jax.lax.dynamic_update_slice(lc["ck_bm"], ck_b, (0, 0, 0, 0))
+            lc["cv_vals"] = jax.lax.dynamic_update_slice(
+                lc["cv_vals"], cv_v.astype(lc["cv_vals"].dtype), (0, 0, 0, 0))
+            lc["cv_bm"] = jax.lax.dynamic_update_slice(lc["cv_bm"], cv_b, (0, 0, 0, 0))
+        lc["k_win"] = jax.lax.dynamic_update_slice(
+            lc["k_win"], kT[:, :, comp:].astype(lc["k_win"].dtype), (0, 0, 0, 0))
+        lc["v_win"] = jax.lax.dynamic_update_slice(
+            lc["v_win"], vT[:, :, comp:].astype(lc["v_win"].dtype), (0, 0, 0, 0))
+    else:
+        lc["k"] = jax.lax.dynamic_update_slice(
+            lc["k"], kT.astype(lc["k"].dtype), (0, 0, 0, 0))
+        lc["v"] = jax.lax.dynamic_update_slice(
+            lc["v"], vT.astype(lc["v"].dtype), (0, 0, 0, 0))
+    if cross_kv is not None:
+        lc["cross_k"], lc["cross_v"] = cross_kv
+    return lc
+
+
+def cache_hbm_bytes(cfg: ModelConfig, B: int, max_total_tokens: int) -> Dict[str, int]:
+    """Static accounting of cache memory (dense vs Mustafar) — Fig. 6b terms."""
+    itemsize = jnp.dtype(cfg.dtype).itemsize
+    d, Hkv = cfg.d_head, cfg.n_kv_heads
+    n_attn = len(cfg.attention_layers())
+    dense = n_attn * B * Hkv * max_total_tokens * d * 2 * itemsize
+    m = cfg.mustafar
+    Tc_max, Wbuf = plan_pools(cfg, max_total_tokens, batch=B)
+    W32 = pad_to_words(d) // 32
+    kk = m.keep_k(d, m.key_sparsity)
+    kv = m.keep_k(d, m.value_sparsity)
+    must = n_attn * B * Hkv * (
+        Tc_max * ((kk + kv) * itemsize + 2 * W32 * 4) + 2 * Wbuf * d * itemsize)
+    return {"dense": dense, "mustafar": must,
+            "ratio": must / max(dense, 1)}

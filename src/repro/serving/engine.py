@@ -1,0 +1,296 @@
+"""Batched serving engine: dense/flash prefill + Mustafar decode.
+
+``prefill``  — full-sequence forward (FlashAttention-compatible, paper §3),
+               then prune+compress everything older than the local window
+               into the bitmap pools (tile groups of 64).
+``decode_step`` — one token for the whole batch: appends to the dense local
+               window, runs the two-part (compressed ⊕ window) attention,
+               and every ``tile_tokens`` steps retires the oldest tile group
+               from the window into the pools (lax.cond — static shapes).
+
+Both are pure functions of (params, inputs, cache) so they pjit cleanly;
+``serve_step`` for the dry-run grid is ``decode_step`` under the production
+mesh. The Engine class wraps them with jit and a sampling loop.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.attention import (MustafarCacheView, decode_attention_dense,
+                                  decode_attention_mustafar,
+                                  decode_attention_mustafar_chunked)
+from repro.models import attention as attn
+from repro.models import mamba as mamba_mod
+from repro.models import moe as moe_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models.layers import (cdtype, embed_tokens, lm_logits, mlp_apply,
+                                 norm_apply)
+from repro.models.model import (encode, layer_scan_unroll, structural_period)
+from repro.serving import cache as cache_mod
+from repro.sharding.constraints import DP, shard_activation
+
+
+# ----------------------------------------------------------------------
+# ffn dispatch shared by prefill/decode
+
+def _ffn(bp, h, cfg: ModelConfig, kind: str, ffn_kind: str,
+         cm_state: Optional[jax.Array] = None):
+    if ffn_kind == "moe":
+        out, _ = moe_mod.moe_apply(bp["ffn"], h, cfg)
+        return out, None
+    if kind == "rwkv":
+        B = h.shape[0]
+        st = cm_state if cm_state is not None else jnp.zeros(
+            (B, cfg.d_model), h.dtype)
+        out, new_st = rwkv_mod.rwkv_channel_mix(bp["ffn"], h, cfg, st)
+        return out, new_st
+    return mlp_apply(bp["ffn"], h, cfg), None
+
+
+# ----------------------------------------------------------------------
+# prefill
+
+def prefill(params, tokens: jax.Array, cfg: ModelConfig,
+            max_total_tokens: int,
+            extra: Optional[Dict[str, jax.Array]] = None):
+    """tokens [B, T] -> (logits [B, V] at last position, cache).
+
+    extra carries the stub modality inputs (frames / patches).
+    """
+    extra = extra or {}
+    B, T = tokens.shape
+    x = embed_tokens(params["embed"], tokens, cfg)
+    enc_out = None
+    enc_ctx = 0
+    if cfg.family == "vlm":
+        vis = extra["patches"].astype(cdtype(cfg))
+        vis = jnp.einsum("bvd,de->bve", vis,
+                         params["vis_proj"].astype(cdtype(cfg)))
+        x = jnp.concatenate([vis, x], axis=1)
+    if cfg.family == "audio":
+        enc_out = encode(params, extra["frames"], cfg, remat="none")
+        enc_ctx = enc_out.shape[1]
+        x = x + params["embed"]["positions"][:T].astype(cdtype(cfg))[None]
+    T_total = x.shape[1]
+    x = shard_activation(x, DP, None, None)
+    positions = jnp.arange(T_total)[None, :]
+    period = structural_period(cfg)
+
+    def body(carry, bp_period):
+        x = carry
+        caches = []
+        for j in range(period):
+            bp = bp_period[j]
+            kind = cfg.layer_kind(j)
+            h = norm_apply(bp["norm1"], x, cfg.norm)
+            if kind == "attn":
+                q, k, v = attn.qkv_proj(bp["mixer"], h, cfg, positions)
+                core = attn.causal_attention(q, k, v, cfg)
+                x = x + attn.o_proj(bp["mixer"], core, cfg)
+                cross_kv = None
+                if cfg.family == "audio":
+                    hc = norm_apply(bp["norm_cross"], x, cfg.norm)
+                    cross_kv = attn.encoder_kv(bp["cross"], enc_out, cfg)
+                    x = x + attn.cross_attention_block(bp["cross"], hc,
+                                                       cross_kv, cfg)
+                lc = cache_mod.build_layer_cache_from_prefill(
+                    cfg, k, v, max_total_tokens, cross_kv)
+            elif kind == "mamba":
+                st = mamba_mod.mamba_state_shapes(cfg, B)
+                mix, (conv_st, ssm_st) = mamba_mod.mamba_apply(
+                    bp["mixer"], h, cfg, jnp.zeros(st["conv"], jnp.float32),
+                    jnp.zeros(st["ssm"], jnp.float32))
+                x = x + mix
+                lc = {"conv": conv_st, "ssm": ssm_st}
+            else:  # rwkv
+                st = rwkv_mod.rwkv_state_shapes(cfg, B)
+                mix, (tm_shift, wkv) = rwkv_mod.rwkv_time_mix(
+                    bp["mixer"], h, cfg, jnp.zeros(st["tm_shift"], x.dtype),
+                    jnp.zeros(st["wkv"], jnp.float32))
+                x = x + mix
+                lc = {"tm_shift": tm_shift, "wkv": wkv}
+            h2 = norm_apply(bp["norm2"], x, cfg.norm)
+            f, cm_state = _ffn(bp, h2, cfg, kind, cfg.ffn_kind(j))
+            x = x + f
+            if kind == "rwkv":
+                lc["cm_shift"] = cm_state
+            caches.append(lc)
+        return x, tuple(caches)
+
+    x, block_caches = jax.lax.scan(body, x, params["blocks"],
+                                   unroll=layer_scan_unroll())
+    x = norm_apply(params["final_norm"], x, cfg.norm)
+    logits = lm_logits(params["embed"], x[:, -1:, :], cfg)[:, 0, :]
+
+    comp, win = cache_mod.prefill_split(cfg, T_total)
+    m = cfg.mustafar
+    cache = {
+        "blocks": block_caches,
+        "position": jnp.asarray(T_total, jnp.int32),
+        "w_len": jnp.asarray(win if m.enabled else 0, jnp.int32),
+        "n_compressed": jnp.asarray(comp if m.enabled else 0, jnp.int32),
+    }
+    return logits, cache
+
+
+# ----------------------------------------------------------------------
+# decode
+
+def _attn_decode(bp, h, cfg: ModelConfig, lc, position, w_len, n_compressed):
+    """One attention layer, one token. h [B,1,D] -> (out [B,1,D], new lc)."""
+    B = h.shape[0]
+    pos = jnp.broadcast_to(position, (B, 1))
+    q, k, v = attn.qkv_proj(bp["mixer"], h, cfg, pos)         # [B,1,H,dh]
+    m = cfg.mustafar
+    if m.enabled:
+        lc = cache_mod.append_window(lc, jnp.swapaxes(k, 1, 2),
+                                     jnp.swapaxes(v, 1, 2), w_len)
+        view = MustafarCacheView(
+            ck_values=lc["ck_vals"], ck_bitmap=lc["ck_bm"],
+            cv_values=lc["cv_vals"], cv_bitmap=lc["cv_bm"],
+            n_compressed=jnp.broadcast_to(n_compressed, (B,)),
+            k_window=lc["k_win"], v_window=lc["v_win"],
+            n_window=jnp.broadcast_to(w_len + 1, (B,)))
+        # path choice: the chunked scan bounds temp memory, but its reshape
+        # of the (possibly context-sharded) Tc dim defeats GSPMD propagation
+        # — measured 70 GiB/step of pool all-gathers at B=1/524k. Small
+        # decompressed sizes use the two-pass formulation (partial softmax
+        # over the Tc-sharded dim lowers to tiny all-reduces); big batches
+        # use the chunked scan (whole-pool decompression would be ~10 GiB).
+        if B == 1:
+            out = decode_attention_mustafar(q[:, 0], view,
+                                            scale=cfg.d_head ** -0.5)
+        else:
+            out = decode_attention_mustafar_chunked(q[:, 0], view,
+                                                    scale=cfg.d_head ** -0.5)
+    else:
+        lc = dict(lc)
+        lc["k"] = jax.lax.dynamic_update_slice(
+            lc["k"], jnp.swapaxes(k, 1, 2).astype(lc["k"].dtype),
+            (0, 0, position, 0))
+        lc["v"] = jax.lax.dynamic_update_slice(
+            lc["v"], jnp.swapaxes(v, 1, 2).astype(lc["v"].dtype),
+            (0, 0, position, 0))
+        out = decode_attention_dense(q[:, 0], lc["k"], lc["v"],
+                                     jnp.broadcast_to(position + 1, (B,)),
+                                     scale=cfg.d_head ** -0.5)
+    y = attn.o_proj(bp["mixer"],
+                    out[:, None, :, :].reshape(B, 1, cfg.n_heads, cfg.d_head),
+                    cfg)
+    return y, lc
+
+
+def decode_step(params, token: jax.Array, cache, cfg: ModelConfig):
+    """token [B] -> (logits [B, V], new cache). One step for the batch."""
+    B = token.shape[0]
+    m = cfg.mustafar
+    period = structural_period(cfg)
+
+    # --- tile-group compaction when the window buffer is full ---
+    if m.enabled and any(cfg.layer_kind(j) == "attn" for j in range(period)):
+        Wbuf = m.local_window + m.tile_tokens
+
+        def do_compact(c):
+            new_blocks = []
+            for j in range(period):
+                lc = c["blocks"][j]
+                if cfg.layer_kind(j) == "attn":
+                    lc = jax.vmap(lambda one: cache_mod.compact_layer(
+                        cfg, one, c["n_compressed"]))(lc)
+                new_blocks.append(lc)
+            out = dict(c)
+            out["blocks"] = tuple(new_blocks)
+            out["w_len"] = c["w_len"] - m.tile_tokens
+            out["n_compressed"] = c["n_compressed"] + m.tile_tokens
+            return out
+
+        cache = jax.lax.cond(cache["w_len"] >= Wbuf,
+                             do_compact, lambda c: c, cache)
+
+    x = embed_tokens(params["embed"], token[:, None], cfg)     # [B,1,D]
+    x = shard_activation(x, DP, None, None)
+    if cfg.family == "audio":
+        x = x + params["embed"]["positions"][cache["position"]][None, None]
+    position = cache["position"]
+    w_len = cache["w_len"]
+    n_comp = cache["n_compressed"]
+
+    def body(carry, xs):
+        x = carry
+        bp_period, lc_period = xs
+        new_caches = []
+        for j in range(period):
+            bp, lc = bp_period[j], lc_period[j]
+            kind = cfg.layer_kind(j)
+            h = norm_apply(bp["norm1"], x, cfg.norm)
+            if kind == "attn":
+                y, lc = _attn_decode(bp, h, cfg, lc, position, w_len, n_comp)
+                x = x + y
+                if cfg.family == "audio":
+                    hc = norm_apply(bp["norm_cross"], x, cfg.norm)
+                    x = x + attn.cross_attention_block(
+                        bp["cross"], hc, (lc["cross_k"], lc["cross_v"]), cfg)
+            elif kind == "mamba":
+                lc = dict(lc)
+                mix, (lc["conv"], lc["ssm"]) = mamba_mod.mamba_apply(
+                    bp["mixer"], h, cfg, lc["conv"], lc["ssm"])
+                x = x + mix
+            else:  # rwkv
+                lc = dict(lc)
+                mix, (lc["tm_shift"], lc["wkv"]) = rwkv_mod.rwkv_time_mix(
+                    bp["mixer"], h, cfg, lc["tm_shift"], lc["wkv"])
+                x = x + mix
+            h2 = norm_apply(bp["norm2"], x, cfg.norm)
+            f, cm_state = _ffn(bp, h2, cfg, kind, cfg.ffn_kind(j),
+                               lc.get("cm_shift"))
+            x = x + f
+            if kind == "rwkv":
+                lc["cm_shift"] = cm_state
+            new_caches.append(lc)
+        return x, tuple(new_caches)
+
+    x, new_blocks = jax.lax.scan(body, x, (params["blocks"], cache["blocks"]),
+                                 unroll=layer_scan_unroll())
+    x = norm_apply(params["final_norm"], x, cfg.norm)
+    logits = lm_logits(params["embed"], x, cfg)[:, 0, :]
+    new_cache = {
+        "blocks": new_blocks,
+        "position": position + 1,
+        "w_len": w_len + 1 if m.enabled else jnp.asarray(0, jnp.int32),
+        "n_compressed": n_comp,
+    }
+    return logits, new_cache
+
+
+# ----------------------------------------------------------------------
+class Engine:
+    """Jit-wrapped convenience driver for examples/benchmarks."""
+
+    def __init__(self, cfg: ModelConfig, params, max_total_tokens: int):
+        self.cfg = cfg
+        self.params = params
+        self.max_total = max_total_tokens
+        self._prefill = jax.jit(partial(prefill, cfg=cfg,
+                                        max_total_tokens=max_total_tokens))
+        self._decode = jax.jit(partial(decode_step, cfg=cfg))
+
+    def generate(self, tokens: jax.Array, n_new: int, *,
+                 temperature: float = 0.0, rng=None,
+                 extra: Optional[Dict[str, jax.Array]] = None) -> jax.Array:
+        from repro.serving.sampler import sample
+        logits, cache = self._prefill(self.params, tokens, extra=extra)
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        outs = []
+        tok = sample(logits, temperature, rng)
+        outs.append(tok)
+        for i in range(n_new - 1):
+            rng = jax.random.fold_in(rng, i)
+            logits, cache = self._decode(self.params, tok, cache)
+            tok = sample(logits, temperature, rng)
+            outs.append(tok)
+        return jnp.stack(outs, axis=1)                  # [B, n_new]

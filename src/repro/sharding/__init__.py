@@ -1,0 +1,4 @@
+"""Mesh-axis sharding rules for params, optimizer state, batches, caches."""
+from repro.sharding.specs import (batch_spec, cache_specs, data_axes,
+                                  opt_state_specs, param_specs, shaped,
+                                  to_named, train_batch_specs)

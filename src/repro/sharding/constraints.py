@@ -1,0 +1,61 @@
+"""Activation sharding constraints with a process-level mesh context.
+
+``jax.lax.with_sharding_constraint`` needs a concrete mesh when given bare
+PartitionSpecs; model code calls ``shard_activation`` which is a no-op unless
+a launcher (dryrun/train/serve) installed a mesh via ``constraint_mesh``.
+Axis entries are silently dropped when the axis is absent from the installed
+mesh or doesn't divide the dimension — the same graceful degradation as the
+param rules.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional, Sequence, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_MESH: Optional[Mesh] = None
+
+
+@contextlib.contextmanager
+def constraint_mesh(mesh: Optional[Mesh]):
+    global _MESH
+    prev = _MESH
+    _MESH = mesh
+    try:
+        yield
+    finally:
+        _MESH = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _MESH
+
+
+def _normalize(entry, dim: int, mesh: Mesh):
+    if entry is None:
+        return None
+    axes = (entry,) if isinstance(entry, str) else tuple(entry)
+    axes = tuple(a for a in axes if a in mesh.axis_names)
+    if not axes:
+        return None
+    size = int(np.prod([mesh.shape[a] for a in axes]))
+    if size == 1 or dim % size != 0:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def shard_activation(x: jax.Array, *entries) -> jax.Array:
+    """Constrain ``x`` to PartitionSpec(*entries) under the installed mesh.
+    No-op without a mesh (CPU tests) or on non-divisible/absent axes."""
+    mesh = _MESH
+    if mesh is None:
+        return x
+    assert len(entries) == x.ndim, (entries, x.shape)
+    norm = tuple(_normalize(e, d, mesh) for e, d in zip(entries, x.shape))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*norm)))
+
+
+DP = ("data", "pod")   # canonical batch axes tuple for model code

@@ -1,0 +1,245 @@
+"""Sharding rules: mesh axes (pod, data, model) → PartitionSpecs per tensor.
+
+Training posture (DESIGN.md §5): tensor parallel on "model" (attention heads,
+FFN columns, MoE experts), ZeRO-3/FSDP over ("data","pod") for params and
+optimizer state (GSPMD all-gathers per layer inside the scan, reduce-scatters
+gradients), batch data-parallel over ("pod","data").
+
+Serving posture: batch on ("pod","data") where divisible; for batch-1
+long-context decode the compressed-pool *token/tile* dimension shards on
+"data" (context parallel — flash-decoding-style split with GSPMD inserting
+the partial-softmax reductions) and heads on "model" where divisible.
+
+Every rule degrades to replication when a dim isn't divisible by the axis —
+non-divisible cases (24 q-heads on a 16-way model axis) keep the *fused*
+projection dim sharded instead (192 columns/chip), which GSPMD reshards at
+the head-split reshape.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+MODEL = "model"
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """All pure-data axes present in the mesh, biggest first."""
+    return tuple(a for a in ("data", "pod") if a in mesh.axis_names)
+
+
+def _axsize(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _fits(dim: int, mesh: Mesh, axes) -> bool:
+    return dim % _axsize(mesh, axes) == 0
+
+
+def _maybe(dim: int, mesh: Mesh, axes):
+    """axes if divisible else None."""
+    return axes if axes is not None and _fits(dim, mesh, axes) else None
+
+
+# ----------------------------------------------------------------------
+# parameter rules
+
+_TP_LAST = {"wq", "wk", "wv", "wr", "wg", "up", "gate", "cm_k", "in_proj",
+            "conv_w", "dt_proj", "vis_proj"}
+_TP_FIRST = {"wo", "down", "cm_v", "x_proj", "out_proj", "A_log"}
+_TP_VEC = {"bq", "bk", "bv", "up_b", "conv_b", "dt_bias", "D"}
+_REPLICATED = {"scale", "bias", "router", "w0", "wA", "wB", "u",
+               "ln_x_scale", "ln_x_bias", "positions", "bo", "down_b"}
+
+
+_ATTN_Q = {"wq", "wo", "bq"}
+_ATTN_KV = {"wk", "wv", "bk", "bv"}
+
+
+def param_partition_spec(path_names, shape, mesh: Mesh,
+                         fsdp: bool = True,
+                         cfg: Optional[ModelConfig] = None) -> P:
+    """PartitionSpec for one param leaf given its path and (global) shape."""
+    name = path_names[-1]
+    stacked = any(n in ("blocks", "encoder") for n in path_names)
+    lead = (None,) if stacked else ()
+    core = shape[1:] if stacked else shape
+    fs = data_axes(mesh) if fsdp else None
+    rank = len(core)
+
+    def spec(*entries):
+        return P(*(lead + entries))
+
+    # Attention projections: tensor-parallel ONLY when the head count divides
+    # the model axis — otherwise the [.., H, d] head-split reshape of a
+    # model-sharded fused dim forces GSPMD into full-batch reshards (measured:
+    # 90 GiB/device of gratuitous all-gathers on starcoder's 24 heads / 16-way
+    # axis). Non-divisible archs run attention data-parallel (FSDP weights).
+    # Measured to be WORSE than TP+activation-constraints (§Perf iteration 2)
+    # so off by default; REPRO_ATTN_DP_FALLBACK=1 re-enables for comparison.
+    if (os.environ.get("REPRO_ATTN_DP_FALLBACK") == "1"
+            and cfg is not None and (name in _ATTN_Q or name in _ATTN_KV)):
+        kind = "attn"
+        if path_names and path_names[0] == "blocks" and len(path_names) > 1:
+            try:
+                kind = cfg.layer_kind(int(path_names[1]))
+            except (ValueError, IndexError):
+                kind = "attn"
+        if kind == "attn":
+            msize = mesh.shape[MODEL] if MODEL in mesh.axis_names else 1
+            heads = cfg.n_heads if name in _ATTN_Q else cfg.n_kv_heads
+            if heads % msize != 0:
+                if rank == 1:
+                    return spec(None)
+                if name == "wo":                  # [Hq·dh, D]
+                    return spec(_maybe(core[0], mesh, fs), None)
+                return spec(_maybe(core[0], mesh, fs), None)  # wq/wk/wv [D, ·]
+
+    if name.startswith("mix_") or name in _REPLICATED:
+        return spec(*([None] * rank))
+    if name in _TP_VEC:
+        return spec(_maybe(core[0], mesh, MODEL))
+    # Embedding: vocab on "model" ONLY. Sharding D on the data axes makes the
+    # token-gather output inherit D-on-"data", which conflicts with
+    # batch-on-"data" and unshards the batch for the WHOLE residual stream
+    # (measured: 500+ GiB/device of full-batch collectives).
+    if name == "tokens":                         # [V, D]
+        v, d = core
+        if _fits(v, mesh, MODEL):
+            return spec(MODEL, None)
+        return spec(None, _maybe(d, mesh, MODEL))
+    if name == "lm_head":                        # [D, V]
+        d, v = core
+        if _fits(v, mesh, MODEL):
+            return spec(None, MODEL)
+        return spec(_maybe(d, mesh, MODEL), None)
+    if rank == 3 and name in ("up", "gate", "down"):   # MoE experts [E, d, f]
+        e, a, b = core
+        return spec(_maybe(e, mesh, MODEL), None, _maybe(b, mesh, fs))
+    if name in _TP_LAST and rank == 2:
+        a, b = core
+        return spec(_maybe(a, mesh, fs), _maybe(b, mesh, MODEL))
+    if name in _TP_FIRST and rank == 2:
+        a, b = core
+        return spec(_maybe(a, mesh, MODEL), _maybe(b, mesh, fs))
+    return spec(*([None] * rank))
+
+
+def param_specs(params_or_shapes, mesh: Mesh, fsdp: bool = True,
+                cfg: Optional[ModelConfig] = None):
+    """Tree of PartitionSpecs matching the param tree."""
+    flat = jax.tree_util.tree_flatten_with_path(params_or_shapes)
+    specs = []
+    for path, leaf in flat[0]:
+        names = [str(p.key) if hasattr(p, "key") else str(getattr(p, "idx", p))
+                 for p in path]
+        specs.append(param_partition_spec(names, leaf.shape, mesh, fsdp, cfg))
+    return jax.tree.unflatten(flat[1], specs)
+
+
+# ----------------------------------------------------------------------
+# batch / activation / state rules
+
+def batch_spec(B: int, mesh: Mesh, extra_dims: int = 1) -> P:
+    dp = data_axes(mesh)
+    lead = dp if _fits(B, mesh, dp) else (
+        ("data",) if _fits(B, mesh, "data") else None)
+    return P(lead, *([None] * extra_dims))
+
+
+def train_batch_specs(cfg: ModelConfig, B: int, mesh: Mesh):
+    out = {"tokens": batch_spec(B, mesh), "labels": batch_spec(B, mesh)}
+    if cfg.family == "audio":
+        out["frames"] = batch_spec(B, mesh, extra_dims=2)
+    if cfg.family == "vlm":
+        out["patches"] = batch_spec(B, mesh, extra_dims=2)
+    return out
+
+
+def opt_state_specs(pspecs, step_like=None):
+    """OptState(step, mu, nu, master) specs mirroring param specs."""
+    from repro.training.optimizer import OptState
+    return OptState(P(), pspecs, pspecs, pspecs)
+
+
+def cache_partition_spec(path_names, shape, cfg: ModelConfig, mesh: Mesh) -> P:
+    """Serving-cache leaf rule. Leaves under 'blocks' carry a leading
+    period-stack dim (never sharded)."""
+    name = path_names[-1]
+    if name in ("position", "w_len", "n_compressed"):
+        return P()
+    dp = data_axes(mesh)
+    core = shape[1:]                      # strip period stack
+    B = core[0]
+    b_ax = dp if _fits(B, mesh, dp) else (
+        ("data",) if _fits(B, mesh, ("data",)) else None)
+
+    def with_lead(*entries):
+        return P(None, *entries)
+
+    if name in ("ck_vals", "ck_bm", "cv_vals", "cv_bm"):   # [B,Hkv,Tc,k]
+        _, Hkv, Tc, _ = core
+        h_ax = _maybe(Hkv, mesh, MODEL)
+        if b_ax is not None:
+            return with_lead(b_ax, h_ax, None, None)
+        # batch-1 long context: context-parallel over the pool token dim
+        return with_lead(None, h_ax, _maybe(Tc, mesh, ("data",)), None)
+    if name in ("k_win", "v_win"):                          # [B,Hkv,W,d]
+        _, Hkv, _, _ = core
+        return with_lead(b_ax, _maybe(Hkv, mesh, MODEL), None, None)
+    if name in ("k", "v"):                                  # dense [B,Hkv,T,d]
+        _, Hkv, T, _ = core
+        h_ax = _maybe(Hkv, mesh, MODEL)
+        if b_ax is not None:
+            return with_lead(b_ax, h_ax, None, None)
+        return with_lead(None, h_ax, _maybe(T, mesh, ("data",)), None)
+    if name in ("cross_k", "cross_v"):                      # [B,S,Hkv,d]
+        return with_lead(b_ax, None, None, None)
+    if name == "conv":                                      # [B,dc-1,din]
+        return with_lead(b_ax, None, _maybe(core[2], mesh, MODEL))
+    if name == "ssm":                                       # [B,din,ds]
+        return with_lead(b_ax, _maybe(core[1], mesh, MODEL), None)
+    if name == "wkv":                                       # [B,H,hs,hs]
+        return with_lead(b_ax, _maybe(core[1], mesh, MODEL), None, None)
+    if name in ("tm_shift", "cm_shift"):                    # [B,D]
+        return with_lead(b_ax, _maybe(core[1], mesh, MODEL))
+    return with_lead(*([None] * len(core)))
+
+
+def cache_specs(cache_shapes, cfg: ModelConfig, mesh: Mesh):
+    flat = jax.tree_util.tree_flatten_with_path(cache_shapes)
+    specs = []
+    for path, leaf in flat[0]:
+        names = [str(p.key) if hasattr(p, "key") else str(getattr(p, "idx", p))
+                 for p in path]
+        shape = leaf.shape
+        if names[-1] in ("position", "w_len", "n_compressed"):
+            specs.append(P())
+        else:
+            specs.append(cache_partition_spec(names, shape, cfg, mesh))
+    return jax.tree.unflatten(flat[1], specs)
+
+
+# ----------------------------------------------------------------------
+def to_named(tree_specs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def shaped(tree_shapes, tree_specs, mesh: Mesh):
+    """ShapeDtypeStructs with shardings attached (dry-run inputs)."""
+    named = to_named(tree_specs, mesh)
+    return jax.tree.map(
+        lambda sd, sh: jax.ShapeDtypeStruct(sd.shape, sd.dtype, sharding=sh),
+        tree_shapes, named)

@@ -1,0 +1,5 @@
+"""Training substrate: AdamW, train loop, checkpointing, synthetic data."""
+from repro.training.checkpoint import Checkpointer
+from repro.training.optimizer import (OptState, adamw_update, init_opt_state)
+from repro.training.train_loop import (TrainState, init_train_state,
+                                       make_train_step, train)

@@ -1,0 +1,175 @@
+"""Fault-tolerant checkpointing: atomic, content-hashed, async, elastic.
+
+Layout:   <dir>/step_<N>/
+             shard_<proc>.npz     flattened leaves owned by this process
+             meta.json            step, leaf treedef, shapes, sha256 per file
+          <dir>/LATEST            text file with the newest complete step
+
+Atomicity: write to ``step_<N>.tmp-<pid>`` then ``os.rename`` (POSIX-atomic)
+after all shards land; a crash mid-write leaves only tmp dirs that restore
+ignores. ``restore_latest`` verifies hashes and falls back to the previous
+complete checkpoint on corruption — node failure during save never loses the
+run. Saves can run on a background thread (``async_save=True``); the train
+loop only blocks on the *previous* save (one outstanding write, bounded host
+memory).
+
+Elasticity: leaves are stored unsharded (gathered); ``restore`` reshards onto
+whatever mesh the restarted job built, so a 512-chip run can resume on 256.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import tempfile
+import threading
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _leaf_names(tree) -> list:
+    paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    names = []
+    for path, _ in paths:
+        parts = []
+        for p in path:
+            if hasattr(p, "key"):
+                parts.append(str(p.key))
+            elif hasattr(p, "idx"):
+                parts.append(str(p.idx))
+            else:
+                parts.append(str(p))
+        names.append("/".join(parts))
+    return names
+
+
+def _sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._pending: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, tree: Any) -> None:
+        """Snapshot ``tree`` at ``step``. Returns immediately if async."""
+        host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        self.wait()
+        if self.async_save:
+            self._pending = threading.Thread(
+                target=self._write, args=(step, host), daemon=True)
+            self._pending.start()
+        else:
+            self._write(step, host)
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def _write(self, step: int, host_tree: Any) -> None:
+        names = _leaf_names(host_tree)
+        leaves = jax.tree.leaves(host_tree)
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        tmp = tempfile.mkdtemp(prefix=f"step_{step:08d}.tmp-", dir=self.dir)
+        try:
+            shard = os.path.join(tmp, "shard_0.npz")
+            # npz can't store ml_dtypes (bfloat16 etc.) — save a uint16/uint8
+            # byte view and record the true dtype in meta.
+            to_save = {}
+            for i, l in enumerate(leaves):
+                if l.dtype.kind == "V" or str(l.dtype) == "bfloat16":
+                    l = l.view(np.uint16 if l.dtype.itemsize == 2 else np.uint8)
+                to_save[f"leaf_{i}"] = l
+            np.savez(shard, **to_save)
+            meta = {
+                "step": step,
+                "names": names,
+                "shapes": [list(l.shape) for l in leaves],
+                "dtypes": [str(l.dtype) for l in leaves],
+                "sha256": {"shard_0.npz": _sha256(shard)},
+            }
+            with open(os.path.join(tmp, "meta.json"), "w") as f:
+                json.dump(meta, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)                      # atomic publish
+            with open(os.path.join(self.dir, "LATEST.tmp"), "w") as f:
+                f.write(str(step))
+            os.rename(os.path.join(self.dir, "LATEST.tmp"),
+                      os.path.join(self.dir, "LATEST"))
+            self._gc()
+        except BaseException:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
+
+    def _gc(self) -> None:
+        steps = self.complete_steps()
+        for s in steps[:-self.keep] if self.keep > 0 else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def complete_steps(self) -> list:
+        out = []
+        for name in sorted(os.listdir(self.dir)):
+            if name.startswith("step_") and ".tmp" not in name:
+                if os.path.exists(os.path.join(self.dir, name, "meta.json")):
+                    out.append(int(name.split("_")[1]))
+        return out
+
+    def _verify(self, path: str) -> bool:
+        try:
+            with open(os.path.join(path, "meta.json")) as f:
+                meta = json.load(f)
+            for fname, want in meta["sha256"].items():
+                if _sha256(os.path.join(path, fname)) != want:
+                    return False
+            return True
+        except (OSError, json.JSONDecodeError, KeyError):
+            return False
+
+    def restore(self, step: int, template: Any,
+                shardings: Optional[Any] = None) -> Any:
+        """Load step into the structure of ``template``; reshard if given
+        (device placement derived from the *current* mesh — elastic)."""
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        data = np.load(os.path.join(path, "shard_0.npz"))
+        leaves = [data[f"leaf_{i}"] for i in range(len(data.files))]
+        treedef = jax.tree.structure(template)
+        tleaves = jax.tree.leaves(template)
+        assert len(leaves) == len(tleaves), "checkpoint/template mismatch"
+        out = []
+        for l, t in zip(leaves, tleaves):
+            if l.dtype != t.dtype and l.dtype.kind == "u":
+                l = l.view(jnp.dtype(t.dtype))      # byte view (bfloat16 path)
+            out.append(jnp.asarray(l, dtype=t.dtype))
+        tree = jax.tree.unflatten(treedef, out)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda x, s: jax.device_put(x, s), tree, shardings)
+        return tree
+
+    def restore_latest(self, template: Any,
+                       shardings: Optional[Any] = None
+                       ) -> Tuple[Optional[int], Any]:
+        """Newest *verified* checkpoint (corrupt ones skipped). (None, template)
+        if nothing usable exists — the fault-tolerant cold-start path."""
+        for step in reversed(self.complete_steps()):
+            path = os.path.join(self.dir, f"step_{step:08d}")
+            if self._verify(path):
+                return step, self.restore(step, template, shardings)
+        return None, template

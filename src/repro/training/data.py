@@ -1,0 +1,55 @@
+"""Stateless-seeded synthetic data pipeline.
+
+Every batch is a pure function of (seed, step) — any host can deterministically
+recompute any shard after a failure or an elastic re-partition, so the data
+pipeline needs no coordination or state checkpointing (DESIGN.md §5).
+
+The stream is a random bigram Markov chain over the vocab: learnable structure
+(a transformer quickly drops below the unigram entropy) while requiring no
+external corpus.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+_N_STATES = 256  # bigram table is over vocab % _N_STATES for O(1) memory
+
+
+def _transition_logits(seed: int) -> jax.Array:
+    key = jax.random.PRNGKey(seed ^ 0x5EED)
+    return jax.random.normal(key, (_N_STATES, _N_STATES), jnp.float32) * 2.0
+
+
+def synthetic_batch(seed: int, step, B: int, T: int, cfg: ModelConfig,
+                    extras: bool = True) -> Dict[str, jax.Array]:
+    """Deterministic batch for (seed, step). tokens/labels [B, T]."""
+    table = _transition_logits(seed)
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    k0, k1, k2, k3 = jax.random.split(key, 4)
+    first = jax.random.randint(k0, (B,), 0, cfg.vocab_size)
+
+    def gen(carry, k):
+        prev = carry
+        logits = table[prev % _N_STATES]
+        nxt = jax.random.categorical(k, logits, axis=-1)
+        # lift back to full vocab deterministically
+        nxt = (nxt + (prev // _N_STATES) * 131) % cfg.vocab_size
+        return nxt, nxt
+
+    keys = jax.random.split(k1, T - 1)
+    _, rest = jax.lax.scan(gen, first, keys)
+    tokens = jnp.concatenate([first[:, None], rest.T], axis=1)
+    labels = jnp.concatenate([tokens[:, 1:], -jnp.ones((B, 1), jnp.int32)], axis=1)
+    batch = {"tokens": tokens, "labels": labels.astype(jnp.int32)}
+    if extras and cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            k2, (B, cfg.encoder_ctx, cfg.d_model), jnp.float32)
+    if extras and cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(
+            k3, (B, cfg.n_vision_tokens, cfg.d_model), jnp.float32)
+    return batch

@@ -1,0 +1,94 @@
+"""AdamW + cosine schedule + global-norm clipping (no optax dependency).
+
+Moments are fp32 regardless of param dtype (bf16 params keep an fp32 master
+copy in the optimizer state — standard mixed-precision training).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+class OptState(NamedTuple):
+    step: jax.Array          # int32
+    mu: Any                  # first moment (fp32 pytree)
+    nu: Any                  # second moment (fp32 pytree)
+    master: Any              # fp32 master params
+
+
+def cosine_schedule(tc: TrainConfig):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = tc.learning_rate * step / max(tc.warmup_steps, 1)
+        t = jnp.clip((step - tc.warmup_steps)
+                     / max(tc.total_steps - tc.warmup_steps, 1), 0.0, 1.0)
+        cos = 0.5 * tc.learning_rate * (1.0 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < tc.warmup_steps, warm, cos)
+    return lr
+
+
+def init_opt_state(params) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    master = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return OptState(jnp.zeros((), jnp.int32), zeros,
+                    jax.tree.map(jnp.copy, zeros), master)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gn
+
+
+def _decay_mask(path) -> bool:
+    """Weight decay on matrices only (no norms/biases/1-d params)."""
+    name = str(path[-1].key) if hasattr(path[-1], "key") else str(path[-1])
+    return not any(s in name for s in ("scale", "bias", "norm", "mix_",
+                                       "w0", "dt_bias", "u", "D", "A_log"))
+
+
+def adamw_update(grads, opt: OptState, params, tc: TrainConfig
+                 ) -> Tuple[Any, OptState, Dict[str, jax.Array]]:
+    grads, gn = clip_by_global_norm(grads, tc.grad_clip)
+    step = opt.step + 1
+    lr = cosine_schedule(tc)(step)
+    b1, b2 = tc.beta1, tc.beta2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(path, g, m, v, master):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        update = (m / c1) / (jnp.sqrt(v / c2) + tc.eps)
+        if _decay_mask(path):
+            update = update + tc.weight_decay * master
+        new_master = master - lr * update
+        return m, v, new_master
+
+    flat = jax.tree_util.tree_flatten_with_path(grads)[0]
+    treedef = jax.tree.structure(grads)
+    mus = jax.tree.leaves(opt.mu)
+    nus = jax.tree.leaves(opt.nu)
+    masters = jax.tree.leaves(opt.master)
+    new_m, new_v, new_master = [], [], []
+    for (path, g), m, v, ma in zip(flat, mus, nus, masters):
+        a, b, c = upd(path, g, m, v, ma)
+        new_m.append(a)
+        new_v.append(b)
+        new_master.append(c)
+    mu = jax.tree.unflatten(treedef, new_m)
+    nu = jax.tree.unflatten(treedef, new_v)
+    master = jax.tree.unflatten(treedef, new_master)
+    new_params = jax.tree.map(lambda ma, p: ma.astype(p.dtype), master, params)
+    metrics = {"grad_norm": gn, "lr": lr}
+    return new_params, OptState(step, mu, nu, master), metrics

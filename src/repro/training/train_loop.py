@@ -1,0 +1,110 @@
+"""Train-step factory: grad accumulation, remat, mixed precision, metrics.
+
+``make_train_step(cfg, tc)`` returns a pure ``(state, batch) -> (state,
+metrics)`` suitable for jit/pjit; ``train`` drives it with checkpointing and
+crash-resume (used by launch/train.py and the examples).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.models.model import init_params, lm_loss
+from repro.training import data as data_mod
+from repro.training.checkpoint import Checkpointer
+from repro.training.optimizer import OptState, adamw_update, init_opt_state
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: OptState
+
+
+def init_train_state(key, cfg: ModelConfig) -> TrainState:
+    params = init_params(key, cfg)
+    return TrainState(params, init_opt_state(params))
+
+
+def make_train_step(cfg: ModelConfig, tc: TrainConfig):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    With tc.microbatch > 0 the global batch is split into microbatches and
+    gradients are accumulated in a lax.scan (memory ∝ one microbatch)."""
+
+    def loss_fn(params, batch):
+        return lm_loss(params, batch, cfg, z_loss=tc.z_loss,
+                       moe_aux=tc.moe_aux_loss, remat=tc.remat)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        if tc.microbatch <= 0:
+            (loss, aux), grads = grad_fn(params, batch)
+            return loss, aux, grads
+        B = batch["tokens"].shape[0]
+        n_micro = B // tc.microbatch
+        assert B % tc.microbatch == 0, (B, tc.microbatch)
+        micro = jax.tree.map(
+            lambda x: x.reshape(n_micro, tc.microbatch, *x.shape[1:]), batch)
+
+        def body(acc, mb):
+            loss_a, grads_a, aux_a = acc
+            (loss, aux), grads = grad_fn(params, mb)
+            grads = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32) / n_micro,
+                grads_a, grads)
+            aux = jax.tree.map(lambda a, b: a + b / n_micro, aux_a, aux)
+            return (loss_a + loss / n_micro, grads, aux), None
+
+        zero_g = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        zero_aux = {"nll": jnp.zeros(()), "z_loss": jnp.zeros(()),
+                    "moe_aux": jnp.zeros(())}
+        (loss, grads, aux), _ = jax.lax.scan(
+            body, (jnp.zeros(()), zero_g, zero_aux), micro)
+        return loss, aux, grads
+
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        loss, aux, grads = compute_grads(state.params, batch)
+        params, opt, om = adamw_update(grads, state.opt, state.params, tc)
+        metrics = {"loss": loss, **aux, **om}
+        return TrainState(params, opt), metrics
+
+    return train_step
+
+
+def train(cfg: ModelConfig, tc: TrainConfig, *, batch_size: int, seq_len: int,
+          resume: bool = True, log_every: int = 10,
+          step_fn=None, state: Optional[TrainState] = None,
+          on_metrics=None) -> TrainState:
+    """Single-host training driver with checkpoint/restart fault tolerance."""
+    ckpt = Checkpointer(tc.checkpoint_dir, keep=tc.keep_checkpoints)
+    if state is None:
+        state = init_train_state(jax.random.PRNGKey(tc.seed), cfg)
+    start_step = 0
+    if resume:
+        got, restored = ckpt.restore_latest(state)
+        if got is not None:
+            state, start_step = restored, got
+            print(f"[train] resumed from step {got}")
+    step_fn = step_fn or jax.jit(make_train_step(cfg, tc))
+    t0 = time.time()
+    for step in range(start_step, tc.total_steps):
+        batch = data_mod.synthetic_batch(tc.seed, step, batch_size, seq_len, cfg)
+        state, metrics = step_fn(state, batch)
+        if (step + 1) % log_every == 0 or step == start_step:
+            m = {k: float(v) for k, v in metrics.items()}
+            dt = (time.time() - t0) / max(step - start_step + 1, 1)
+            print(f"[train] step={step+1} loss={m['loss']:.4f} "
+                  f"nll={m['nll']:.4f} gnorm={m['grad_norm']:.3f} "
+                  f"lr={m['lr']:.2e} {dt*1e3:.0f}ms/step")
+            if on_metrics:
+                on_metrics(step + 1, m)
+        if (step + 1) % tc.checkpoint_every == 0:
+            ckpt.save(step + 1, state)
+    ckpt.wait()
+    return state

@@ -1,0 +1,61 @@
+"""H2O eviction + KIVI quantization joint-application invariants (paper §4.2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.eviction import accumulate_attention, h2o_keep_mask
+from repro.core.quantization import (kivi_quantize_key, kivi_quantize_value,
+                                     quant_bytes_per_token)
+from repro.core import pruning
+
+
+def test_h2o_budget_respected(rng):
+    T = 256
+    acc = jnp.asarray(np.abs(rng.normal(size=(2, 4, T))).astype(np.float32))
+    keep = h2o_keep_mask(acc, T, heavy_budget=20, recent_budget=30)
+    counts = np.asarray(keep).sum(-1)
+    assert (counts == 50).all()
+    # recent tokens always kept
+    assert np.asarray(keep)[..., -30:].all()
+
+
+def test_h2o_keeps_heavy_hitters(rng):
+    T = 128
+    acc = jnp.zeros((1, 1, T)).at[0, 0, 7].set(100.0).at[0, 0, 40].set(50.0)
+    keep = np.asarray(h2o_keep_mask(acc, T, heavy_budget=2, recent_budget=8))
+    assert keep[0, 0, 7] and keep[0, 0, 40]
+
+
+def test_accumulate_attention_shape(rng):
+    probs = jax.nn.softmax(jnp.asarray(
+        rng.normal(size=(2, 4, 8, 64)).astype(np.float32)), axis=-1)
+    acc = accumulate_attention(probs)
+    assert acc.shape == (2, 4, 64)
+    np.testing.assert_allclose(np.asarray(acc.sum(-1)), 8.0, rtol=1e-5)
+
+
+@pytest.mark.parametrize("bits,tol", [(4, 0.12), (2, 0.5)])
+def test_kivi_quant_error_bounded(rng, bits, tol):
+    x = jnp.asarray(rng.normal(size=(2, 4, 64, 128)).astype(np.float32))
+    for fn in (kivi_quantize_key, kivi_quantize_value):
+        q = fn(x, bits)
+        rel = float(jnp.linalg.norm(q - x) / jnp.linalg.norm(x))
+        assert rel < tol, (fn.__name__, rel)
+
+
+def test_kivi_prune_then_quantize_preserves_zeros(rng):
+    """Harma et al. ordering: quantizing a pruned cache must not resurrect
+    pruned positions with large values (group min/max includes 0)."""
+    x = jnp.asarray(rng.normal(size=(2, 4, 64, 128)).astype(np.float32))
+    xp = pruning.prune(x, 0.7, "per_token_magnitude")
+    q = kivi_quantize_value(xp, 4)
+    # pruned positions may carry small quantization residue only
+    pruned_pos = np.asarray(xp) == 0
+    resurrect = np.abs(np.asarray(q))[pruned_pos]
+    assert resurrect.max() < 0.5 * np.abs(np.asarray(x)).max()
+
+
+def test_quant_storage_model():
+    assert quant_bytes_per_token(128, 4) < 128 * 2 * 0.35
+    assert quant_bytes_per_token(128, 2) < quant_bytes_per_token(128, 4)

@@ -1,0 +1,106 @@
+"""Pallas kernels vs pure-jnp oracles (interpret=True on CPU), with
+shape/dtype/sparsity sweeps per the deliverable spec."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.bitmap_compress import mustafar_compress
+from repro.kernels.flash_prefill import flash_prefill
+from repro.kernels.sparse_decode import (decode_attention_fused, sparse_av,
+                                         sparse_qk)
+
+
+def _mk(rng, shape, dtype):
+    x = rng.normal(size=shape).astype(np.float32)
+    return jnp.asarray(x).astype(dtype)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("d,k", [(128, 40), (128, 64), (64, 24), (80, 32)])
+def test_compress_kernel(rng, dtype, d, k):
+    x = _mk(rng, (3, 32, d), dtype)
+    v_ref, b_ref = ref.mustafar_compress_ref(x, k)
+    v_pl, b_pl = mustafar_compress(x, k, interpret=True)
+    np.testing.assert_array_equal(np.asarray(b_ref), np.asarray(b_pl))
+    np.testing.assert_allclose(np.asarray(v_ref, np.float32),
+                               np.asarray(v_pl, np.float32), rtol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("T,tile", [(64, 32), (128, 128), (256, 64)])
+@pytest.mark.parametrize("d,k,G", [(128, 40, 4), (64, 24, 1)])
+def test_sparse_qk_kernel(rng, dtype, T, tile, d, k, G):
+    BH = 3
+    q = _mk(rng, (BH, G, d), dtype)
+    x = _mk(rng, (BH, T, d), dtype)
+    vals, bm = ref.mustafar_compress_ref(x, k)
+    s_ref = ref.sparse_qk_ref(q, vals, bm, d, 0.1)
+    s_pl = sparse_qk(q, vals, bm, scale=0.1, interpret=True, tile_t=tile)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(s_ref), np.asarray(s_pl),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("T,tile,d,k,G", [(128, 64, 128, 40, 4),
+                                          (64, 32, 64, 24, 2)])
+def test_sparse_av_kernel(rng, dtype, T, tile, d, k, G):
+    BH = 2
+    x = _mk(rng, (BH, T, d), dtype)
+    vals, bm = ref.mustafar_compress_ref(x, k)
+    p = jax.nn.softmax(_mk(rng, (BH, G, T), jnp.float32), axis=-1)
+    o_ref = ref.sparse_av_ref(p, vals, bm, d)
+    o_pl = sparse_av(p, vals, bm, interpret=True, tile_t=tile)[..., :d]
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(o_ref), np.asarray(o_pl),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("nv", [[64, 40, 17], [128, 128, 1]])
+def test_fused_decode_kernel(rng, nv):
+    BH, G, d, T, k = 3, 4, 128, 128, 40
+    q = _mk(rng, (BH, G, d), jnp.float32)
+    kx = _mk(rng, (BH, T, d), jnp.float32)
+    vx = _mk(rng, (BH, T, d), jnp.float32)
+    kv_, kb_ = ref.mustafar_compress_ref(kx, k)
+    vv_, vb_ = ref.mustafar_compress_ref(vx, k)
+    n_valid = jnp.asarray(nv, jnp.int32)
+    o_ref = ref.decode_attention_fused_ref(q, kv_, kb_, vv_, vb_, n_valid, d,
+                                           scale=d ** -0.5)
+    o_pl = decode_attention_fused(q, kv_, kb_, vv_, vb_, n_valid, d=d,
+                                  scale=d ** -0.5, interpret=True, tile_t=32)
+    np.testing.assert_allclose(np.asarray(o_ref), np.asarray(o_pl),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("Hq,Hkv,T,d,bq,bk", [(4, 2, 128, 64, 64, 64),
+                                              (2, 2, 256, 128, 128, 64)])
+def test_flash_prefill_kernel(rng, Hq, Hkv, T, d, bq, bk):
+    B = 2
+    q = _mk(rng, (B, Hq, T, d), jnp.float32)
+    k = _mk(rng, (B, Hkv, T, d), jnp.float32)
+    v = _mk(rng, (B, Hkv, T, d), jnp.float32)
+    o_pl = flash_prefill(q, k, v, scale=d ** -0.5, interpret=True,
+                         block_q=bq, block_k=bk)
+    rep = Hq // Hkv
+    o_ref = ref.flash_prefill_ref(q, jnp.repeat(k, rep, 1),
+                                  jnp.repeat(v, rep, 1))
+    np.testing.assert_allclose(np.asarray(o_pl), np.asarray(o_ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ops_dispatch_cpu(rng):
+    """Public wrappers use the jnp path on CPU and agree with Pallas."""
+    from repro.kernels import ops
+    B, Hkv, Hq, T, d, k = 2, 2, 4, 64, 128, 40
+    x = _mk(rng, (B, Hkv, T, d), jnp.float32)
+    v1, b1 = ops.compress(x, k)                       # jnp path
+    v2, b2 = ops.compress(x, k, use_pallas=True)      # interpret path
+    np.testing.assert_array_equal(np.asarray(b1), np.asarray(b2))
+    q = _mk(rng, (B, Hq, d), jnp.float32)
+    s1 = ops.sparse_qk(q, v1, b1, scale=0.1)
+    s2 = ops.sparse_qk(q, v1, b1, scale=0.1, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-5,
+                               atol=1e-5)

@@ -1,0 +1,119 @@
+"""Hypothesis property tests on system invariants (pruning, cache manager,
+serving counters) — beyond the per-kernel sweeps in test_kernels.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from dataclasses import replace
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core import pruning
+from repro.core.sparse_format import pack_fixedk, topk_mask, unpack_fixedk
+from repro.models import init_params
+from repro.serving.cache import plan_pools, prefill_split
+from repro.serving.engine import decode_step, prefill
+
+CFG = get_config("starcoder2-3b").reduced()
+PARAMS = init_params(jax.random.PRNGKey(0), CFG)
+
+
+# ----------------------------------------------------------------------
+# pruning invariants
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), scale=st.floats(0.01, 100.0),
+       k=st.sampled_from([8, 24, 64, 120]))
+def test_topk_mask_scale_invariant(seed, scale, k):
+    """Per-token magnitude selection is invariant to positive row scaling
+    (the formal core of 'per-token magnitude is output-aware for V')."""
+    g = np.random.default_rng(seed)
+    x = jnp.asarray(g.normal(size=(4, 128)).astype(np.float32))
+    m1 = topk_mask(x, k)
+    m2 = topk_mask(x * scale, k)
+    np.testing.assert_array_equal(np.asarray(m1), np.asarray(m2))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), k=st.sampled_from([8, 40, 64]))
+def test_pack_unpack_idempotent(seed, k):
+    """Compressing an already-pruned tensor is lossless (compaction of a
+    prefill-compressed tile never drifts)."""
+    g = np.random.default_rng(seed)
+    x = jnp.asarray(g.normal(size=(3, 8, 128)).astype(np.float32))
+    m = topk_mask(x, k)
+    v1, b1 = pack_fixedk(x, m, k)
+    d1 = unpack_fixedk(v1, b1, 128)
+    v2, b2 = pack_fixedk(d1, topk_mask(d1, k), k)
+    d2 = unpack_fixedk(v2, b2, 128)
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), rtol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       strategy=st.sampled_from(["per_token_magnitude",
+                                 "semi_structured_2_4"]))
+def test_prune_is_projection(seed, strategy):
+    """prune(prune(x)) == prune(x) — pruning is a projection operator."""
+    g = np.random.default_rng(seed)
+    x = jnp.asarray(g.normal(size=(2, 2, 16, 128)).astype(np.float32))
+    p1 = pruning.prune(x, 0.5, strategy)
+    p2 = pruning.prune(p1, 0.5, strategy)
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2), rtol=1e-6)
+
+
+# ----------------------------------------------------------------------
+# cache-manager invariants
+
+@settings(max_examples=40, deadline=None)
+@given(T=st.integers(1, 4096))
+def test_prefill_split_partition(T):
+    """compressible + window == T; compressible tile-aligned; window bounded."""
+    comp, win = prefill_split(CFG, T)
+    m = CFG.mustafar
+    assert comp + win == T
+    assert comp % m.tile_tokens == 0
+    assert comp >= 0 and win >= 0
+    if T >= m.local_window:
+        assert win >= m.local_window           # dense window never starved
+    assert win < m.local_window + 2 * m.tile_tokens
+
+
+@settings(max_examples=40, deadline=None)
+@given(total=st.integers(1, 1 << 20), B=st.sampled_from([1, 8, 128]))
+def test_plan_pools_capacity(total, B):
+    """Pools always hold the max context; alignment divides evenly."""
+    Tc, Wbuf = plan_pools(CFG, total, batch=B)
+    m = CFG.mustafar
+    assert Tc >= total
+    assert Tc % m.tile_tokens == 0
+    assert Wbuf == m.local_window + m.tile_tokens
+    if B == 1 and total >= 4096 * 16:
+        assert Tc % (4096 * 16) == 0           # context-shard alignment
+
+
+# ----------------------------------------------------------------------
+# serving counter invariants (end-to-end, small but real model)
+
+@settings(max_examples=6, deadline=None)
+@given(T=st.integers(9, 40), n_dec=st.integers(1, 24),
+       seed=st.integers(0, 1000))
+def test_serving_counters(T, n_dec, seed):
+    """After prefill(T) + n decode steps:
+       position == T + n;
+       n_compressed ≡ 0 (mod tile_tokens);
+       n_compressed + w_len == position;
+       w_len stays inside the buffer; logits finite."""
+    m = CFG.mustafar
+    key = jax.random.PRNGKey(seed)
+    toks = jax.random.randint(key, (2, T + n_dec), 0, CFG.vocab_size)
+    lg, cache = prefill(PARAMS, toks[:, :T], CFG,
+                        max_total_tokens=T + n_dec + 8)
+    step = jax.jit(lambda p, t, c: decode_step(p, t, c, CFG))
+    for t in range(T, T + n_dec):
+        lg, cache = step(PARAMS, toks[:, t], cache)
+    assert int(cache["position"]) == T + n_dec
+    nc, wl = int(cache["n_compressed"]), int(cache["w_len"])
+    assert nc % m.tile_tokens == 0
+    assert nc + wl == T + n_dec
+    assert 0 <= wl <= m.local_window + m.tile_tokens
+    assert np.isfinite(np.asarray(lg, np.float32)).all()

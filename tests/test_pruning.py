@@ -1,0 +1,122 @@
+"""Pruning strategies (paper §2): sparsity accounting, accuracy orderings.
+
+The paper's accuracy claims (unstructured > 2:4 > structured at fixed
+sparsity) are validated here at the attention-output level: relative error
+of pruned decode attention vs dense, on caches with the distributions the
+paper describes (Key: outlier channels; Value: uniform).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import pruning
+from repro.core.attention import decode_attention_dense
+
+
+def _key_cache(rng, B=2, H=4, T=128, d=128):
+    """Key-like cache: a few high-magnitude outlier channels (KIVI/Fig 2a)."""
+    x = rng.normal(size=(B, H, T, d)).astype(np.float32)
+    outliers = rng.choice(d, size=8, replace=False)
+    x[..., outliers] *= 8.0
+    return jnp.asarray(x)
+
+
+def _value_cache(rng, B=2, H=4, T=128, d=128):
+    """Value-like cache: uniform magnitude distribution (Fig 2b)."""
+    return jnp.asarray(rng.normal(size=(B, H, T, d)).astype(np.float32))
+
+
+def _attn_err(k_cache, k_pruned, v_cache, v_pruned, rng, n_q: int = 16):
+    """Mean relative decode-attention output error over n_q query draws."""
+    B, H, T, d = k_cache.shape
+    L = jnp.full((B,), T)
+    errs = []
+    for _ in range(n_q):
+        q = jnp.asarray(rng.normal(size=(B, H, d)).astype(np.float32))
+        ref = decode_attention_dense(q, k_cache, v_cache, L)
+        out = decode_attention_dense(q, k_pruned, v_pruned, L)
+        errs.append(float(jnp.linalg.norm(out - ref) / jnp.linalg.norm(ref)))
+    return float(np.mean(errs))
+
+
+@pytest.mark.parametrize("strategy", ["per_token_magnitude",
+                                      "per_channel_magnitude",
+                                      "semi_structured_2_4"])
+def test_sparsity_exact(rng, strategy):
+    x = _value_cache(rng)
+    s = 0.5
+    mask = pruning.prune_mask(x, s, strategy)
+    frac = float(mask.mean())
+    assert abs(frac - 0.5) < 0.02
+
+
+def test_key_unstructured_beats_structured(rng):
+    """Paper Table 1: at K_s=0.7, unstructured magnitude ≪ ThinK error."""
+    k = _key_cache(rng)
+    v = _value_cache(rng)
+    q_acc = jnp.asarray(np.abs(rng.normal(size=k.shape[:2] + (128,))
+                               ).astype(np.float32))
+    e_unstr = _attn_err(k, pruning.prune(k, 0.7, "per_token_magnitude"), v, v, rng)
+    e_think = _attn_err(k, pruning.prune(k, 0.7, "think", q_acc=q_acc), v, v, rng)
+    e_24 = _attn_err(k, pruning.prune(k, 0.5, "semi_structured_2_4"), v, v, rng)
+    e_unstr_50 = _attn_err(k, pruning.prune(k, 0.5, "per_token_magnitude"), v, v, rng)
+    assert e_unstr < e_think, (e_unstr, e_think)
+    assert e_unstr_50 < e_24, (e_unstr_50, e_24)            # paper Appx. B
+
+
+def test_value_per_token_beats_per_channel_magnitude(rng):
+    """Paper Table 2/8: per-token magnitude is the best value strategy."""
+    k = _key_cache(rng)
+    v = _value_cache(rng)
+    e_tok = _attn_err(k, k, v, pruning.prune(v, 0.7, "per_token_magnitude"), rng)
+    e_ch = _attn_err(k, k, v, pruning.prune(v, 0.7, "per_channel_magnitude"), rng)
+    assert e_tok < e_ch, (e_tok, e_ch)
+
+
+def test_output_aware_key_scores_shape(rng):
+    k = _key_cache(rng)
+    qw = jnp.asarray(rng.normal(size=(2, 8, 32, 128)).astype(np.float32))
+    q_acc = pruning.gqa_query_accumulate(qw, n_kv_heads=4)
+    assert q_acc.shape == (2, 4, 128)
+    s = pruning.key_output_aware_scores(k, q_acc)
+    assert s.shape == k.shape
+    assert float(s.min()) >= 0.0
+    mask = pruning.prune_mask(k, 0.5, "per_token_output_aware", q_acc=q_acc)
+    assert int(mask.sum(-1).std()) == 0                     # fixed-k per token
+
+
+def test_value_output_aware_is_per_token_equivalent(rng):
+    """§2.2: per-token magnitude IS output-aware for Value (α multiplies whole
+    rows — scaling a token's row by its α never changes within-row ranking)."""
+    v = _value_cache(rng)
+    alpha = jnp.asarray(np.abs(rng.normal(size=v.shape[:3])).astype(np.float32))
+    scores = pruning.value_output_aware_scores(v, alpha)
+    m1 = pruning.per_token_score_mask(scores, 64)
+    m2 = pruning.prune_mask(v, 0.5, "per_token_magnitude", keep_k=64)
+    np.testing.assert_array_equal(np.asarray(m1), np.asarray(m2))
+
+
+def test_2to4_pattern(rng):
+    x = _value_cache(rng)
+    mask = np.asarray(pruning.prune_mask(x, 0.5, "semi_structured_2_4"))
+    groups = mask.reshape(*mask.shape[:-1], -1, 4)
+    assert (groups.sum(-1) == 2).all()
+
+
+def test_think_removes_whole_channels(rng):
+    k = _key_cache(rng)
+    q_acc = jnp.asarray(np.abs(rng.normal(size=(2, 4, 128))).astype(np.float32))
+    mask = np.asarray(pruning.prune_mask(k, 0.5, "think", q_acc=q_acc))
+    # per (B, H): each channel fully kept or fully dropped across tokens
+    per_channel = mask.all(axis=2) | (~mask).all(axis=2)
+    assert per_channel.all()
+
+
+def test_per_channel_group_structure(rng):
+    v = _value_cache(rng, T=128)
+    mask = np.asarray(pruning.prune_mask(v, 0.5, "per_channel_magnitude",
+                                         group=32))
+    g = mask.reshape(2, 4, 4, 32, 128)                      # [B,H,G,32,d]
+    counts = g.sum(axis=3)
+    assert (counts == 16).all()                             # 50% per group-col

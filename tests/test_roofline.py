@@ -1,0 +1,58 @@
+"""Roofline machinery: HLO collective parser, terms, corrections."""
+import jax.numpy as jnp
+import pytest
+
+from repro import roofline
+from repro.configs import get_config, get_shape
+
+
+HLO = """
+  %all-reduce.1 = f32[256,512]{1,0} all-reduce(%dot.1), channel_id=1
+  %ag = bf16[1024,64]{1,0} all-gather(%p0), channel_id=2
+  %ar2-start = f32[8]{0} all-reduce-start(%x), channel_id=3
+  %ar2-done = f32[8]{0} all-reduce-done(%ar2-start)
+  %rs = (f32[16,16]{1,0}, f32[16,16]{1,0}) reduce-scatter(%a, %b), channel_id=4
+  %cp = u32[4,4]{1,0} collective-permute(%y), channel_id=5
+  %dot.5 = f32[128,128]{1,0} dot(%a, %b)
+"""
+
+
+def test_collective_parser():
+    out = roofline.collective_bytes_from_hlo(HLO)
+    assert out["all-reduce"] == 2 * (256 * 512 * 4) + 2 * (8 * 4)
+    assert out["all-gather"] == 1024 * 64 * 2
+    assert out["reduce-scatter"] == 2 * 16 * 16 * 4
+    assert out["collective-permute"] == 4 * 4 * 4
+    # -done lines not double counted
+    assert sum(out.values()) == (2 * 524288 + 64 + 131072 + 2048 + 64)
+
+
+def test_terms_bottleneck():
+    t = roofline.RooflineTerms(flops=197e12, bytes_hbm=1e9,
+                               bytes_collective=1e9)
+    assert t.bottleneck == "compute"
+    assert t.t_compute == pytest.approx(1.0)
+    t2 = roofline.RooflineTerms(flops=1e9, bytes_hbm=819e9,
+                                bytes_collective=0)
+    assert t2.bottleneck == "memory"
+    assert t2.t_memory == pytest.approx(1.0)
+
+
+def test_model_flops():
+    cfg = get_config("qwen3-moe-30b-a3b")
+    tr = roofline.model_flops(cfg, get_shape("train_4k"))
+    # 6 * N_active * tokens
+    assert tr == pytest.approx(6.0 * cfg.active_param_count() * 256 * 4096)
+    de = roofline.model_flops(cfg, get_shape("decode_32k"))
+    assert de == pytest.approx(2.0 * cfg.active_param_count() * 128)
+
+
+def test_scan_corrections_present_where_expected():
+    cfg_d = get_config("starcoder2-3b")
+    c = roofline.scan_corrections(cfg_d, get_shape("train_4k"), "train")
+    assert c["flops"] > 0                         # chunked attention + CE
+    cfg_r = get_config("rwkv6-7b")
+    c2 = roofline.scan_corrections(cfg_r, get_shape("prefill_32k"), "prefill")
+    assert c2["flops"] > 0                        # WKV time scan
+    c3 = roofline.scan_corrections(cfg_d, get_shape("decode_32k"), "decode")
+    assert c3["bytes"] > 0                        # chunked pool scan
