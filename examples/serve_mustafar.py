@@ -1,31 +1,38 @@
-"""End-to-end serving driver (the paper is an inference paper): batched
-requests through prefill + Mustafar decode, with per-phase stats.
+"""End-to-end serving driver (the paper is an inference paper): a
+continuous-batching Scheduler over the Mustafar cache — requests arrive on a
+Poisson trace with ragged prompt lengths, get admitted into free slots,
+decode as one batch, and release their slot on completion.
 
     PYTHONPATH=src python examples/serve_mustafar.py \
-        --arch starcoder2-3b --batch 4 --prompt-len 160 --gen 96 [--dense]
+        --arch starcoder2-3b --slots 4 --requests 12 --gen 32 [--dense]
 """
 import argparse
 import time
 from dataclasses import replace
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config
 from repro.models import init_params
 from repro.serving.cache import cache_hbm_bytes
-from repro.serving.engine import Engine
+from repro.serving.engine import Request, Scheduler
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="starcoder2-3b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=160)
-    ap.add_argument("--gen", type=int, default=96)
+    ap.add_argument("--slots", type=int, default=4,
+                    help="batch slots in the shared cache")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--gen", type=int, default=32,
+                    help="max new tokens per request")
+    ap.add_argument("--rate", type=float, default=1.0,
+                    help="Poisson arrival rate (requests per engine step)")
     ap.add_argument("--dense", action="store_true",
                     help="disable Mustafar (dense-cache baseline)")
     ap.add_argument("--sparsity", type=float, default=0.7)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
@@ -34,26 +41,47 @@ def main():
     else:
         cfg = cfg.with_sparsity(args.sparsity, args.sparsity)
     params = init_params(jax.random.PRNGKey(0), cfg)
-    max_total = args.prompt_len + args.gen + 64
-    eng = Engine(cfg, params, max_total_tokens=max_total)
+    max_total = 64 + args.gen + 64
+    sched = Scheduler(cfg, params, n_slots=args.slots,
+                      max_total_tokens=max_total)
 
-    prompts = jax.random.randint(jax.random.PRNGKey(1),
-                                 (args.batch, args.prompt_len), 0,
-                                 cfg.vocab_size)
-    # warmup (compile)
-    _ = eng.generate(prompts, n_new=2)
+    # Poisson arrival trace with ragged prompts (a few length buckets so the
+    # per-length prefill executables amortize across requests)
+    rng = np.random.default_rng(args.seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / args.rate,
+                                         size=args.requests)).astype(int)
+    buckets = (16, 24, 40, 64)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size,
+                                        size=int(rng.choice(buckets))),
+                    max_new_tokens=args.gen,
+                    temperature=0.7)
+            for _ in range(args.requests)]
+
     t0 = time.perf_counter()
-    out = jax.block_until_ready(eng.generate(prompts, n_new=args.gen,
-                                             temperature=0.7))
+    i = 0
+    while i < args.requests or sched.has_work:
+        while i < args.requests and arrivals[i] <= sched.step_count:
+            sched.submit(reqs[i])
+            i += 1
+        sched.step()
     dt = time.perf_counter() - t0
+
+    new_tokens = sum(r.num_generated for r in sched.finished)
+    lat = [r.finish_step - r.arrival_step for r in sched.finished]
     mode = "dense" if args.dense else f"mustafar(s={args.sparsity})"
-    print(f"[{mode}] {args.batch}x{args.gen} tokens in {dt:.2f}s "
-          f"-> {args.batch*args.gen/dt:.1f} tok/s (CPU reference path)")
-    acct = cache_hbm_bytes(cfg, args.batch, max_total)
-    print(f"cache bytes: dense={acct['dense']/2**20:.1f}MiB "
+    print(f"[{mode}] {args.requests} requests x <= {args.gen} tokens over "
+          f"{sched.step_count} engine steps in {dt:.2f}s")
+    print(f"  decode throughput: {new_tokens/dt:.1f} tok/s "
+          f"(CPU reference path, incl. compiles)")
+    print(f"  batch occupancy:   {sched.occupancy*100:.1f}% "
+          f"of {args.slots} slots")
+    print(f"  latency (steps):   p50={int(np.median(lat))} "
+          f"max={int(np.max(lat))}")
+    acct = cache_hbm_bytes(cfg, args.slots, max_total)
+    print(f"  cache bytes: dense={acct['dense']/2**20:.1f}MiB "
           f"mustafar={acct['mustafar']/2**20:.1f}MiB "
           f"ratio={acct['ratio']*100:.1f}%")
-    print("sample:", out[0, :12].tolist())
+    print("  sample:", sched.finished[0].output_tokens[:12])
 
 
 if __name__ == "__main__":

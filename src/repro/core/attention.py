@@ -18,21 +18,26 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.sparse_format import unpack_fixedk
+from repro.core.sparse_format import pad_to_words, unpack_fixedk
 
 NEG_INF = -1e30
 
 
 class MustafarCacheView(NamedTuple):
-    """One layer's decode-attention operands."""
+    """One layer's decode-attention operands.
+
+    ``n_compressed`` / ``n_window`` are TRUE per-sequence vectors (not a
+    broadcast scalar): ragged continuous-batching slots sit at different
+    depths, so each batch row masks its own pool and window extent in both
+    the two-pass and chunked formulations below."""
     ck_values: jax.Array      # [B, Hkv, Tc, k_k]
     ck_bitmap: jax.Array      # [B, Hkv, Tc, d//32] uint32
     cv_values: jax.Array      # [B, Hkv, Tc, k_v]
     cv_bitmap: jax.Array      # [B, Hkv, Tc, d//32] uint32
-    n_compressed: jax.Array   # [B] int32 — valid compressed tokens
+    n_compressed: jax.Array   # [B] int32 — valid compressed tokens per row
     k_window: jax.Array       # [B, Hkv, W, d]
     v_window: jax.Array       # [B, Hkv, W, d]
-    n_window: jax.Array       # [B] int32 — valid window tokens
+    n_window: jax.Array       # [B] int32 — valid window tokens per row
 
 
 def _expand_gqa(x: jax.Array, n_q_heads: int) -> jax.Array:
@@ -186,6 +191,10 @@ def hbm_bytes_dense(T: int, d: int, itemsize: int = 2) -> int:
 
 def hbm_bytes_mustafar(Tc: int, W: int, d: int, k_k: int, k_v: int,
                        itemsize: int = 2) -> int:
-    """Compressed K + V reads plus the dense window (paper Fig. 6a model)."""
-    comp = Tc * ((k_k + k_v) * itemsize + 2 * (d // 8))
+    """Compressed K + V reads plus the dense window (paper Fig. 6a model).
+
+    Bitmap planes are stored as whole uint32 words, so a non-multiple-of-32
+    head dim (d=80: stablelm) reads pad_to_words(d)/8 bytes per row, not d/8.
+    """
+    comp = Tc * ((k_k + k_v) * itemsize + 2 * (pad_to_words(d) // 8))
     return comp + 2 * W * d * itemsize

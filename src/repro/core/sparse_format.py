@@ -104,7 +104,12 @@ def dense_bytes(T: int, d: int, itemsize: int = 2) -> int:
 
 
 def compressed_bytes(T: int, d: int, k: int, itemsize: int = 2) -> int:
-    return T * (k * itemsize + d // 8)
+    """Stored bytes per T compressed rows: packed values + bitmap planes.
+
+    The bitmap is stored as whole uint32 words (pad_to_words), so d=80
+    models (stablelm) pay ceil(80/32)=3 words = 12 bytes per row, not 10.
+    """
+    return T * (k * itemsize + pad_to_words(d) // 8)
 
 
 def compression_rate(d: int, k: int, itemsize: int = 2) -> float:

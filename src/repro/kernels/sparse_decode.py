@@ -136,25 +136,33 @@ def _fused_kernel(q_ref, kv_ref, kb_ref, vv_ref, vb_ref, nv_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[0].astype(jnp.float32)                       # [G, d]
-    k_dense = _decompress(kv_ref[0], kb_ref[0], d, kk)     # [T, d_pad]
-    s = jax.lax.dot_general(q, k_dense[:, :d], (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32) * scale  # [G, T]
-    # mask invalid tokens of the last tile
-    token_idx = t * tile_t + lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    s = jnp.where(token_idx < nv_ref[0], s, NEG_INF)
+    # Per-batch-row early-out: tiles entirely past THIS row's n_valid
+    # contribute nothing, so skip the bitmap expansion + both MXU products.
+    # Ragged continuous-batching rows differ in compressed depth, so short
+    # rows skip most of the grid. Also fixes the n_valid == 0 edge (a fully
+    # masked tile used to push exp(-inf - -inf) = 1 into l; skipped tiles
+    # leave l = 0 and the finalize guard returns a zero vector).
+    @pl.when(t * tile_t < nv_ref[0])
+    def _tile():
+        q = q_ref[0].astype(jnp.float32)                       # [G, d]
+        k_dense = _decompress(kv_ref[0], kb_ref[0], d, kk)     # [T, d_pad]
+        s = jax.lax.dot_general(q, k_dense[:, :d], (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale  # [G, T]
+        # mask invalid tokens of the last (partially valid) tile
+        token_idx = t * tile_t + lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(token_idx < nv_ref[0], s, NEG_INF)
 
-    m_prev, l_prev = m_ref[0], l_ref[0]                    # [G, 1]
-    m_cur = jnp.max(s, axis=1, keepdims=True)              # [G, 1]
-    m_new = jnp.maximum(m_prev, m_cur)
-    alpha = jnp.exp(m_prev - m_new)                        # rescale factor
-    p = jnp.exp(s - m_new)                                 # [G, T]
-    v_dense = _decompress(vv_ref[0], vb_ref[0], d, kv)     # [T, d_pad]
-    pv = jax.lax.dot_general(p, v_dense[:, :d], (((1,), (0,)), ((), ())),
-                             preferred_element_type=jnp.float32)  # [G, d]
-    acc_ref[0] = acc_ref[0] * alpha + pv
-    l_ref[0] = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
-    m_ref[0] = m_new
+        m_prev, l_prev = m_ref[0], l_ref[0]                    # [G, 1]
+        m_cur = jnp.max(s, axis=1, keepdims=True)              # [G, 1]
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)                        # rescale factor
+        p = jnp.exp(s - m_new)                                 # [G, T]
+        v_dense = _decompress(vv_ref[0], vb_ref[0], d, kv)     # [T, d_pad]
+        pv = jax.lax.dot_general(p, v_dense[:, :d], (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # [G, d]
+        acc_ref[0] = acc_ref[0] * alpha + pv
+        l_ref[0] = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+        m_ref[0] = m_new
 
     @pl.when(t == pl.num_programs(1) - 1)
     def _finalize():

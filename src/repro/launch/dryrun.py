@@ -169,9 +169,11 @@ def lower_cell(arch: str, shape_name: str, mesh, *, fsdp: bool = True,
                              - mem.alias_size_in_bytes),
     }
     corr = roofline.scan_corrections(cfg, shape, mode)
-    # decode: the lax.cond compaction branch executes once per tile_tokens
-    # steps; amortize its collectives accordingly (raw numbers kept under
-    # the *_cond keys of the breakdown).
+    # decode: per-slot compaction sits behind an any-slot lax.cond that, in
+    # lockstep, takes the compress branch once per tile_tokens steps (ragged
+    # slots can fire more often, up to once per step at full stagger);
+    # amortize its collectives by the lockstep factor (raw numbers kept
+    # under the *_cond keys of the breakdown).
     amort = (1.0 / cfg.mustafar.tile_tokens
              if mode == "decode" and cfg.mustafar.enabled else 1.0)
     terms = roofline.terms_from_compiled(compiled, n_chips,

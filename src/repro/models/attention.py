@@ -37,7 +37,11 @@ def init_attention(key, cfg: ModelConfig):
 def qkv_proj(p, x: jax.Array, cfg: ModelConfig,
              positions: Optional[jax.Array] = None,
              rope: bool = True) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """x [B, T, D] -> q [B, T, Hq, dh], k/v [B, T, Hkv, dh] (RoPE applied)."""
+    """x [B, T, D] -> q [B, T, Hq, dh], k/v [B, T, Hkv, dh] (RoPE applied).
+
+    ``positions`` may be [T]/[1, T] (lockstep prefill) or a true per-sequence
+    [B, T] — ragged continuous-batching decode rotates each batch row at its
+    own offset; a [B] vector of scalar offsets is accepted as shorthand."""
     B, T, _ = x.shape
     dt = cdtype(cfg)
     q = jnp.einsum("btd,de->bte", x, p["wq"].astype(dt))
@@ -51,6 +55,8 @@ def qkv_proj(p, x: jax.Array, cfg: ModelConfig,
     if rope and cfg.pos_embedding == "rope":
         if positions is None:
             positions = jnp.arange(T)[None, :]
+        elif positions.ndim == 1 and T == 1:
+            positions = positions[:, None]       # [B] ragged offsets -> [B,1]
         # rope expects [..., T, d]: swap to [B, H, T, d]
         q = apply_rope(q.swapaxes(1, 2), positions, cfg).swapaxes(1, 2)
         k = apply_rope(k.swapaxes(1, 2), positions, cfg).swapaxes(1, 2)

@@ -221,10 +221,12 @@ def scan_corrections(cfg: ModelConfig, shape: ShapeConfig,
             kk = m.keep_k(d, m.key_sparsity)
             kv = m.keep_k(d, m.value_sparsity)
             n_attn = len(cfg.attention_layers())
+            from repro.core.sparse_format import pad_to_words
             itemsize = 2
             # per-chunk: read compressed K+V chunk, decompress, 2 matvecs
+            # (bitmap stored as whole uint32 words: pad_to_words(d)/8 bytes)
             body_by = B * cfg.n_kv_heads * chunk * (
-                (kk + kv) * itemsize + 2 * (d // 8))
+                (kk + kv) * itemsize + 2 * (pad_to_words(d) // 8))
             body_fl = 4.0 * B * cfg.n_heads * chunk * d \
                 + 2.0 * B * cfg.n_kv_heads * chunk * d * 2   # decompress ops
             fl += (n_chunks - 1) * n_attn * body_fl

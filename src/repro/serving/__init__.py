@@ -1,3 +1,6 @@
-"""Serving: Mustafar KV-cache manager, prefill/decode engine, sampler."""
-from repro.serving.cache import cache_hbm_bytes, init_cache, plan_pools
-from repro.serving.engine import Engine, decode_step, prefill
+"""Serving: Mustafar KV-cache manager, prefill/decode engine, sampler,
+continuous-batching scheduler."""
+from repro.serving.cache import (cache_hbm_bytes, init_cache, plan_pools,
+                                 write_slot)
+from repro.serving.engine import (Engine, Request, Scheduler, decode_step,
+                                  prefill, prefill_into_slot)

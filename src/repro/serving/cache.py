@@ -13,6 +13,14 @@ All updates are pure-functional ``dynamic_update_slice``s under jit —
 the XLA/pjit analogue of the paper's CUDA-side cache pointer management.
 Mamba layers carry (conv, ssm) state, RWKV layers carry (shift, wkv) state,
 Whisper decoder layers additionally hold static cross-attention K/V.
+
+Sequence-progress state (``position``, ``w_len``, ``n_compressed``) is
+PER-SEQUENCE: ``[B]`` int32 vectors, one entry per batch slot. Slots advance
+independently — each slot appends at its own window offset and retires a
+tile group when *its own* window fills (per-slot masked updates; the engine
+wraps them in an any-slot work-skip cond) — which is what lets the
+continuous-batching scheduler in ``serving.engine`` admit/release ragged
+requests without forcing the batch into lockstep.
 """
 from __future__ import annotations
 
@@ -53,15 +61,22 @@ def plan_pools(cfg: ModelConfig, max_total_tokens: int,
 
 
 def layer_cache_shapes(cfg: ModelConfig, kind: str, B: int,
-                       max_total_tokens: int, enc_ctx: int = 0) -> Dict[str, Any]:
-    """Shape/dtype spec for one layer kind (without the stacked period dim)."""
+                       max_total_tokens: int, enc_ctx: int = 0,
+                       plan_batch: Optional[int] = None) -> Dict[str, Any]:
+    """Shape/dtype spec for one layer kind (without the stacked period dim).
+
+    ``plan_batch`` overrides the batch used for pool *planning* (Tc_max
+    alignment) without changing the allocated batch dim — a solo (B=1)
+    prefill destined for one slot of an n-slot shared cache must plan with
+    the shared batch so the pool shapes line up for the slot splice."""
     d = cfg.d_head
     Hkv = cfg.n_kv_heads
     W32 = pad_to_words(d) // 32
     m = cfg.mustafar
     cdt = jnp.dtype(cfg.dtype)
     if kind == "attn":
-        Tc_max, Wbuf = plan_pools(cfg, max_total_tokens, batch=B)
+        Tc_max, Wbuf = plan_pools(cfg, max_total_tokens,
+                                  batch=B if plan_batch is None else plan_batch)
         if m.enabled:
             kk = m.keep_k(d, m.key_sparsity)
             kv = m.keep_k(d, m.value_sparsity)
@@ -94,7 +109,7 @@ def layer_cache_shapes(cfg: ModelConfig, kind: str, B: int,
 def init_cache(cfg: ModelConfig, B: int, max_total_tokens: int,
                enc_ctx: int = 0):
     """Zero-filled cache pytree: (blocks=tuple over period positions of
-    stacked [n_periods, ...] dicts, position=0, w_len=0, n_compressed=0)."""
+    stacked [n_periods, ...] dicts, plus per-sequence [B] state vectors)."""
     period = structural_period(cfg)
     n_periods = cfg.n_layers // period
     blocks = []
@@ -105,34 +120,38 @@ def init_cache(cfg: ModelConfig, B: int, max_total_tokens: int,
                        for k, (shp, dt) in spec.items()})
     return {
         "blocks": tuple(blocks),
-        "position": jnp.zeros((), jnp.int32),       # total tokens so far
-        "w_len": jnp.zeros((), jnp.int32),          # valid window tokens
-        "n_compressed": jnp.zeros((), jnp.int32),   # tokens in pools
+        "position": jnp.zeros((B,), jnp.int32),       # total tokens per slot
+        "w_len": jnp.zeros((B,), jnp.int32),          # valid window per slot
+        "n_compressed": jnp.zeros((B,), jnp.int32),   # pool tokens per slot
     }
 
 
 # ----------------------------------------------------------------------
 # compaction (tile-group retirement: window -> compressed pools)
 
-def compact_layer(cfg: ModelConfig, lc: Dict[str, jax.Array],
-                  n_compressed: jax.Array) -> Dict[str, jax.Array]:
-    """Compress the oldest tile_tokens of the window into the pools and
-    roll the window left. Call only on attention-layer caches (no period
-    dim — operates inside the scan body on a single layer slice)."""
+# leaves mutated by tile-group retirement (cross_k/cross_v etc. pass through)
+_COMPACT_KEYS = ("ck_vals", "ck_bm", "cv_vals", "cv_bm", "k_win", "v_win")
+
+
+def _compact_layer_seq(cfg: ModelConfig, lc: Dict[str, jax.Array],
+                       n_compressed: jax.Array) -> Dict[str, jax.Array]:
+    """ONE sequence's tile-group retirement: compress the oldest tile_tokens
+    of its window into its pools at offset ``n_compressed`` (scalar) and roll
+    the window left. Leaves carry no batch dim (k_win [Hkv, Wbuf, d])."""
     m = cfg.mustafar
     d = cfg.d_head
     tt = m.tile_tokens
     kk = m.keep_k(d, m.key_sparsity)
     kv = m.keep_k(d, m.value_sparsity)
 
-    k_tile = lc["k_win"][:, :, :tt, :]                 # [B,Hkv,tt,d]
-    v_tile = lc["v_win"][:, :, :tt, :]
+    k_tile = lc["k_win"][:, :tt, :]                    # [Hkv,tt,d]
+    v_tile = lc["v_win"][:, :tt, :]
     ck_v, ck_b = kops.compress(k_tile, kk)
     cv_v, cv_b = kops.compress(v_tile, kv)
 
     def upd(pool, tile):
         return jax.lax.dynamic_update_slice(
-            pool, tile.astype(pool.dtype), (0, 0, n_compressed, 0))
+            pool, tile.astype(pool.dtype), (0, n_compressed, 0))
 
     out = dict(lc)
     out["ck_vals"] = upd(lc["ck_vals"], ck_v)
@@ -140,19 +159,47 @@ def compact_layer(cfg: ModelConfig, lc: Dict[str, jax.Array],
     out["cv_vals"] = upd(lc["cv_vals"], cv_v)
     out["cv_bm"] = upd(lc["cv_bm"], cv_b)
     # roll the window left by tile_tokens (retired tokens drop out)
-    out["k_win"] = jnp.roll(lc["k_win"], -tt, axis=2)
-    out["v_win"] = jnp.roll(lc["v_win"], -tt, axis=2)
+    out["k_win"] = jnp.roll(lc["k_win"], -tt, axis=1)
+    out["v_win"] = jnp.roll(lc["v_win"], -tt, axis=1)
+    return out
+
+
+def compact_layer(cfg: ModelConfig, lc: Dict[str, jax.Array],
+                  n_compressed: jax.Array,
+                  need: Optional[jax.Array] = None) -> Dict[str, jax.Array]:
+    """Per-slot tile-group retirement on a batched layer cache.
+
+    lc leaves are [B, Hkv, ...]; ``n_compressed`` is the per-sequence [B]
+    pool fill. Each slot compacts at its own pool offset; slots where
+    ``need`` is False keep their original contents via a masked select —
+    no ``lax.cond``, so slots trigger independently of any global counter.
+    (The compress runs for every slot every call; the select discards the
+    unneeded ones. That is the static-shape price of raggedness.)"""
+    sub = {k: lc[k] for k in _COMPACT_KEYS}
+    comp = jax.vmap(lambda one, nc: _compact_layer_seq(cfg, one, nc))(
+        sub, n_compressed)
+    out = dict(lc)
+    for k in _COMPACT_KEYS:
+        if need is None:
+            out[k] = comp[k]
+        else:
+            mask = need.reshape((-1,) + (1,) * (comp[k].ndim - 1))
+            out[k] = jnp.where(mask, comp[k], lc[k])
     return out
 
 
 def append_window(lc: Dict[str, jax.Array], k_new: jax.Array, v_new: jax.Array,
                   w_len: jax.Array) -> Dict[str, jax.Array]:
-    """Append one token's K/V [B, Hkv, 1, d] at window position w_len."""
+    """Append one token's K/V [B, Hkv, 1, d] at each sequence's own window
+    offset ``w_len`` [B] (ragged slots write at different positions)."""
+
+    def upd(buf, tok, wl):                             # per-sequence DUS
+        return jax.lax.dynamic_update_slice(
+            buf, tok.astype(buf.dtype), (0, wl, 0))
+
     out = dict(lc)
-    out["k_win"] = jax.lax.dynamic_update_slice(
-        lc["k_win"], k_new.astype(lc["k_win"].dtype), (0, 0, w_len, 0))
-    out["v_win"] = jax.lax.dynamic_update_slice(
-        lc["v_win"], v_new.astype(lc["v_win"].dtype), (0, 0, w_len, 0))
+    out["k_win"] = jax.vmap(upd)(lc["k_win"], k_new, w_len)
+    out["v_win"] = jax.vmap(upd)(lc["v_win"], v_new, w_len)
     return out
 
 
@@ -165,15 +212,19 @@ def prefill_split(cfg: ModelConfig, T: int) -> Tuple[int, int]:
 
 def build_layer_cache_from_prefill(cfg: ModelConfig, k: jax.Array, v: jax.Array,
                                    max_total_tokens: int,
-                                   cross_kv=None) -> Dict[str, jax.Array]:
+                                   cross_kv=None,
+                                   plan_batch: Optional[int] = None
+                                   ) -> Dict[str, jax.Array]:
     """k/v [B, T, Hkv, d] from a dense prefill -> one layer's Mustafar cache
-    (no period dim; the engine scans this per layer)."""
+    (no period dim; the engine scans this per layer). ``plan_batch`` forces
+    the pool planning batch (see layer_cache_shapes) for slot prefills."""
     B, T, Hkv, d = k.shape
     m = cfg.mustafar
     kT = jnp.swapaxes(k, 1, 2)                         # [B,Hkv,T,d]
     vT = jnp.swapaxes(v, 1, 2)
     spec = layer_cache_shapes(cfg, "attn", B, max_total_tokens,
-                              enc_ctx=cross_kv[0].shape[1] if cross_kv else 0)
+                              enc_ctx=cross_kv[0].shape[1] if cross_kv else 0,
+                              plan_batch=plan_batch)
     lc = {name: jnp.zeros(shp, dt) for name, (shp, dt) in spec.items()}
     if m.enabled:
         comp, win = prefill_split(cfg, T)
@@ -200,6 +251,35 @@ def build_layer_cache_from_prefill(cfg: ModelConfig, k: jax.Array, v: jax.Array,
     if cross_kv is not None:
         lc["cross_k"], lc["cross_v"] = cross_kv
     return lc
+
+
+# ----------------------------------------------------------------------
+# slot splice (continuous batching: one sequence into a shared cache)
+
+def write_slot(cache, solo_cache, slot):
+    """Splice a single-sequence cache (batch dim 1, planned with the shared
+    batch — see ``plan_batch``) into batch slot ``slot`` of a shared
+    multi-slot cache.
+
+    Every block leaf is written via ``dynamic_update_slice`` on the batch
+    axis (axis 1 under the period stack) — compressed pools, bitmap planes,
+    the right-padded window buffer, and mamba/rwkv/cross state alike — and
+    the per-sequence state vectors take the solo values at index ``slot``.
+    Because the solo cache leaves cover the slot's full extent, this also
+    fully resets whatever a retired request left behind."""
+    new_blocks = []
+    for shared_lc, solo_lc in zip(cache["blocks"], solo_cache["blocks"]):
+        nl = dict(shared_lc)
+        for name, leaf in shared_lc.items():
+            src = solo_lc[name].astype(leaf.dtype)
+            start = (0, slot) + (0,) * (leaf.ndim - 2)
+            nl[name] = jax.lax.dynamic_update_slice(leaf, src, start)
+        new_blocks.append(nl)
+    out = dict(cache)
+    out["blocks"] = tuple(new_blocks)
+    for key in ("position", "w_len", "n_compressed"):
+        out[key] = cache[key].at[slot].set(solo_cache[key][0])
+    return out
 
 
 def cache_hbm_bytes(cfg: ModelConfig, B: int, max_total_tokens: int) -> Dict[str, int]:

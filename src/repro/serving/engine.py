@@ -1,27 +1,43 @@
-"""Batched serving engine: dense/flash prefill + Mustafar decode.
+"""Batched serving engine: dense/flash prefill + Mustafar decode + a
+continuous-batching scheduler.
 
 ``prefill``  — full-sequence forward (FlashAttention-compatible, paper §3),
                then prune+compress everything older than the local window
                into the bitmap pools (tile groups of 64).
-``decode_step`` — one token for the whole batch: appends to the dense local
-               window, runs the two-part (compressed ⊕ window) attention,
-               and every ``tile_tokens`` steps retires the oldest tile group
-               from the window into the pools (lax.cond — static shapes).
+``decode_step`` — one token for the whole batch. ALL sequence-progress state
+               is per-sequence ([B] int32 vectors): each slot appends at its
+               own window offset, attends under its own validity masks, and
+               retires a tile group when *its own* window fills (per-slot
+               masked updates behind an any-slot work-skip cond — no global
+               counter decides who compacts). An ``active`` mask
+               freezes the counters of empty slots so a partially-filled
+               batch decodes correctly.
+``prefill_into_slot`` — ragged admission: prefill ONE sequence (any length)
+               and splice its pools + right-padded window into a chosen slot
+               of the shared cache via ``dynamic_update_slice``.
+``Scheduler`` / ``Request`` — continuous batching on top: a request queue
+               with slot-based admission, batched decode over whatever mix
+               of sequences currently occupies the slots, and slot release/
+               reuse on EOS or max-length.
 
-Both are pure functions of (params, inputs, cache) so they pjit cleanly;
-``serve_step`` for the dry-run grid is ``decode_step`` under the production
-mesh. The Engine class wraps them with jit and a sampling loop.
+All step functions are pure functions of (params, inputs, cache) so they
+pjit cleanly; ``serve_step`` for the dry-run grid is ``decode_step`` under
+the production mesh. The Engine class wraps them with jit and a lockstep
+sampling loop (kept for benchmarks and equivalence tests).
 """
 from __future__ import annotations
 
+import collections
+from dataclasses import dataclass, field
 from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.attention import (MustafarCacheView, decode_attention_dense,
+from repro.core.attention import (DECODE_CHUNK, MustafarCacheView,
+                                  decode_attention_dense,
                                   decode_attention_mustafar,
                                   decode_attention_mustafar_chunked)
 from repro.models import attention as attn
@@ -57,10 +73,13 @@ def _ffn(bp, h, cfg: ModelConfig, kind: str, ffn_kind: str,
 
 def prefill(params, tokens: jax.Array, cfg: ModelConfig,
             max_total_tokens: int,
-            extra: Optional[Dict[str, jax.Array]] = None):
+            extra: Optional[Dict[str, jax.Array]] = None,
+            plan_batch: Optional[int] = None):
     """tokens [B, T] -> (logits [B, V] at last position, cache).
 
     extra carries the stub modality inputs (frames / patches).
+    ``plan_batch`` forces the compressed-pool planning batch so a solo (B=1)
+    prefill produces pool shapes matching an n-slot shared cache.
     """
     extra = extra or {}
     B, T = tokens.shape
@@ -99,7 +118,7 @@ def prefill(params, tokens: jax.Array, cfg: ModelConfig,
                     x = x + attn.cross_attention_block(bp["cross"], hc,
                                                        cross_kv, cfg)
                 lc = cache_mod.build_layer_cache_from_prefill(
-                    cfg, k, v, max_total_tokens, cross_kv)
+                    cfg, k, v, max_total_tokens, cross_kv, plan_batch)
             elif kind == "mamba":
                 st = mamba_mod.mamba_state_shapes(cfg, B)
                 mix, (conv_st, ssm_st) = mamba_mod.mamba_apply(
@@ -131,9 +150,9 @@ def prefill(params, tokens: jax.Array, cfg: ModelConfig,
     m = cfg.mustafar
     cache = {
         "blocks": block_caches,
-        "position": jnp.asarray(T_total, jnp.int32),
-        "w_len": jnp.asarray(win if m.enabled else 0, jnp.int32),
-        "n_compressed": jnp.asarray(comp if m.enabled else 0, jnp.int32),
+        "position": jnp.full((B,), T_total, jnp.int32),
+        "w_len": jnp.full((B,), win if m.enabled else 0, jnp.int32),
+        "n_compressed": jnp.full((B,), comp if m.enabled else 0, jnp.int32),
     }
     return logits, cache
 
@@ -142,10 +161,13 @@ def prefill(params, tokens: jax.Array, cfg: ModelConfig,
 # decode
 
 def _attn_decode(bp, h, cfg: ModelConfig, lc, position, w_len, n_compressed):
-    """One attention layer, one token. h [B,1,D] -> (out [B,1,D], new lc)."""
+    """One attention layer, one token. h [B,1,D] -> (out [B,1,D], new lc).
+
+    ``position``/``w_len``/``n_compressed`` are per-sequence [B] vectors —
+    RoPE rotates each row at its own ragged offset and the validity masks
+    differ per row, so slots at different depths coexist in one batch."""
     B = h.shape[0]
-    pos = jnp.broadcast_to(position, (B, 1))
-    q, k, v = attn.qkv_proj(bp["mixer"], h, cfg, pos)         # [B,1,H,dh]
+    q, k, v = attn.qkv_proj(bp["mixer"], h, cfg, position[:, None])  # [B,1,H,dh]
     m = cfg.mustafar
     if m.enabled:
         lc = cache_mod.append_window(lc, jnp.swapaxes(k, 1, 2),
@@ -153,31 +175,34 @@ def _attn_decode(bp, h, cfg: ModelConfig, lc, position, w_len, n_compressed):
         view = MustafarCacheView(
             ck_values=lc["ck_vals"], ck_bitmap=lc["ck_bm"],
             cv_values=lc["cv_vals"], cv_bitmap=lc["cv_bm"],
-            n_compressed=jnp.broadcast_to(n_compressed, (B,)),
+            n_compressed=n_compressed,
             k_window=lc["k_win"], v_window=lc["v_win"],
-            n_window=jnp.broadcast_to(w_len + 1, (B,)))
+            n_window=w_len + 1)
         # path choice: the chunked scan bounds temp memory, but its reshape
         # of the (possibly context-sharded) Tc dim defeats GSPMD propagation
         # — measured 70 GiB/step of pool all-gathers at B=1/524k. Small
         # decompressed sizes use the two-pass formulation (partial softmax
-        # over the Tc-sharded dim lowers to tiny all-reduces); big batches
-        # use the chunked scan (whole-pool decompression would be ~10 GiB).
-        if B == 1:
+        # over the Tc-sharded dim lowers to tiny all-reduces); a pool at or
+        # under one chunk degenerates to the same temp footprint, so it also
+        # takes the two-pass path (keeps ragged-batch numerics identical to
+        # a solo run). Big batches over multiple chunks use the online scan
+        # (whole-pool decompression would be ~10 GiB).
+        Tc = lc["ck_vals"].shape[2]
+        if B == 1 or Tc <= DECODE_CHUNK:
             out = decode_attention_mustafar(q[:, 0], view,
                                             scale=cfg.d_head ** -0.5)
         else:
             out = decode_attention_mustafar_chunked(q[:, 0], view,
                                                     scale=cfg.d_head ** -0.5)
     else:
+        def upd(buf, tok, p):                          # per-sequence DUS
+            return jax.lax.dynamic_update_slice(
+                buf, tok.astype(buf.dtype), (0, p, 0))
+
         lc = dict(lc)
-        lc["k"] = jax.lax.dynamic_update_slice(
-            lc["k"], jnp.swapaxes(k, 1, 2).astype(lc["k"].dtype),
-            (0, 0, position, 0))
-        lc["v"] = jax.lax.dynamic_update_slice(
-            lc["v"], jnp.swapaxes(v, 1, 2).astype(lc["v"].dtype),
-            (0, 0, position, 0))
-        out = decode_attention_dense(q[:, 0], lc["k"], lc["v"],
-                                     jnp.broadcast_to(position + 1, (B,)),
+        lc["k"] = jax.vmap(upd)(lc["k"], jnp.swapaxes(k, 1, 2), position)
+        lc["v"] = jax.vmap(upd)(lc["v"], jnp.swapaxes(v, 1, 2), position)
+        out = decode_attention_dense(q[:, 0], lc["k"], lc["v"], position + 1,
                                      scale=cfg.d_head ** -0.5)
     y = attn.o_proj(bp["mixer"],
                     out[:, None, :, :].reshape(B, 1, cfg.n_heads, cfg.d_head),
@@ -185,40 +210,59 @@ def _attn_decode(bp, h, cfg: ModelConfig, lc, position, w_len, n_compressed):
     return y, lc
 
 
-def decode_step(params, token: jax.Array, cache, cfg: ModelConfig):
-    """token [B] -> (logits [B, V], new cache). One step for the batch."""
+def decode_step(params, token: jax.Array, cache, cfg: ModelConfig,
+                active: Optional[jax.Array] = None):
+    """token [B] -> (logits [B, V], new cache). One step for the batch.
+
+    Every slot advances independently: per-sequence [B] counters, per-slot
+    compaction, per-row RoPE/masks. ``active`` [B] bool (default all-True)
+    freezes the counters of empty slots — their rows still flow through the
+    network (static shapes) but their cache state does not advance, so a
+    scheduler can decode a partially-occupied batch and later reuse the
+    slot via ``prefill_into_slot``."""
     B = token.shape[0]
     m = cfg.mustafar
     period = structural_period(cfg)
+    position = cache["position"]                   # [B]
+    w_len = cache["w_len"]                         # [B]
+    n_comp = cache["n_compressed"]                 # [B]
+    act = jnp.ones((B,), jnp.int32) if active is None \
+        else active.astype(jnp.int32)
+    blocks = cache["blocks"]
 
-    # --- tile-group compaction when the window buffer is full ---
+    # --- per-slot tile-group compaction: a slot retires its oldest tile
+    # group exactly when its OWN window fills. The per-slot decision is a
+    # masked select (jnp.where inside compact_layer — no global counter,
+    # slots at different depths compact at different steps); an outer
+    # any-slot cond skips the compress entirely on the ~(tile_tokens-1)/
+    # tile_tokens of steps where no slot is due, restoring the amortized
+    # cost of the old lockstep path without coupling the slots ---
     if m.enabled and any(cfg.layer_kind(j) == "attn" for j in range(period)):
         Wbuf = m.local_window + m.tile_tokens
+        # per-slot trigger; inactive slots are frozen entirely (a request
+        # can retire the very step its window fills — the dead slot must
+        # not keep mutating its pools/counters)
+        need = (w_len >= Wbuf) & (act > 0)         # [B]
 
-        def do_compact(c):
+        def do_compact(blocks):
             new_blocks = []
             for j in range(period):
-                lc = c["blocks"][j]
+                lc = blocks[j]
                 if cfg.layer_kind(j) == "attn":
                     lc = jax.vmap(lambda one: cache_mod.compact_layer(
-                        cfg, one, c["n_compressed"]))(lc)
+                        cfg, one, n_comp, need))(lc)
                 new_blocks.append(lc)
-            out = dict(c)
-            out["blocks"] = tuple(new_blocks)
-            out["w_len"] = c["w_len"] - m.tile_tokens
-            out["n_compressed"] = c["n_compressed"] + m.tile_tokens
-            return out
+            return tuple(new_blocks)
 
-        cache = jax.lax.cond(cache["w_len"] >= Wbuf,
-                             do_compact, lambda c: c, cache)
+        blocks = jax.lax.cond(jnp.any(need), do_compact, lambda b: b, blocks)
+        w_len = jnp.where(need, w_len - m.tile_tokens, w_len)
+        n_comp = jnp.where(need, n_comp + m.tile_tokens, n_comp)
 
     x = embed_tokens(params["embed"], token[:, None], cfg)     # [B,1,D]
     x = shard_activation(x, DP, None, None)
     if cfg.family == "audio":
-        x = x + params["embed"]["positions"][cache["position"]][None, None]
-    position = cache["position"]
-    w_len = cache["w_len"]
-    n_comp = cache["n_compressed"]
+        # per-sequence learned positions at each slot's own offset
+        x = x + params["embed"]["positions"][position][:, None, :]
 
     def body(carry, xs):
         x = carry
@@ -254,17 +298,218 @@ def decode_step(params, token: jax.Array, cache, cfg: ModelConfig):
             new_caches.append(lc)
         return x, tuple(new_caches)
 
-    x, new_blocks = jax.lax.scan(body, x, (params["blocks"], cache["blocks"]),
+    x, new_blocks = jax.lax.scan(body, x, (params["blocks"], blocks),
                                  unroll=layer_scan_unroll())
     x = norm_apply(params["final_norm"], x, cfg.norm)
     logits = lm_logits(params["embed"], x, cfg)[:, 0, :]
     new_cache = {
         "blocks": new_blocks,
-        "position": position + 1,
-        "w_len": w_len + 1 if m.enabled else jnp.asarray(0, jnp.int32),
+        "position": position + act,                # frozen where inactive
+        "w_len": w_len + act if m.enabled else jnp.zeros_like(w_len),
         "n_compressed": n_comp,
     }
     return logits, new_cache
+
+
+# ----------------------------------------------------------------------
+# continuous batching: ragged admission + scheduler
+
+def prefill_into_slot(params, tokens: jax.Array, cache, slot, cfg: ModelConfig,
+                      max_total_tokens: int,
+                      extra: Optional[Dict[str, jax.Array]] = None,
+                      prefill_fn=None):
+    """Prefill ONE sequence (tokens [1, T], any T — requests stay ragged)
+    and splice its compressed pools + right-padded window into batch slot
+    ``slot`` of the shared cache via ``dynamic_update_slice``.
+
+    Returns (last-position logits [V], new shared cache). The solo prefill
+    plans its pools with the shared batch size so the leaf shapes line up.
+    ``prefill_fn`` overrides the solo prefill callable — the Scheduler
+    passes its jitted one; it must accept (params, tokens) and already
+    bind cfg/max_total/plan_batch consistently with this cache.
+    """
+    if prefill_fn is None:
+        n_slots = cache["position"].shape[0]
+        prefill_fn = lambda p, t: prefill(p, t, cfg, max_total_tokens,
+                                          extra=extra, plan_batch=n_slots)
+    logits, solo = prefill_fn(params, tokens)
+    return logits[0], cache_mod.write_slot(cache, solo, slot)
+
+
+@dataclass
+class Request:
+    """One generation request for the Scheduler."""
+    prompt: Any                          # [T] int tokens (list/np/jnp)
+    max_new_tokens: int
+    eos_token_id: Optional[int] = None
+    temperature: float = 0.0
+    uid: int = -1
+    # filled in by the scheduler:
+    arrival_step: int = -1               # engine step when submitted
+    prefill_step: int = -1               # engine step when admitted
+    finish_step: int = -1                # engine step when retired
+    output_tokens: List[int] = field(default_factory=list)
+    logits: List[Any] = field(default_factory=list)  # per-token, if collected
+
+    @property
+    def num_generated(self) -> int:
+        return len(self.output_tokens)
+
+    @property
+    def done(self) -> bool:
+        return self.finish_step >= 0
+
+
+class Scheduler:
+    """Continuous-batching serving loop over a shared ``n_slots`` cache.
+
+    Each engine step: (1) admit waiting requests into free slots (ragged
+    solo prefill spliced in via ``prefill_into_slot`` — the first output
+    token comes from the prefill logits), (2) one batched ``decode_step``
+    over whatever mix of sequences currently occupies the slots (empty
+    slots ride along frozen under the ``active`` mask), (3) sample one
+    token per active slot, retiring sequences on EOS or max-new-tokens and
+    releasing their slots for immediate reuse.
+
+    Per-request math matches running that request alone through the
+    lockstep path: every decode op is row-independent and each slot's
+    counters/compaction advance exactly as a solo run's would (asserted in
+    tests/test_scheduler.py). With pools at or under one decode chunk
+    (Tc <= DECODE_CHUNK) both take the two-pass attention and the match is
+    bit-exact; larger pools decode batched via the chunked online softmax,
+    whose fp reordering vs the solo two-pass path can differ in the last
+    ulp (greedy ties may resolve differently at that scale).
+    """
+
+    def __init__(self, cfg: ModelConfig, params, n_slots: int,
+                 max_total_tokens: int, seed: int = 0,
+                 collect_logits: bool = False):
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_total = max_total_tokens
+        self.cache = cache_mod.init_cache(cfg, n_slots, max_total_tokens)
+        self.slots: List[Optional[Request]] = [None] * n_slots
+        self.waiting: Deque[Request] = collections.deque()
+        self.next_tokens = jnp.zeros((n_slots,), jnp.int32)
+        self.rng = jax.random.PRNGKey(seed)
+        self.collect_logits = collect_logits
+        self.finished: List[Request] = []
+        self.step_count = 0
+        self.decode_steps = 0
+        self.busy_slot_steps = 0
+        self._uid = 0
+        self._decode = jax.jit(partial(decode_step, cfg=cfg))
+        self._prefill = jax.jit(partial(prefill, cfg=cfg,
+                                        max_total_tokens=max_total_tokens,
+                                        plan_batch=n_slots))
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> Request:
+        """Queue a request (admitted at the next step with a free slot)."""
+        n_prompt = len(req.prompt)
+        if n_prompt + req.max_new_tokens > self.max_total:
+            raise ValueError(
+                f"request needs {n_prompt}+{req.max_new_tokens} tokens; "
+                f"cache holds {self.max_total}")
+        if req.uid < 0:
+            req.uid = self._uid
+        self._uid = max(self._uid, req.uid) + 1
+        req.arrival_step = self.step_count
+        self.waiting.append(req)
+        return req
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting) or any(s is not None for s in self.slots)
+
+    @property
+    def occupancy(self) -> float:
+        """Mean fraction of slots doing useful work per decode step."""
+        return self.busy_slot_steps / max(1, self.decode_steps * self.n_slots)
+
+    # ------------------------------------------------------------------
+    def _sample_one(self, logits: jax.Array, req: Request) -> int:
+        from repro.serving.sampler import sample
+        self.rng, sub = jax.random.split(self.rng)
+        return int(sample(logits[None], req.temperature, sub)[0])
+
+    def _sample_batch(self, logits: jax.Array):
+        """One batched sample call + ONE device->host transfer per decode
+        step when every active request shares a temperature (the common
+        case); returns None to fall back to per-slot sampling otherwise."""
+        import numpy as np
+
+        from repro.serving.sampler import sample
+        temps = {r.temperature for r in self.slots if r is not None}
+        if len(temps) != 1:
+            return None
+        self.rng, sub = jax.random.split(self.rng)
+        return np.asarray(sample(logits, temps.pop(), sub))
+
+    def _retire(self, req: Request) -> None:
+        req.finish_step = self.step_count
+        self.finished.append(req)
+
+    def _record(self, req: Request, tok: int, logits: jax.Array) -> bool:
+        """Append one sampled token; True if the request just finished."""
+        req.output_tokens.append(tok)
+        if self.collect_logits:
+            import numpy as np
+            req.logits.append(np.asarray(logits, np.float32))
+        if ((req.eos_token_id is not None and tok == req.eos_token_id)
+                or req.num_generated >= req.max_new_tokens):
+            self._retire(req)
+            return True
+        return False
+
+    def _admit(self) -> None:
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        while free and self.waiting:
+            slot = free[0]
+            req = self.waiting.popleft()
+            toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
+            # jit caches one prefill executable per distinct prompt length
+            lg, self.cache = prefill_into_slot(
+                self.params, toks, self.cache, slot, self.cfg, self.max_total,
+                prefill_fn=self._prefill)
+            req.prefill_step = self.step_count
+            tok = self._sample_one(lg, req)
+            if self._record(req, tok, lg):
+                continue                 # finished on the prefill token;
+                                         # slot stays free for the next one
+            free.pop(0)
+            self.slots[slot] = req
+            self.next_tokens = self.next_tokens.at[slot].set(tok)
+
+    # ------------------------------------------------------------------
+    def step(self) -> None:
+        """One engine iteration: admit → batched decode → sample/retire."""
+        self._admit()
+        active_flags = [s is not None for s in self.slots]
+        if any(active_flags):
+            active = jnp.asarray(active_flags)
+            logits, self.cache = self._decode(self.params, self.next_tokens,
+                                              self.cache, active=active)
+            self.decode_steps += 1
+            self.busy_slot_steps += sum(active_flags)
+            batch_toks = self._sample_batch(logits)
+            for slot, req in enumerate(self.slots):
+                if req is None:
+                    continue
+                tok = (int(batch_toks[slot]) if batch_toks is not None
+                       else self._sample_one(logits[slot], req))
+                if self._record(req, tok, logits[slot]):
+                    self.slots[slot] = None          # released for reuse
+                else:
+                    self.next_tokens = self.next_tokens.at[slot].set(tok)
+        self.step_count += 1
+
+    def run(self, max_steps: int = 1 << 20) -> List[Request]:
+        """Drive until the queue and all slots drain; returns finished."""
+        while self.has_work and self.step_count < max_steps:
+            self.step()
+        return self.finished
 
 
 # ----------------------------------------------------------------------

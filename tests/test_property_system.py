@@ -3,7 +3,12 @@ serving counters) — beyond the per-kernel sweeps in test_kernels.py."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from dataclasses import replace
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis "
+                           "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_config
@@ -111,9 +116,13 @@ def test_serving_counters(T, n_dec, seed):
     step = jax.jit(lambda p, t, c: decode_step(p, t, c, CFG))
     for t in range(T, T + n_dec):
         lg, cache = step(PARAMS, toks[:, t], cache)
-    assert int(cache["position"]) == T + n_dec
-    nc, wl = int(cache["n_compressed"]), int(cache["w_len"])
-    assert nc % m.tile_tokens == 0
-    assert nc + wl == T + n_dec
-    assert 0 <= wl <= m.local_window + m.tile_tokens
+    # state vectors are per-sequence [B]; the invariants hold per slot
+    pos = np.asarray(cache["position"])
+    nc = np.asarray(cache["n_compressed"])
+    wl = np.asarray(cache["w_len"])
+    assert pos.shape == nc.shape == wl.shape == (2,)
+    np.testing.assert_array_equal(pos, T + n_dec)
+    assert (nc % m.tile_tokens == 0).all()
+    np.testing.assert_array_equal(nc + wl, T + n_dec)
+    assert (0 <= wl).all() and (wl <= m.local_window + m.tile_tokens).all()
     assert np.isfinite(np.asarray(lg, np.float32)).all()

@@ -1,0 +1,166 @@
+"""Continuous-batching scheduler: ragged-batch decode equivalence (each
+sequence's logits match a solo lockstep run), slot release/reuse on EOS and
+max-length, and per-slot compaction triggering at different steps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serving import cache as cache_mod
+from repro.serving.engine import (Request, Scheduler, decode_step, prefill,
+                                  prefill_into_slot)
+
+KEY = jax.random.PRNGKey(0)
+CFG = get_config("starcoder2-3b").reduced().with_sparsity(0.5, 0.5)
+PARAMS = init_params(KEY, CFG)
+MAX_TOTAL = 96          # reduced cfg: local_window=8, tile=16 -> Wbuf=24
+
+
+def _prompt(length, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, CFG.vocab_size, size=length), jnp.int32)
+
+
+def _solo_greedy(prompt, n_new, cfg=CFG, params=PARAMS):
+    """Old lockstep path, batch of one: the equivalence reference."""
+    lg, cache = prefill(params, prompt[None], cfg, max_total_tokens=MAX_TOTAL)
+    logits = [np.asarray(lg[0], np.float32)]
+    toks = [int(jnp.argmax(lg[0]))]
+    step = jax.jit(lambda p, t, c: decode_step(p, t, c, cfg))
+    for _ in range(n_new - 1):
+        lg, cache = step(params, jnp.asarray([toks[-1]], jnp.int32), cache)
+        logits.append(np.asarray(lg[0], np.float32))
+        toks.append(int(jnp.argmax(lg[0])))
+    return toks, logits
+
+
+def test_ragged_batch_matches_solo_lockstep():
+    """Prompts of different lengths admitted at different steps: every
+    sequence's per-token logits must be identical (atol 1e-5) to running
+    that sequence alone through the lockstep path."""
+    prompts = [_prompt(9, 0), _prompt(17, 1), _prompt(26, 2)]
+    n_new = [18, 12, 20]
+    solos = [_solo_greedy(p, n) for p, n in zip(prompts, n_new)]
+
+    sched = Scheduler(CFG, PARAMS, n_slots=2, max_total_tokens=MAX_TOTAL,
+                      collect_logits=True)
+    reqs = [Request(prompt=p, max_new_tokens=n)
+            for p, n in zip(prompts, n_new)]
+    sched.submit(reqs[0])
+    sched.step(); sched.step()                    # r0 decodes alone
+    sched.submit(reqs[1])
+    sched.step(); sched.step(); sched.step()      # r0 + r1 share the batch
+    sched.submit(reqs[2])                         # queued until a slot frees
+    sched.run()
+
+    assert all(r.done for r in reqs)
+    for req, (solo_toks, solo_logits) in zip(reqs, solos):
+        assert req.output_tokens == solo_toks
+        for got, want in zip(req.logits, solo_logits):
+            np.testing.assert_allclose(got, want, rtol=0, atol=1e-5)
+
+
+def test_slot_release_and_reuse():
+    """More requests than slots: finished sequences must free their slot
+    for the next waiting request, and every request still completes with
+    solo-equivalent tokens."""
+    prompts = [_prompt(9 + 2 * i, seed=10 + i) for i in range(4)]
+    solos = [_solo_greedy(p, 6)[0] for p in prompts]
+
+    sched = Scheduler(CFG, PARAMS, n_slots=2, max_total_tokens=MAX_TOTAL)
+    reqs = [Request(prompt=p, max_new_tokens=6) for p in prompts]
+    for r in reqs:
+        sched.submit(r)
+    sched.run()
+
+    assert all(r.done for r in reqs)
+    assert sched.slots == [None, None]            # all slots released
+    for req, solo_toks in zip(reqs, solos):
+        assert req.output_tokens == solo_toks
+    # later arrivals were admitted only after a slot freed
+    assert max(r.prefill_step for r in reqs[2:]) > 0
+
+
+def test_eos_retires_request_and_frees_slot():
+    """EOS mid-generation retires the request early; the freed slot admits
+    the next waiting request."""
+    prompt = _prompt(12, seed=3)
+    solo_toks, _ = _solo_greedy(prompt, 8)
+    # cut at the first token value not seen earlier (greedy can repeat)
+    cut = next(i for i in range(1, len(solo_toks))
+               if solo_toks[i] not in solo_toks[:i])
+    eos = solo_toks[cut]
+
+    sched = Scheduler(CFG, PARAMS, n_slots=1, max_total_tokens=MAX_TOTAL)
+    first = sched.submit(Request(prompt=prompt, max_new_tokens=8,
+                                 eos_token_id=eos))
+    second = sched.submit(Request(prompt=_prompt(9, seed=4),
+                                  max_new_tokens=3))
+    sched.run()
+
+    assert first.done and first.output_tokens == solo_toks[:cut + 1]
+    assert first.output_tokens[-1] == eos
+    assert len(first.output_tokens) < 8            # retired early
+    assert second.done and len(second.output_tokens) == 3
+    assert second.prefill_step > first.prefill_step   # reused the one slot
+
+
+def test_per_slot_compaction_triggers_independently():
+    """Two slots at different depths: the deep slot's window fills (and
+    compacts) steps before the shallow slot's does — per-slot counters, not
+    a global one."""
+    m = CFG.mustafar
+    wbuf = m.local_window + m.tile_tokens         # 24 in the reduced cfg
+    cache = cache_mod.init_cache(CFG, 2, MAX_TOTAL)
+    # slot 0 one token below a full window; slot 1 nearly empty
+    _, cache = prefill_into_slot(PARAMS, _prompt(wbuf - 1, 5)[None], cache, 0,
+                                 CFG, MAX_TOTAL)
+    _, cache = prefill_into_slot(PARAMS, _prompt(9, 6)[None], cache, 1,
+                                 CFG, MAX_TOTAL)
+    np.testing.assert_array_equal(np.asarray(cache["w_len"]), [wbuf - 1, 9])
+    np.testing.assert_array_equal(np.asarray(cache["n_compressed"]), [0, 0])
+
+    step = jax.jit(lambda p, t, c: decode_step(p, t, c, CFG))
+    tok = jnp.zeros((2,), jnp.int32)
+    for _ in range(3):
+        lg, cache = step(PARAMS, tok, cache)
+        tok = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+
+    nc = np.asarray(cache["n_compressed"])
+    wl = np.asarray(cache["w_len"])
+    pos = np.asarray(cache["position"])
+    assert nc[0] == m.tile_tokens and nc[1] == 0   # only slot 0 compacted
+    np.testing.assert_array_equal(nc + wl, pos)    # invariant per slot
+    assert (wl < wbuf).all()
+    assert np.isfinite(np.asarray(lg, np.float32)).all()
+
+
+def test_active_mask_freezes_empty_slots():
+    """Slots outside the active mask must not advance their counters."""
+    cache = cache_mod.init_cache(CFG, 2, MAX_TOTAL)
+    _, cache = prefill_into_slot(PARAMS, _prompt(11, 7)[None], cache, 0,
+                                 CFG, MAX_TOTAL)
+    before = {k: np.asarray(cache[k]).copy()
+              for k in ("position", "w_len", "n_compressed")}
+    step = jax.jit(lambda p, t, c, a: decode_step(p, t, c, CFG, active=a))
+    active = jnp.asarray([True, False])
+    for _ in range(2):
+        lg, cache = step(PARAMS, jnp.zeros((2,), jnp.int32), cache, active)
+    after = {k: np.asarray(cache[k]) for k in before}
+    assert after["position"][0] == before["position"][0] + 2
+    assert after["position"][1] == before["position"][1]      # frozen
+    assert after["w_len"][1] == before["w_len"][1]
+    assert after["n_compressed"][1] == before["n_compressed"][1]
+    assert np.isfinite(np.asarray(lg, np.float32)).all()
+
+
+def test_occupancy_accounting():
+    """Saturated queue -> occupancy near 1; stats stay in [0, 1]."""
+    sched = Scheduler(CFG, PARAMS, n_slots=2, max_total_tokens=MAX_TOTAL)
+    for i in range(4):
+        sched.submit(Request(prompt=_prompt(9, seed=20 + i),
+                             max_new_tokens=8))
+    sched.run()
+    assert 0.0 < sched.occupancy <= 1.0
+    assert sched.occupancy > 0.8                   # queue kept slots busy

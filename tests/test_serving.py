@@ -84,8 +84,10 @@ def test_mustafar_decode_crosses_compaction_boundary():
     B, T, n_dec = 2, 20, 40                       # crosses >=2 compactions
     toks = jax.random.randint(KEY, (B, T + n_dec), 0, cfg.vocab_size)
     serve, cache = _run_serve(cfg, params, toks, T)
-    assert int(cache["n_compressed"]) > 0          # compaction actually fired
-    assert int(cache["position"]) == T + n_dec - 1
+    # per-sequence [B] state vectors: lockstep batch advances uniformly
+    assert (np.asarray(cache["n_compressed"]) > 0).all()   # compaction fired
+    np.testing.assert_array_equal(np.asarray(cache["position"]),
+                                  T + n_dec - 1)
     ref = _ref_logits(cfg, params, toks)[:, T - 1:-1, :]
     rel = float(jnp.linalg.norm(serve - ref) / jnp.linalg.norm(ref))
     assert np.isfinite(rel) and rel < 0.5, rel
