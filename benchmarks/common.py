@@ -1,8 +1,9 @@
-"""Shared benchmark utilities: timing, CSV output, small trained models."""
+"""Shared benchmark utilities: timing, CSV + JSON output, small models."""
 from __future__ import annotations
 
+import json
 import time
-from typing import Callable
+from typing import Callable, Dict, List
 
 import jax
 import jax.numpy as jnp
@@ -21,9 +22,36 @@ def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
     return float(np.median(ts))
 
 
-def emit(name: str, us: float, derived: str = "") -> None:
-    """CSV row: name,us_per_call,derived."""
+# every emit() call also lands here so run.py can write BENCH_<suite>.json
+# (machine-readable perf trajectory across PRs, not just printed CSV)
+_RECORDS: List[Dict] = []
+
+
+def emit(name: str, us: float, derived: str = "", **metrics) -> None:
+    """CSV row ``name,us_per_call,derived`` + a JSON record.
+
+    ``metrics`` carries machine-readable extras (e.g. ``hbm_bytes`` — the
+    modeled HBM traffic of the component — or ``speedup_vs_legacy``)."""
     print(f"{name},{us:.1f},{derived}")
+    rec = {"name": name, "us_per_call": round(float(us), 3)}
+    if derived:
+        rec["derived"] = derived
+    for k, v in metrics.items():
+        rec[k] = v.item() if hasattr(v, "item") else v
+    _RECORDS.append(rec)
+
+
+def drain_records() -> List[Dict]:
+    """Return and clear the records accumulated since the last drain."""
+    out = list(_RECORDS)
+    _RECORDS.clear()
+    return out
+
+
+def write_bench_json(path: str, records: List[Dict]) -> None:
+    with open(path, "w") as f:
+        json.dump(records, f, indent=1, sort_keys=True)
+        f.write("\n")
 
 
 def attn_output_error(k_cache, k_pruned, v_cache, v_pruned, rng, n_q=16):

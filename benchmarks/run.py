@@ -1,34 +1,45 @@
 """Benchmark harness: one module per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows AND writes one machine-readable
+``BENCH_<suite>.json`` per suite (us_per_call + modeled HBM bytes per
+component) so the perf trajectory is tracked across PRs.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig6a,...]
+    PYTHONPATH=src python -m benchmarks.run [--only kernels,...] [--out-dir .]
 """
 from __future__ import annotations
 
 import argparse
+import os
 
 import numpy as np
 
 from benchmarks import (bench_compression, bench_joint, bench_kernel,
-                        bench_pruning, bench_throughput)
+                        bench_pruning, bench_throughput, common)
 
+# suite key doubles as the BENCH_<key>.json filename stem
 SUITES = {
     "pruning": bench_pruning.main,        # Tables 1,2,3,11,12
     "joint": bench_joint.main,            # Tables 5,6
-    "kernel": bench_kernel.main,          # Fig 6a
+    "kernels": bench_kernel.main,         # Fig 6a + PR-2 kernel overhaul
     "compression": bench_compression.main,  # Fig 6b
     "throughput": bench_throughput.main,  # Fig 7
 }
+_ALIASES = {"kernel": "kernels"}          # pre-PR-2 suite name
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all")
+    ap.add_argument("--out-dir", default=".",
+                    help="directory for BENCH_<suite>.json files")
     args = ap.parse_args()
-    names = list(SUITES) if args.only == "all" else args.only.split(",")
+    names = list(SUITES) if args.only == "all" else [
+        _ALIASES.get(n, n) for n in args.only.split(",")]
     print("name,us_per_call,derived")
     for n in names:
+        common.drain_records()
         SUITES[n](np.random.default_rng(0))
+        path = os.path.join(args.out_dir, f"BENCH_{n}.json")
+        common.write_bench_json(path, common.drain_records())
 
 
 if __name__ == "__main__":

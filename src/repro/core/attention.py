@@ -112,6 +112,33 @@ DECODE_CHUNK = 4096  # pool tokens per online-softmax chunk (mirrors the
                      # fused Pallas kernel's grid; plan_pools rounds Tc to it)
 
 
+def _merge_window(q: jax.Array, cache: MustafarCacheView, scale: float,
+                  m: jax.Array, l: jax.Array, acc: jax.Array) -> jax.Array:
+    """Join the dense local window into a running online softmax.
+
+    (m, l, acc) is the softmax state accumulated over the compressed pools
+    — by the chunked jnp scan or the fused Pallas kernel — with shapes
+    [B, Hq, 1] / [B, Hq, 1] / [B, Hq, d]. Returns the normalised output.
+    """
+    B, Hq, d = q.shape
+    W = cache.k_window.shape[2]
+    s_w = jnp.einsum("bhd,bhtd->bht", q.astype(cache.k_window.dtype),
+                     _expand_gqa(cache.k_window, Hq),
+                     preferred_element_type=jnp.float32) * scale
+    valid_w = jnp.arange(W)[None, None, :] < cache.n_window[:, None, None]
+    s_w = jnp.where(valid_w, s_w, NEG_INF)
+    m_w = jnp.max(s_w, axis=-1, keepdims=True)
+    m_fin = jnp.maximum(m, m_w)
+    alpha = jnp.exp(m - m_fin)
+    p_w = jnp.exp(s_w - m_fin)
+    pv_w = jnp.einsum("bht,bhtd->bhd", p_w.astype(cache.v_window.dtype),
+                      _expand_gqa(cache.v_window, Hq),
+                      preferred_element_type=jnp.float32)
+    acc = acc * alpha[..., 0][..., None] + pv_w
+    l_fin = l * alpha + jnp.sum(p_w, axis=-1, keepdims=True)
+    return acc / jnp.maximum(l_fin, 1e-30)
+
+
 def decode_attention_mustafar_chunked(q: jax.Array, cache: MustafarCacheView,
                                       scale: Optional[float] = None,
                                       chunk: int = DECODE_CHUNK) -> jax.Array:
@@ -123,7 +150,6 @@ def decode_attention_mustafar_chunked(q: jax.Array, cache: MustafarCacheView,
     """
     B, Hq, d = q.shape
     Tc = cache.ck_values.shape[2]
-    W = cache.k_window.shape[2]
     scale = scale if scale is not None else d ** -0.5
     chunk = min(chunk, Tc)
     assert Tc % chunk == 0, (Tc, chunk)
@@ -166,22 +192,30 @@ def decode_attention_mustafar_chunked(q: jax.Array, cache: MustafarCacheView,
     (m, l, acc), _ = jax.lax.scan(body, init, xs)
 
     # window part joins the same online softmax as the final chunk
-    s_w = jnp.einsum("bhd,bhtd->bht", q.astype(cache.k_window.dtype),
-                     _expand_gqa(cache.k_window, Hq),
-                     preferred_element_type=jnp.float32) * scale
-    valid_w = jnp.arange(W)[None, None, :] < cache.n_window[:, None, None]
-    s_w = jnp.where(valid_w, s_w, NEG_INF)
-    m_w = jnp.max(s_w, axis=-1, keepdims=True)
-    m_fin = jnp.maximum(m, m_w)
-    alpha = jnp.exp(m - m_fin)
-    p_w = jnp.exp(s_w - m_fin)
-    pv_w = jnp.einsum("bht,bhtd->bhd", p_w.astype(cache.v_window.dtype),
-                      _expand_gqa(cache.v_window, Hq),
-                      preferred_element_type=jnp.float32)
-    acc = acc * alpha[..., 0][..., None] + pv_w
-    l_fin = l * alpha + jnp.sum(p_w, axis=-1, keepdims=True)
-    out = acc / jnp.maximum(l_fin, 1e-30)
-    return out.astype(q.dtype)
+    return _merge_window(q, cache, scale, m, l, acc).astype(q.dtype)
+
+
+def decode_attention_mustafar_kernelized(q: jax.Array, cache: MustafarCacheView,
+                                         scale: Optional[float] = None) -> jax.Array:
+    """Decode attention with the fused Pallas kernel over the compressed pools.
+
+    The kernel (``repro.kernels.ops.decode_attention_fused``) runs both
+    bitmap-SpMVs and the online softmax in one pass on a DMA-skipping
+    scalar-prefetch grid — each batch row fetches only the tiles below its
+    own ``n_compressed`` — and hands back the raw softmax state
+    ``(acc, m, l)``; the dense local window then joins the same running
+    softmax here (identical merge math to the epilogue of
+    ``decode_attention_mustafar_chunked``). On CPU the kernel dispatch falls
+    back to the jnp oracle, so this path is backend-portable.
+    """
+    from repro.kernels import ops as kops
+    d = q.shape[-1]
+    scale = scale if scale is not None else d ** -0.5
+    _, acc, m, l = kops.decode_attention_fused(
+        q, cache.ck_values, cache.ck_bitmap, cache.cv_values, cache.cv_bitmap,
+        cache.n_compressed, scale=scale, return_state=True)
+    # window part joins the same online softmax (shared chunked epilogue)
+    return _merge_window(q, cache, scale, m, l, acc).astype(q.dtype)
 
 
 def hbm_bytes_dense(T: int, d: int, itemsize: int = 2) -> int:
@@ -193,8 +227,17 @@ def hbm_bytes_mustafar(Tc: int, W: int, d: int, k_k: int, k_v: int,
                        itemsize: int = 2) -> int:
     """Compressed K + V reads plus the dense window (paper Fig. 6a model).
 
-    Bitmap planes are stored as whole uint32 words, so a non-multiple-of-32
-    head dim (d=80: stablelm) reads pad_to_words(d)/8 bytes per row, not d/8.
+    ``itemsize`` is the PACKED-VALUE width — the pools store bf16
+    (itemsize=2, see ``serving.cache.POOL_DTYPE``) and the kernels compute
+    on bf16 directly (fp32 enters only at the MXU accumulators), so 2 is
+    both the storage and the streamed-bytes answer; an fp32 pool would
+    double the (k_k + k_v) term. Bitmap planes are stored as whole uint32
+    words, so a non-multiple-of-32 head dim (d=80: stablelm) reads
+    pad_to_words(d)/8 bytes per row, not d/8.
+
+    ``Tc`` should be the row's VALID compressed depth, not the pool
+    capacity: the fused kernel's scalar-prefetch grid never DMAs tiles past
+    ``n_valid``, so a ragged row's bytes scale with its own fill.
     """
     comp = Tc * ((k_k + k_v) * itemsize + 2 * (pad_to_words(d) // 8))
     return comp + 2 * W * d * itemsize

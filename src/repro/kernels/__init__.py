@@ -1,7 +1,10 @@
 """Pallas TPU kernels for Mustafar hot spots + pure-jnp oracles.
 
-compress (prune+pack), sparse_qk / sparse_av (bitmap SpMV, paper Fig. 5a),
-decode_attention_fused (beyond-paper online-softmax fusion), flash_prefill.
+compress (prune+pack: threshold top-k + gather compaction),
+sparse_qk / sparse_av (bitmap SpMV via gather decompression, paper Fig. 5a),
+decode_attention_fused (beyond-paper online-softmax fusion on a DMA-skipping
+scalar-prefetch grid), flash_prefill. ``legacy`` keeps the pre-overhaul
+one-hot/rank-cube formulations as equivalence oracles.
 """
 from repro.kernels.ops import (compress, decode_attention_fused, sparse_av,
                                sparse_qk)

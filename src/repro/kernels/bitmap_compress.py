@@ -3,17 +3,27 @@
 Paper §3 performs pruning + compression on-the-fly with a Triton kernel as
 64-token tile groups retire from the local dense window. TPU adaptation:
 
-* grid over (rows, token-tiles); each step owns a ``[TILE_T, d]`` VMEM tile.
-* exact top-k per token via an all-pairs rank count on the VPU
-  (``rank[t,c] = #{c' : |x[t,c']| > |x[t,c]|}`` with index tie-break) —
-  no sort primitive needed, O(d²) compares vectorise across lanes.
-* value compaction via the rank-match contraction
-  ``vals[t,j] = Σ_c [pos[t,c]==j]·x[t,c]`` (MXU-shaped one-hot matmul).
+* grid over (rows, token-tiles); each step owns a ``[tile_t, d]`` VMEM tile.
+* exact top-k per token via a binary search for the k-th magnitude: |x| is
+  bitcast to int32 (IEEE-754 ordering of non-negative floats matches integer
+  ordering), then 31 halvings of the bit range find the per-row threshold —
+  O(31·T·d) VPU compares and O(T·d) VMEM. Ties at the threshold are broken
+  by ascending channel index (exclusive cumsum), reproducing the stable
+  magnitude-desc/index-asc order of the jnp oracle bit-for-bit.
+* value compaction via gather: the j-th kept channel is located by a
+  7-step binary search over the inclusive keep-cumsum (nondecreasing per
+  row), then ``take_along_axis`` pulls ``x[t, idx[t,j]]`` — O(T·k·log d).
 * bit-packing with broadcasted shifts into uint32 words.
 
-VMEM working set per step (TILE_T=8, d=128, k≤128):
-dense 8·128·4 + rank scratch 8·128·128·4 ≈ 0.5 MB — fits comfortably;
-the [TILE_T, d, d] compare cube bounds TILE_T.
+The previous formulation ranked channels with an all-pairs ``[T, d, d]``
+compare cube (O(T·d²) and the VMEM term that pinned TILE_T at 8) and
+compacted values with an O(T·d·k) one-hot MXU matmul (kept in
+``repro.kernels.legacy`` as the equivalence oracle). VMEM working set per
+step is now just a few [tile_t, d] planes: tile_t=64, d=128 ≈ 0.2 MB, so
+tile_t=128+ also fits and the compress grid shrinks 8×.
+
+Values pass through in the input dtype (bf16 stays bf16 — the gather never
+upcasts), matching the bf16 compressed pools in ``serving.cache``.
 """
 from __future__ import annotations
 
@@ -26,34 +36,72 @@ from jax.experimental import pallas as pl
 
 from repro.core.sparse_format import pad_to_words
 
-TILE_T = 8  # token rows per grid step (bounds the [T,d,d] compare cube)
+TILE_T = 64  # token rows per grid step (default; see mustafar_compress)
+
+_FP32_KEY_HI = 0x7F800000  # +inf bit pattern: > any finite |x| key
+
+
+def _topk_threshold_keep(x: jax.Array, k: int, d: int) -> jax.Array:
+    """x [T, d_pad] -> bool keep mask with exactly k True per row.
+
+    Binary search on the int32-bitcast magnitude for the k-th largest key,
+    then fill threshold ties in ascending channel order.
+    """
+    T, d_pad = x.shape
+    mag = jnp.abs(x.astype(jnp.float32))
+    key = lax.bitcast_convert_type(mag, jnp.int32)        # order-preserving
+    ch = lax.broadcasted_iota(jnp.int32, (T, d_pad), 1)
+    key = jnp.where(ch < d, key, -1)      # word-padding channels never win
+
+    # invariant: #{key > lo} >= k  and  #{key > hi} < k; converges on the
+    # k-th largest key (31 halvings cover the non-negative fp32 bit range)
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = lo + (hi - lo) // 2                         # [T, 1]
+        n_gt = jnp.sum((key > mid).astype(jnp.int32), axis=1, keepdims=True)
+        take_hi = n_gt < k
+        return (jnp.where(take_hi, lo, mid + 1), jnp.where(take_hi, mid, hi))
+
+    lo0 = jnp.full((T, 1), -1, jnp.int32)
+    hi0 = jnp.full((T, 1), _FP32_KEY_HI, jnp.int32)
+    _, thr = lax.fori_loop(0, 31, body, (lo0, hi0))       # [T, 1]
+
+    above = key > thr
+    n_above = jnp.sum(above.astype(jnp.int32), axis=1, keepdims=True)
+    tie = key == thr
+    tie_rank = jnp.cumsum(tie.astype(jnp.int32), axis=1) - tie  # exclusive
+    return above | (tie & (n_above + tie_rank < k))       # exactly k per row
+
+
+def _compact_gather(x: jax.Array, keep: jax.Array, k: int) -> jax.Array:
+    """x [T, d_pad], keep (exactly k True/row) -> values [T, k] in x.dtype.
+
+    idx[t, j] = the channel holding the j-th kept element = the first c where
+    the inclusive keep-cumsum reaches j+1, found by binary search over the
+    nondecreasing cumsum (log2(d_pad) take_along_axis probes).
+    """
+    T, d_pad = x.shape
+    cnt = jnp.cumsum(keep.astype(jnp.int32), axis=1)      # [T, d_pad]
+    tgt = lax.broadcasted_iota(jnp.int32, (1, k), 1) + 1  # [1, k]
+    n_iters = max(1, (d_pad - 1).bit_length())
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = lo + (hi - lo) // 2
+        ge = jnp.take_along_axis(cnt, mid, axis=1) >= tgt
+        return (jnp.where(ge, lo, mid + 1), jnp.where(ge, mid, hi))
+
+    lo0 = jnp.zeros((T, k), jnp.int32)
+    hi0 = jnp.full((T, k), d_pad - 1, jnp.int32)
+    _, idx = lax.fori_loop(0, n_iters, body, (lo0, hi0))
+    return jnp.take_along_axis(x, idx, axis=1)
 
 
 def _compress_kernel(x_ref, vals_ref, bm_ref, *, k: int, d: int):
-    x = x_ref[0].astype(jnp.float32)                      # [T, d_pad]
+    x = x_ref[0]                                          # [T, d_pad]
     T, d_pad = x.shape
-    mag = jnp.abs(x)
-    # channels beyond d (word padding, e.g. d_head=80) never win top-k
-    ch = lax.broadcasted_iota(jnp.int32, (T, d_pad), 1)
-    mag = jnp.where(ch < d, mag, -1.0)
-
-    # --- exact top-k via all-pairs rank (VPU) ---
-    m_c = mag[:, :, None]                                 # [T, d, 1] candidate
-    m_o = mag[:, None, :]                                 # [T, 1, d] other
-    i_c = lax.broadcasted_iota(jnp.int32, (T, d_pad, d_pad), 1)
-    i_o = lax.broadcasted_iota(jnp.int32, (T, d_pad, d_pad), 2)
-    beats = (m_o > m_c) | ((m_o == m_c) & (i_o < i_c))
-    rank = jnp.sum(beats.astype(jnp.int32), axis=2)       # [T, d_pad]
-    keep = (rank < k) & (ch < d)                          # exactly k per row
-    keep_f = keep.astype(jnp.float32)
-
-    # --- value compaction: vals[t,j] = Σ_c [pos==j]·x ---
-    pos = jnp.cumsum(keep_f, axis=1) - 1.0                # [T, d_pad]
-    j = lax.broadcasted_iota(jnp.float32, (T, d_pad, k), 2)
-    onehot = ((pos[:, :, None] == j) & keep[:, :, None]).astype(jnp.float32)
-    vals = jnp.einsum("tcj,tc->tj", onehot, x,
-                      preferred_element_type=jnp.float32)  # [T, k]
-    vals_ref[0] = vals.astype(vals_ref.dtype)
+    keep = _topk_threshold_keep(x, k, d)
+    vals_ref[0] = _compact_gather(x, keep, k).astype(vals_ref.dtype)
 
     # --- bit-packing into uint32 words ---
     n_words = d_pad // 32
@@ -62,27 +110,34 @@ def _compress_kernel(x_ref, vals_ref, bm_ref, *, k: int, d: int):
     bm_ref[0] = jnp.sum(bits << shifts, axis=2, dtype=jnp.uint32)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "interpret"))
-def mustafar_compress(x: jax.Array, k: int, *, interpret: bool = False):
+@functools.partial(jax.jit, static_argnames=("k", "interpret", "tile_t"))
+def mustafar_compress(x: jax.Array, k: int, *, interpret: bool = False,
+                      tile_t: int = TILE_T):
     """x [R, T, d] -> (values [R, T, k], bitmap [R, T, ceil32(d)/32] uint32).
 
-    R = flattened batch·heads·…; T must be a multiple of TILE_T.
+    R = flattened batch·heads·…; ``tile_t`` is the token-tile grid step
+    (clamped to T). T must be a multiple of the (clamped) tile.
     """
     R, T, d = x.shape
+    assert k <= d, (k, d)
     d_pad = pad_to_words(d)
     if d_pad != d:
         x = jnp.pad(x, ((0, 0), (0, 0), (0, d_pad - d)))
-    assert T % TILE_T == 0, f"T={T} not a multiple of TILE_T={TILE_T}"
+    tile_t = min(tile_t, T)
+    if T % tile_t != 0:
+        raise ValueError(
+            f"mustafar_compress: T={T} is not a multiple of tile_t={tile_t}; "
+            f"pad the token dim or pass a tile_t that divides T")
     n_words = d_pad // 32
-    grid = (R, T // TILE_T)
+    grid = (R, T // tile_t)
     kernel = functools.partial(_compress_kernel, k=k, d=d)
     vals, bm = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[pl.BlockSpec((1, TILE_T, d_pad), lambda r, t: (r, t, 0))],
+        in_specs=[pl.BlockSpec((1, tile_t, d_pad), lambda r, t: (r, t, 0))],
         out_specs=[
-            pl.BlockSpec((1, TILE_T, k), lambda r, t: (r, t, 0)),
-            pl.BlockSpec((1, TILE_T, n_words), lambda r, t: (r, t, 0)),
+            pl.BlockSpec((1, tile_t, k), lambda r, t: (r, t, 0)),
+            pl.BlockSpec((1, tile_t, n_words), lambda r, t: (r, t, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((R, T, k), x.dtype),

@@ -1,0 +1,72 @@
+"""Pre-overhaul kernel-body formulations, kept as equivalence oracles.
+
+PR 2 replaced these hot-path formulations with arithmetic-efficient ones:
+
+* ``decompress_onehot`` — the original bitmap expansion: rank-match one-hot
+  contraction on the MXU. O(T·d_pad·k) FLOPs plus a ``[T, d_pad, k]`` fp32
+  one-hot in VMEM. Superseded by the O(T·d_pad) gather expansion in
+  ``sparse_decode._decompress``.
+* ``topk_mask_rankcube`` — the original exact top-k: all-pairs rank count
+  on the VPU. O(T·d²) compares and a ``[T, d_pad, d_pad]`` compare cube in
+  VMEM (this is what pinned the compress kernel at TILE_T=8). Superseded by
+  the O(T·d·32) binary-search threshold in ``bitmap_compress``.
+* ``compact_onehot`` — the original value compaction: rank-match one-hot
+  matmul, O(T·d_pad·k). Superseded by the O(T·k·log d) gather compaction.
+
+They remain the ground truth the new kernels are asserted bit-identical
+against (fp32) in tests/test_kernels.py, and the baselines bench_kernel.py
+measures the overhaul's speedup over.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def decompress_onehot(vals: jnp.ndarray, bm: jnp.ndarray, k: int) -> jnp.ndarray:
+    """(values [T,k], bitmap [T,W] uint32) -> dense [T, W*32] fp32.
+
+    The pre-PR-2 ``_decompress``: expand bits, exclusive-cumsum ranks, then
+    reconstruct via the ``[T, d_pad, k]`` one-hot einsum on the MXU.
+    """
+    T, W = bm.shape
+    d_pad = W * 32
+    shifts = jnp.arange(32, dtype=jnp.uint32)[None, None, :]
+    bits = ((bm[:, :, None] >> shifts) & jnp.uint32(1))            # [T, W, 32]
+    bits = bits.reshape(T, d_pad).astype(jnp.float32)
+    pos = jnp.cumsum(bits, axis=1) - 1.0                            # [T, d_pad]
+    j = lax.broadcasted_iota(jnp.float32, (T, d_pad, k), 2)
+    onehot = ((pos[:, :, None] == j) & (bits[:, :, None] > 0)).astype(jnp.float32)
+    return jnp.einsum("tcj,tj->tc", onehot, vals.astype(jnp.float32),
+                      preferred_element_type=jnp.float32)           # [T, d_pad]
+
+
+def topk_mask_rankcube(x: jnp.ndarray, k: int, d: int) -> jnp.ndarray:
+    """x [T, d_pad] -> bool keep mask with exactly k True per row.
+
+    The pre-PR-2 compress selection: all-pairs rank count
+    ``rank[t,c] = #{c' : |x[t,c']| > |x[t,c]|}`` with index tie-break,
+    materialising the ``[T, d_pad, d_pad]`` compare cube.
+    """
+    T, d_pad = x.shape
+    mag = jnp.abs(x.astype(jnp.float32))
+    ch = lax.broadcasted_iota(jnp.int32, (T, d_pad), 1)
+    mag = jnp.where(ch < d, mag, -1.0)
+    m_c = mag[:, :, None]                                 # [T, d, 1] candidate
+    m_o = mag[:, None, :]                                 # [T, 1, d] other
+    i_c = lax.broadcasted_iota(jnp.int32, (T, d_pad, d_pad), 1)
+    i_o = lax.broadcasted_iota(jnp.int32, (T, d_pad, d_pad), 2)
+    beats = (m_o > m_c) | ((m_o == m_c) & (i_o < i_c))
+    rank = jnp.sum(beats.astype(jnp.int32), axis=2)       # [T, d_pad]
+    return (rank < k) & (ch < d)
+
+
+def compact_onehot(x: jnp.ndarray, keep: jnp.ndarray, k: int) -> jnp.ndarray:
+    """x [T, d_pad], keep mask -> values [T, k] via the one-hot contraction."""
+    keep_f = keep.astype(jnp.float32)
+    pos = jnp.cumsum(keep_f, axis=1) - 1.0                # [T, d_pad]
+    T, d_pad = x.shape
+    j = lax.broadcasted_iota(jnp.float32, (T, d_pad, k), 2)
+    onehot = ((pos[:, :, None] == j) & keep[:, :, None]).astype(jnp.float32)
+    return jnp.einsum("tcj,tc->tj", onehot, x.astype(jnp.float32),
+                      preferred_element_type=jnp.float32)  # [T, k]

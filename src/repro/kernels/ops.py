@@ -21,9 +21,25 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def _auto_tile(T: int, cap: int) -> int:
+    """Largest divisor of T that is <= cap (the grid needs T % tile_t == 0;
+    e.g. a prefill of 80 compressible tokens under the default cap of 64
+    tiles as 2 x 40)."""
+    t = min(cap, T)
+    while T % t:
+        t -= 1
+    return t
+
+
 # ----------------------------------------------------------------------
-def compress(x: jax.Array, k: int, *, use_pallas: Optional[bool] = None):
-    """Per-token top-k prune + pack. x [..., T, d] -> (values, bitmap)."""
+def compress(x: jax.Array, k: int, *, use_pallas: Optional[bool] = None,
+             tile_t: Optional[int] = None):
+    """Per-token top-k prune + pack. x [..., T, d] -> (values, bitmap).
+
+    ``tile_t`` overrides the kernel's token-tile grid step; by default the
+    largest divisor of T at or under ``bitmap_compress.TILE_T`` is used, so
+    any token count the callers produce (tile groups, ragged prefills)
+    tiles cleanly."""
     lead = x.shape[:-2]
     T, d = x.shape[-2:]
     if use_pallas is None:
@@ -31,7 +47,10 @@ def compress(x: jax.Array, k: int, *, use_pallas: Optional[bool] = None):
     if not use_pallas:
         return ref.mustafar_compress_ref(x, k)
     xr = x.reshape(-1, T, d)
-    vals, bm = bitmap_compress.mustafar_compress(xr, k, interpret=not _on_tpu())
+    vals, bm = bitmap_compress.mustafar_compress(
+        xr, k, interpret=not _on_tpu(),
+        tile_t=tile_t if tile_t is not None
+        else _auto_tile(T, bitmap_compress.TILE_T))
     return (vals.reshape(*lead, T, k), bm.reshape(*lead, T, bm.shape[-1]))
 
 
@@ -71,9 +90,8 @@ def sparse_av(p: jax.Array, values: jax.Array, bitmap: jax.Array, *, d: int,
     if use_pallas is None:
         use_pallas = _on_tpu()
     if use_pallas:
-        o = sparse_decode.sparse_av(pg, v2, b2, interpret=not _on_tpu(),
+        o = sparse_decode.sparse_av(pg, v2, b2, d=d, interpret=not _on_tpu(),
                                     tile_t=min(T, sparse_decode.TILE_T))
-        o = o[..., :d]
     else:
         o = ref.sparse_av_ref(pg, v2, b2, d)
     return o.reshape(B, Hq, d)
@@ -83,10 +101,18 @@ def decode_attention_fused(q: jax.Array,
                            ck_values: jax.Array, ck_bitmap: jax.Array,
                            cv_values: jax.Array, cv_bitmap: jax.Array,
                            n_valid: jax.Array, *, scale: Optional[float] = None,
-                           use_pallas: Optional[bool] = None) -> jax.Array:
+                           use_pallas: Optional[bool] = None,
+                           return_state: bool = False):
     """Fused single-pass decode attention over the compressed cache.
 
     q [B,Hq,d]; caches [B,Hkv,T,·]; n_valid [B] -> out [B,Hq,d] fp32.
+
+    On TPU this runs the DMA-skipping scalar-prefetch kernel: per-row
+    ``n_valid`` bounds the tiles fetched from HBM, so ragged rows pay bytes
+    proportional to their own compressed depth. ``return_state=True`` also
+    returns ``(acc, m, l)`` [B,Hq,d]/[B,Hq,1]/[B,Hq,1] — the unnormalised
+    online-softmax state — so callers can merge further operands (the dense
+    local window) into the same running softmax before normalising.
     """
     B, Hkv, T, kk = ck_values.shape
     d = q.shape[-1]
@@ -99,9 +125,15 @@ def decode_attention_fused(q: jax.Array,
     if use_pallas is None:
         use_pallas = _on_tpu()
     if use_pallas:
-        o = sparse_decode.decode_attention_fused(
+        res = sparse_decode.decode_attention_fused(
             *args, nv, d=d, scale=scale, interpret=not _on_tpu(),
-            tile_t=min(T, sparse_decode.TILE_T))
+            tile_t=min(T, sparse_decode.TILE_T), return_state=return_state)
+    elif return_state:
+        res = ref.decode_attention_fused_state_ref(*args, nv, d, scale)
     else:
-        o = ref.decode_attention_fused_ref(*args, nv, d, scale)
-    return o.reshape(B, Hkv * G, d)
+        res = ref.decode_attention_fused_ref(*args, nv, d, scale)
+    if return_state:
+        o, acc, m, l = res
+        return (o.reshape(B, Hkv * G, d), acc.reshape(B, Hkv * G, d),
+                m.reshape(B, Hkv * G, 1), l.reshape(B, Hkv * G, 1))
+    return res.reshape(B, Hkv * G, d)

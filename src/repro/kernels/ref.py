@@ -54,7 +54,36 @@ def decode_attention_fused_ref(q: jax.Array,
     valid = jnp.arange(T)[None, None, :] < n_valid[:, None, None]
     s = jnp.where(valid, s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
-    return sparse_av_ref(p, cv_values, cv_bitmap, d)
+    out = sparse_av_ref(p, cv_values, cv_bitmap, d)
+    # rows with no valid tokens produce a zero vector (the kernel's l == 0
+    # finalize guard), not the softmax-of-all-masked uniform average
+    return jnp.where(n_valid[:, None, None] > 0, out, 0.0)
+
+
+def decode_attention_fused_state_ref(q: jax.Array,
+                                     ck_values: jax.Array, ck_bitmap: jax.Array,
+                                     cv_values: jax.Array, cv_bitmap: jax.Array,
+                                     n_valid: jax.Array, d: int,
+                                     scale: Optional[float] = None):
+    """Fused decode attention WITH the raw online-softmax state.
+
+    Returns ``(out, acc, m, l)`` matching the Pallas kernel's
+    ``return_state=True`` semantics: ``m`` is the running max over valid
+    tokens (NEG_INF where a row has none), ``l`` the exp-sum, ``acc`` the
+    unnormalised numerator — so a caller can continue the running softmax
+    over further operands (e.g. the dense local window).
+    """
+    scale = scale if scale is not None else d ** -0.5
+    T = ck_values.shape[1]
+    s = sparse_qk_ref(q, ck_values, ck_bitmap, d, scale)
+    valid = jnp.arange(T)[None, None, :] < n_valid[:, None, None]
+    s = jnp.where(valid, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.where(valid, jnp.exp(s - m), 0.0)   # guard the all-masked row
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    acc = sparse_av_ref(p, cv_values, cv_bitmap, d)
+    out = acc / jnp.maximum(l, 1e-30)
+    return out, acc, m, l
 
 
 def flash_prefill_ref(q: jax.Array, k: jax.Array, v: jax.Array,

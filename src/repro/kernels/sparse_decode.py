@@ -4,15 +4,29 @@ Load-as-compressed, compute-as-dense (FlashLLM/SpInfer paradigm, re-tiled
 for TPU): each grid step DMAs one compressed tile — values ``[TILE_T, k]``
 + bitmap ``[TILE_T, d/32]`` — from HBM into VMEM (≈(2k+d/8)/2d of the dense
 bytes), expands the bitmap with broadcasted shifts (VPU), reconstructs the
-dense tile via the rank-match one-hot contraction (MXU), then runs the dense
-tile product on the MXU.
+dense tile via a rank→gather (``take_along_axis``) in O(TILE_T·d_pad) VPU
+work, then runs the dense tile product on the MXU.
+
+Cost model per tile (post PR-2 overhaul):
+  * decompress: O(T·d_pad) VPU ops (bit expand + cumsum + gather + select)
+    and one [T, d_pad] VMEM intermediate in the CACHE dtype — the previous
+    one-hot formulation paid an O(T·d_pad·k) MXU contraction plus a
+    k-times-larger fp32 ``[T, d_pad, k]`` one-hot in VMEM.
+  * products: bf16 caches stay bf16 into the MXU (fp32 accumulation only),
+    so compressed-value HBM reads and the VMEM dense tile are half the old
+    fp32-upcast cost.
 
 Two kernels mirror the paper's Fig. 5a decomposition:
   * ``sparse_qk`` :  scores = q · K̂ᵀ      (grid: rows × token tiles)
   * ``sparse_av`` :  out    = α · V̂       (accumulated over token tiles)
 
 plus ``decode_attention_fused`` — a beyond-paper flash-decoding-style fusion
-(single pass, online softmax, no [BH,G,T] score round-trip through HBM).
+(single pass, online softmax, no [BH,G,T] score round-trip through HBM) on a
+scalar-prefetch grid: ``n_valid`` is prefetched into SMEM and the BlockSpec
+index maps clamp each row's tile index to its own compressed depth, so tiles
+past a ragged row's fill are never DMA'd from HBM at all (PR 1's per-row
+early-out skipped the FLOPs but still paid the DMA — the dominant cost in a
+memory-bound kernel).
 """
 from __future__ import annotations
 
@@ -22,6 +36,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.sparse_format import pad_to_words
 
@@ -30,28 +45,43 @@ NEG_INF = -1e30
 
 
 def _decompress(vals, bm, d: int, k: int):
-    """(values [T,k], bitmap [T,W] uint32) -> dense [T, d_pad] fp32 in VMEM."""
+    """(values [T,k], bitmap [T,W] uint32) -> dense [T, d_pad] in vals.dtype.
+
+    Gather expansion: ``pos = cumsum(bits) - 1`` ranks each set channel into
+    its packed slot; ``take_along_axis`` pulls ``vals[t, pos[t,c]]`` and the
+    bit mask zeroes unset channels. O(T·d_pad) VPU work, no MXU contraction,
+    and the only VMEM intermediate is [T, d_pad] in the cache dtype (bf16
+    caches are never upcast — fp32 enters only at the MXU accumulators).
+    """
     T, W = bm.shape
     d_pad = W * 32
     shifts = jnp.arange(32, dtype=jnp.uint32)[None, None, :]
     bits = ((bm[:, :, None] >> shifts) & jnp.uint32(1))            # [T, W, 32]
-    bits = bits.reshape(T, d_pad).astype(jnp.float32)
-    pos = jnp.cumsum(bits, axis=1) - 1.0                            # [T, d_pad]
-    j = lax.broadcasted_iota(jnp.float32, (T, d_pad, k), 2)
-    onehot = ((pos[:, :, None] == j) & (bits[:, :, None] > 0)).astype(jnp.float32)
-    dense = jnp.einsum("tcj,tj->tc", onehot, vals.astype(jnp.float32),
-                       preferred_element_type=jnp.float32)          # [T, d_pad]
-    return dense
+    bits = bits.reshape(T, d_pad).astype(jnp.int32)
+    pos = jnp.cumsum(bits, axis=1) - 1                              # [T, d_pad]
+    pos = jnp.clip(pos, 0, k - 1)
+    gathered = jnp.take_along_axis(vals, pos, axis=1)               # [T, d_pad]
+    return jnp.where(bits > 0, gathered, jnp.zeros((), vals.dtype))
+
+
+def _dot_compressed(a, b, dims):
+    """MXU product in the common operand dtype, fp32 accumulation.
+
+    bf16 × bf16 runs the MXU at native width; mixed operands promote (fp32
+    query against a bf16 cache keeps fp32).
+    """
+    ct = jnp.promote_types(a.dtype, b.dtype)
+    return jax.lax.dot_general(a.astype(ct), b.astype(ct), dims,
+                               preferred_element_type=jnp.float32)
 
 
 # ----------------------------------------------------------------------
 # SpMV #1: scores = q · K̂ᵀ
 
 def _qk_kernel(q_ref, vals_ref, bm_ref, out_ref, *, d, k, scale):
-    q = q_ref[0].astype(jnp.float32)                     # [G, d]
+    q = q_ref[0]                                         # [G, d]
     dense = _decompress(vals_ref[0], bm_ref[0], d, k)    # [T, d_pad]
-    s = jax.lax.dot_general(q, dense[:, :d], (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32)
+    s = _dot_compressed(q, dense[:, :d], (((1,), (1,)), ((), ())))
     out_ref[0] = (s * scale).astype(out_ref.dtype)       # [G, T]
 
 
@@ -89,21 +119,21 @@ def _av_kernel(p_ref, vals_ref, bm_ref, out_ref, *, d, k):
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    p = p_ref[0].astype(jnp.float32)                     # [G, T]
+    p = p_ref[0]                                         # [G, T]
     dense = _decompress(vals_ref[0], bm_ref[0], d, k)    # [T, d_pad]
-    acc = jax.lax.dot_general(p, dense[:, :d], (((1,), (0,)), ((), ())),
-                              preferred_element_type=jnp.float32)
+    acc = _dot_compressed(p, dense[:, :d], (((1,), (0,)), ((), ())))
     out_ref[0] += acc.astype(out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "tile_t"))
-def sparse_av(p: jax.Array, values: jax.Array, bitmap: jax.Array, *,
+@functools.partial(jax.jit, static_argnames=("d", "interpret", "tile_t"))
+def sparse_av(p: jax.Array, values: jax.Array, bitmap: jax.Array, *, d: int,
               interpret: bool = False, tile_t: int = TILE_T):
-    """p [BH, G, T]; values [BH, T, k] -> out [BH, G, d_pad→sliced d] fp32."""
+    """p [BH, G, T]; values [BH, T, k] -> out [BH, G, d] fp32 (true d — the
+    bitmap-word padding is dropped inside, callers never see d_pad)."""
     BH, G, T = p.shape
     k = values.shape[-1]
     W = bitmap.shape[-1]
-    d = W * 32  # padded width; caller slices to true d
+    assert d <= W * 32, (d, W * 32)
     assert T % tile_t == 0, (T, tile_t)
     grid = (BH, T // tile_t)
     kernel = functools.partial(_av_kernel, d=d, k=k)
@@ -126,9 +156,11 @@ def sparse_av(p: jax.Array, values: jax.Array, bitmap: jax.Array, *,
 # Avoids materialising [BH, G, T] scores in HBM — the paper's two-kernel
 # formulation pays 2·G·T fp32 of extra HBM traffic that this removes.
 
-def _fused_kernel(q_ref, kv_ref, kb_ref, vv_ref, vb_ref, nv_ref,
-                  out_ref, m_ref, l_ref, acc_ref, *, d, kk, kv, scale, tile_t):
+def _fused_kernel(nv_ref, q_ref, kv_ref, kb_ref, vv_ref, vb_ref,
+                  acc_ref, m_ref, l_ref, *, d, kk, kv, scale, tile_t):
+    b = pl.program_id(0)
     t = pl.program_id(1)
+    nv = nv_ref[b]
 
     @pl.when(t == 0)
     def _init():
@@ -136,21 +168,22 @@ def _fused_kernel(q_ref, kv_ref, kb_ref, vv_ref, vb_ref, nv_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    # Per-batch-row early-out: tiles entirely past THIS row's n_valid
-    # contribute nothing, so skip the bitmap expansion + both MXU products.
-    # Ragged continuous-batching rows differ in compressed depth, so short
-    # rows skip most of the grid. Also fixes the n_valid == 0 edge (a fully
-    # masked tile used to push exp(-inf - -inf) = 1 into l; skipped tiles
-    # leave l = 0 and the finalize guard returns a zero vector).
-    @pl.when(t * tile_t < nv_ref[0])
+    # Per-batch-row gating: tiles entirely past THIS row's n_valid contribute
+    # nothing. The BlockSpec index maps already clamp those steps to re-fetch
+    # the row's last valid tile (a no-op DMA — same block as the previous
+    # step), so skipping here costs neither bytes nor FLOPs. Also fixes the
+    # n_valid == 0 edge (a fully masked tile used to push
+    # exp(-inf - -inf) = 1 into l; skipped tiles leave l = 0 and the caller's
+    # finalize guard returns a zero vector).
+    @pl.when(t * tile_t < nv)
     def _tile():
-        q = q_ref[0].astype(jnp.float32)                       # [G, d]
+        q = q_ref[0]                                           # [G, d]
         k_dense = _decompress(kv_ref[0], kb_ref[0], d, kk)     # [T, d_pad]
-        s = jax.lax.dot_general(q, k_dense[:, :d], (((1,), (1,)), ((), ())),
-                                preferred_element_type=jnp.float32) * scale  # [G, T]
+        s = _dot_compressed(q, k_dense[:, :d],
+                            (((1,), (1,)), ((), ()))) * scale  # [G, T]
         # mask invalid tokens of the last (partially valid) tile
         token_idx = t * tile_t + lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        s = jnp.where(token_idx < nv_ref[0], s, NEG_INF)
+        s = jnp.where(token_idx < nv, s, NEG_INF)
 
         m_prev, l_prev = m_ref[0], l_ref[0]                    # [G, 1]
         m_cur = jnp.max(s, axis=1, keepdims=True)              # [G, 1]
@@ -158,55 +191,80 @@ def _fused_kernel(q_ref, kv_ref, kb_ref, vv_ref, vb_ref, nv_ref,
         alpha = jnp.exp(m_prev - m_new)                        # rescale factor
         p = jnp.exp(s - m_new)                                 # [G, T]
         v_dense = _decompress(vv_ref[0], vb_ref[0], d, kv)     # [T, d_pad]
-        pv = jax.lax.dot_general(p, v_dense[:, :d], (((1,), (0,)), ((), ())),
-                                 preferred_element_type=jnp.float32)  # [G, d]
-        acc_ref[0] = acc_ref[0] * alpha + pv
+        pv = _dot_compressed(p, v_dense[:, :d],
+                             (((1,), (0,)), ((), ())))         # [G, d]
+        acc_ref[0] = acc_ref[0] * alpha + pv.astype(acc_ref.dtype)
         l_ref[0] = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
         m_ref[0] = m_new
 
-    @pl.when(t == pl.num_programs(1) - 1)
-    def _finalize():
-        out_ref[0] = (acc_ref[0] / jnp.maximum(l_ref[0], 1e-30)).astype(out_ref.dtype)
 
-
-@functools.partial(jax.jit, static_argnames=("d", "scale", "interpret", "tile_t"))
+@functools.partial(jax.jit,
+                   static_argnames=("d", "scale", "interpret", "tile_t",
+                                    "return_state"))
 def decode_attention_fused(q: jax.Array,
                            ck_values: jax.Array, ck_bitmap: jax.Array,
                            cv_values: jax.Array, cv_bitmap: jax.Array,
                            n_valid: jax.Array, *, d: int, scale: float,
-                           interpret: bool = False, tile_t: int = TILE_T):
-    """Fused compressed-cache decode attention.
+                           interpret: bool = False, tile_t: int = TILE_T,
+                           return_state: bool = False):
+    """Fused compressed-cache decode attention on a scalar-prefetch grid.
 
     q [BH, G, d]; caches [BH, T, ·]; n_valid [BH] int32 -> out [BH, G, d] fp32.
+
+    ``n_valid`` is prefetched into SMEM (``PrefetchScalarGridSpec``) and the
+    compressed-tile index maps clamp grid step ``t`` to row ``b``'s last
+    valid tile: once a ragged row's depth is exhausted, every remaining step
+    maps to the block already resident in VMEM, so the pipeline issues NO new
+    HBM DMA for it. A short row in a deep batch therefore pays bytes
+    proportional to ITS depth, not the pool capacity.
+
+    ``return_state=True`` additionally returns the raw online-softmax state
+    ``(acc [BH,G,d] unnormalised, m [BH,G,1], l [BH,G,1])`` so a caller can
+    continue the running softmax over extra operands (the dense local
+    window) before normalising.
     """
     BH, G, _ = q.shape
     T, kk = ck_values.shape[1:]
     kv = cv_values.shape[-1]
     W = ck_bitmap.shape[-1]
-    d_pad = W * 32
     assert T % tile_t == 0, (T, tile_t)
     grid = (BH, T // tile_t)
     kernel = functools.partial(_fused_kernel, d=d, kk=kk, kv=kv,
                                scale=scale, tile_t=tile_t)
-    from jax.experimental.pallas import tpu as pltpu
-    out = pl.pallas_call(
-        kernel,
+
+    def tile_idx(b, t, nv_ref):
+        # clamp to the row's last valid tile: steps past the row's depth
+        # re-map to the resident block => the pipeline skips their DMA
+        last = jnp.maximum((nv_ref[b] + tile_t - 1) // tile_t - 1, 0)
+        return (b, jnp.minimum(t, last), 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, G, d), lambda b, t: (b, 0, 0)),
-            pl.BlockSpec((1, tile_t, kk), lambda b, t: (b, t, 0)),
-            pl.BlockSpec((1, tile_t, W), lambda b, t: (b, t, 0)),
-            pl.BlockSpec((1, tile_t, kv), lambda b, t: (b, t, 0)),
-            pl.BlockSpec((1, tile_t, W), lambda b, t: (b, t, 0)),
-            pl.BlockSpec((1,), lambda b, t: (b,)),
+            pl.BlockSpec((1, G, d), lambda b, t, nv: (b, 0, 0)),
+            pl.BlockSpec((1, tile_t, kk), tile_idx),
+            pl.BlockSpec((1, tile_t, W), tile_idx),
+            pl.BlockSpec((1, tile_t, kv), tile_idx),
+            pl.BlockSpec((1, tile_t, W), tile_idx),
         ],
-        out_specs=pl.BlockSpec((1, G, d), lambda b, t: (b, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((BH, G, d), jnp.float32),
-        scratch_shapes=[
-            pltpu.VMEM((1, G, 1), jnp.float32),   # running max
-            pltpu.VMEM((1, G, 1), jnp.float32),   # running sum
-            pltpu.VMEM((1, G, d), jnp.float32),   # output accumulator
+        out_specs=[
+            pl.BlockSpec((1, G, d), lambda b, t, nv: (b, 0, 0)),
+            pl.BlockSpec((1, G, 1), lambda b, t, nv: (b, 0, 0)),
+            pl.BlockSpec((1, G, 1), lambda b, t, nv: (b, 0, 0)),
+        ],
+    )
+    acc, m, l = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, G, d), jnp.float32),   # unnormalised acc
+            jax.ShapeDtypeStruct((BH, G, 1), jnp.float32),   # running max
+            jax.ShapeDtypeStruct((BH, G, 1), jnp.float32),   # running sum
         ],
         interpret=interpret,
-    )(q, ck_values, ck_bitmap, cv_values, cv_bitmap, n_valid)
+    )(n_valid.astype(jnp.int32), q, ck_values, ck_bitmap, cv_values, cv_bitmap)
+    out = acc / jnp.maximum(l, 1e-30)
+    if return_state:
+        return out, acc, m, l
     return out

@@ -179,6 +179,40 @@ def bidirectional_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                       preferred_element_type=jnp.float32).astype(q.dtype)
 
 
+# ----------------------------------------------------------------------
+# decode-path selection (serving hot path)
+
+def decode_attention_auto(q: jax.Array, cache_view, cfg: ModelConfig,
+                          scale: Optional[float] = None) -> jax.Array:
+    """Pick the Mustafar decode-attention formulation for one step.
+
+    q [B, Hq, d]; ``cache_view`` is a ``core.attention.MustafarCacheView``.
+
+    * B == 1 or pool ≤ one decode chunk → two-pass jnp formulation: its
+      partial softmax over a context-sharded Tc lowers to tiny all-reduces
+      (the chunk reshape would defeat GSPMD propagation — measured 70
+      GiB/step of pool all-gathers at B=1/524k), and at ≤ one chunk it keeps
+      ragged-batch numerics bit-identical to a solo run.
+    * multi-chunk batched on TPU → the fused Pallas kernel
+      (``decode_attention_mustafar_kernelized``): gather decompression, bf16
+      tile products, and a scalar-prefetch grid that skips the DMA of tiles
+      past each row's own compressed depth.
+    * multi-chunk batched elsewhere → the chunked online-softmax scan (same
+      math as the kernel, temp memory bounded by one chunk).
+    """
+    from repro.core.attention import (DECODE_CHUNK, decode_attention_mustafar,
+                                      decode_attention_mustafar_chunked,
+                                      decode_attention_mustafar_kernelized)
+    B = q.shape[0]
+    Tc = cache_view.ck_values.shape[2]
+    scale = scale if scale is not None else cfg.d_head ** -0.5
+    if B == 1 or Tc <= DECODE_CHUNK:
+        return decode_attention_mustafar(q, cache_view, scale=scale)
+    if jax.default_backend() == "tpu":
+        return decode_attention_mustafar_kernelized(q, cache_view, scale=scale)
+    return decode_attention_mustafar_chunked(q, cache_view, scale=scale)
+
+
 def self_attention_block(p, x: jax.Array, cfg: ModelConfig,
                          positions: Optional[jax.Array] = None) -> jax.Array:
     """Full train-mode self-attention sublayer (proj → causal core → proj)."""

@@ -222,13 +222,16 @@ def scan_corrections(cfg: ModelConfig, shape: ShapeConfig,
             kv = m.keep_k(d, m.value_sparsity)
             n_attn = len(cfg.attention_layers())
             from repro.core.sparse_format import pad_to_words
-            itemsize = 2
+            itemsize = 2   # packed values are bf16 (serving.cache.POOL_DTYPE)
             # per-chunk: read compressed K+V chunk, decompress, 2 matvecs
             # (bitmap stored as whole uint32 words: pad_to_words(d)/8 bytes)
             body_by = B * cfg.n_kv_heads * chunk * (
                 (kk + kv) * itemsize + 2 * (pad_to_words(d) // 8))
+            # gather decompression is O(d) per row for K and for V (bit
+            # expand + cumsum + gather — the old one-hot formulation charged
+            # an extra O(d·k) MXU contraction here)
             body_fl = 4.0 * B * cfg.n_heads * chunk * d \
-                + 2.0 * B * cfg.n_kv_heads * chunk * d * 2   # decompress ops
+                + 2.0 * B * cfg.n_kv_heads * chunk * d
             fl += (n_chunks - 1) * n_attn * body_fl
             by += (n_chunks - 1) * n_attn * body_by
     return {"flops": fl, "bytes": by}

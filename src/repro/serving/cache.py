@@ -39,6 +39,13 @@ from repro.models.model import structural_period
 
 CONTEXT_SHARDS = 16  # production mesh "data" size; batch-1 pools shard Tc
 
+# Compressed pools store packed values in bf16 REGARDLESS of the compute
+# dtype: the decode kernels load bf16 and feed the MXU at native width (fp32
+# only in the accumulators), so a wider pool would double compressed-cache
+# HBM bytes for no accuracy the softmax can see. The dense window keeps the
+# compute dtype (it is read-modified every step).
+POOL_DTYPE = jnp.bfloat16
+
 
 def plan_pools(cfg: ModelConfig, max_total_tokens: int,
                batch: int = 0) -> Tuple[int, int]:
@@ -81,9 +88,9 @@ def layer_cache_shapes(cfg: ModelConfig, kind: str, B: int,
             kk = m.keep_k(d, m.key_sparsity)
             kv = m.keep_k(d, m.value_sparsity)
             spec = {
-                "ck_vals": ((B, Hkv, Tc_max, kk), cdt),
+                "ck_vals": ((B, Hkv, Tc_max, kk), POOL_DTYPE),
                 "ck_bm": ((B, Hkv, Tc_max, W32), jnp.uint32),
-                "cv_vals": ((B, Hkv, Tc_max, kv), cdt),
+                "cv_vals": ((B, Hkv, Tc_max, kv), POOL_DTYPE),
                 "cv_bm": ((B, Hkv, Tc_max, W32), jnp.uint32),
                 "k_win": ((B, Hkv, Wbuf, d), cdt),
                 "v_win": ((B, Hkv, Wbuf, d), cdt),
@@ -283,8 +290,13 @@ def write_slot(cache, solo_cache, slot):
 
 
 def cache_hbm_bytes(cfg: ModelConfig, B: int, max_total_tokens: int) -> Dict[str, int]:
-    """Static accounting of cache memory (dense vs Mustafar) — Fig. 6b terms."""
+    """Static accounting of cache memory (dense vs Mustafar) — Fig. 6b terms.
+
+    Packed values are sized at the bf16 ``POOL_DTYPE`` width (pools never
+    widen with the compute dtype); the dense window and the dense baseline
+    use the compute dtype."""
     itemsize = jnp.dtype(cfg.dtype).itemsize
+    pool_itemsize = jnp.dtype(POOL_DTYPE).itemsize
     d, Hkv = cfg.d_head, cfg.n_kv_heads
     n_attn = len(cfg.attention_layers())
     dense = n_attn * B * Hkv * max_total_tokens * d * 2 * itemsize
@@ -294,6 +306,7 @@ def cache_hbm_bytes(cfg: ModelConfig, B: int, max_total_tokens: int) -> Dict[str
     kk = m.keep_k(d, m.key_sparsity)
     kv = m.keep_k(d, m.value_sparsity)
     must = n_attn * B * Hkv * (
-        Tc_max * ((kk + kv) * itemsize + 2 * W32 * 4) + 2 * Wbuf * d * itemsize)
+        Tc_max * ((kk + kv) * pool_itemsize + 2 * W32 * 4)
+        + 2 * Wbuf * d * itemsize)
     return {"dense": dense, "mustafar": must,
             "ratio": must / max(dense, 1)}

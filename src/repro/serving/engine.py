@@ -36,10 +36,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.attention import (DECODE_CHUNK, MustafarCacheView,
-                                  decode_attention_dense,
-                                  decode_attention_mustafar,
-                                  decode_attention_mustafar_chunked)
+from repro.core.attention import MustafarCacheView, decode_attention_dense
 from repro.models import attention as attn
 from repro.models import mamba as mamba_mod
 from repro.models import moe as moe_mod
@@ -178,22 +175,13 @@ def _attn_decode(bp, h, cfg: ModelConfig, lc, position, w_len, n_compressed):
             n_compressed=n_compressed,
             k_window=lc["k_win"], v_window=lc["v_win"],
             n_window=w_len + 1)
-        # path choice: the chunked scan bounds temp memory, but its reshape
-        # of the (possibly context-sharded) Tc dim defeats GSPMD propagation
-        # — measured 70 GiB/step of pool all-gathers at B=1/524k. Small
-        # decompressed sizes use the two-pass formulation (partial softmax
-        # over the Tc-sharded dim lowers to tiny all-reduces); a pool at or
-        # under one chunk degenerates to the same temp footprint, so it also
-        # takes the two-pass path (keeps ragged-batch numerics identical to
-        # a solo run). Big batches over multiple chunks use the online scan
-        # (whole-pool decompression would be ~10 GiB).
-        Tc = lc["ck_vals"].shape[2]
-        if B == 1 or Tc <= DECODE_CHUNK:
-            out = decode_attention_mustafar(q[:, 0], view,
-                                            scale=cfg.d_head ** -0.5)
-        else:
-            out = decode_attention_mustafar_chunked(q[:, 0], view,
-                                                    scale=cfg.d_head ** -0.5)
+        # formulation choice (two-pass / fused Pallas kernel / chunked scan)
+        # lives in models.attention.decode_attention_auto: sharding-friendly
+        # two-pass for B==1 and small pools, the DMA-skipping fused kernel
+        # for multi-chunk batched decode on TPU, chunked online softmax
+        # elsewhere.
+        out = attn.decode_attention_auto(q[:, 0], view, cfg,
+                                         scale=cfg.d_head ** -0.5)
     else:
         def upd(buf, tok, p):                          # per-sequence DUS
             return jax.lax.dynamic_update_slice(

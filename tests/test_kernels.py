@@ -1,20 +1,28 @@
 """Pallas kernels vs pure-jnp oracles (interpret=True on CPU), with
-shape/dtype/sparsity sweeps per the deliverable spec."""
+shape/dtype/sparsity sweeps per the deliverable spec, plus PR-2 equivalence
+sweeps: the gather-based decompress/compress formulations must match the
+legacy one-hot / rank-cube formulations bit-for-bit in fp32 (bf16 within
+tolerance) across head dims, sparsities, and the ragged n_valid edges."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import ref
+from repro.kernels import legacy, ref
 from repro.kernels.bitmap_compress import mustafar_compress
 from repro.kernels.flash_prefill import flash_prefill
-from repro.kernels.sparse_decode import (decode_attention_fused, sparse_av,
-                                         sparse_qk)
+from repro.kernels.sparse_decode import (_decompress, decode_attention_fused,
+                                         sparse_av, sparse_qk)
 
 
 def _mk(rng, shape, dtype):
     x = rng.normal(size=shape).astype(np.float32)
     return jnp.asarray(x).astype(dtype)
+
+
+def _keep_k(d, sparsity, align=8):
+    k = int(round(d * (1.0 - sparsity)))
+    return max(align, (k + align - 1) // align * align)
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
@@ -26,6 +34,69 @@ def test_compress_kernel(rng, dtype, d, k):
     np.testing.assert_array_equal(np.asarray(b_ref), np.asarray(b_pl))
     np.testing.assert_allclose(np.asarray(v_ref, np.float32),
                                np.asarray(v_pl, np.float32), rtol=1e-6)
+
+
+@pytest.mark.parametrize("tile_t", [8, 32, 64, 128])
+def test_compress_kernel_tile_t(rng, tile_t):
+    """tile_t is a free parameter now (the [T,d,d] rank cube is gone):
+    results are identical at every tile size, including >= 64."""
+    x = _mk(rng, (2, 128, 128), jnp.float32)
+    v_ref, b_ref = ref.mustafar_compress_ref(x, 40)
+    v_pl, b_pl = mustafar_compress(x, 40, interpret=True, tile_t=tile_t)
+    np.testing.assert_array_equal(np.asarray(b_ref), np.asarray(b_pl))
+    np.testing.assert_array_equal(np.asarray(v_ref), np.asarray(v_pl))
+
+
+def test_compress_kernel_bad_tile_t(rng):
+    x = _mk(rng, (1, 48, 64), jnp.float32)
+    with pytest.raises(ValueError, match="multiple of tile_t"):
+        mustafar_compress(x, 16, interpret=True, tile_t=32)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("sparsity", [0.5, 0.7])
+@pytest.mark.parametrize("d", [64, 80, 128])
+def test_compress_matches_legacy_rankcube(rng, dtype, sparsity, d):
+    """Threshold-search top-k + gather compaction == the legacy all-pairs
+    rank cube + one-hot compaction, bit-for-bit (both dtypes: selection is
+    exact and values pass through ungathered)."""
+    from repro.core.sparse_format import pack_fixedk, pad_to_words
+    k = _keep_k(d, sparsity)
+    x = _mk(rng, (2, 64, d), dtype)
+    d_pad = pad_to_words(d)
+    xp = jnp.pad(x, ((0, 0), (0, 0), (0, d_pad - d)))
+    keep = jax.vmap(lambda r: legacy.topk_mask_rankcube(r, k, d))(xp)
+    v_leg = jax.vmap(lambda r, m: legacy.compact_onehot(r, m, k))(
+        xp.astype(jnp.float32), keep)
+    v_pl, b_pl = mustafar_compress(x, k, interpret=True)
+    np.testing.assert_array_equal(np.asarray(v_leg, np.float32),
+                                  np.asarray(v_pl, np.float32))
+    # and the bitmap agrees with the legacy keep mask
+    _, b_leg = pack_fixedk(x, keep[..., :d], k)
+    np.testing.assert_array_equal(np.asarray(b_leg), np.asarray(b_pl))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("sparsity", [0.5, 0.7])
+@pytest.mark.parametrize("d", [64, 80, 128])
+def test_decompress_matches_legacy_onehot(rng, dtype, sparsity, d):
+    """Gather expansion == legacy one-hot contraction: bit-for-bit in fp32,
+    and (up to the fp32 cast) exact for bf16 values too — both reproduce the
+    stored value or 0, so only dtype width differs."""
+    k = _keep_k(d, sparsity)
+    x = _mk(rng, (3, 32, d), dtype)
+    vals, bm = ref.mustafar_compress_ref(x, k)
+    for r in range(vals.shape[0]):
+        new = _decompress(vals[r], bm[r], d, k)           # vals.dtype
+        old = legacy.decompress_onehot(vals[r], bm[r], k)  # fp32
+        np.testing.assert_array_equal(
+            np.asarray(new, np.float32), np.asarray(old, np.float32))
+    # and both match the dense reference (pruned x) on the true channels
+    dense = np.asarray(
+        jax.vmap(lambda v, b: _decompress(v, b, d, k))(vals, bm))[..., :d]
+    from repro.core.sparse_format import topk_mask
+    pruned = np.where(np.asarray(topk_mask(x, k)), np.asarray(x, np.float32), 0.0)
+    np.testing.assert_array_equal(dense.astype(np.float32), pruned)
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
@@ -45,14 +116,16 @@ def test_sparse_qk_kernel(rng, dtype, T, tile, d, k, G):
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("T,tile,d,k,G", [(128, 64, 128, 40, 4),
-                                          (64, 32, 64, 24, 2)])
+                                          (64, 32, 64, 24, 2),
+                                          (64, 32, 80, 32, 2)])
 def test_sparse_av_kernel(rng, dtype, T, tile, d, k, G):
     BH = 2
     x = _mk(rng, (BH, T, d), dtype)
     vals, bm = ref.mustafar_compress_ref(x, k)
     p = jax.nn.softmax(_mk(rng, (BH, G, T), jnp.float32), axis=-1)
     o_ref = ref.sparse_av_ref(p, vals, bm, d)
-    o_pl = sparse_av(p, vals, bm, interpret=True, tile_t=tile)[..., :d]
+    o_pl = sparse_av(p, vals, bm, d=d, interpret=True, tile_t=tile)
+    assert o_pl.shape == (BH, G, d)        # sliced to true d internally
     tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
     np.testing.assert_allclose(np.asarray(o_ref), np.asarray(o_pl),
                                rtol=tol, atol=tol)
@@ -73,6 +146,57 @@ def test_fused_decode_kernel(rng, nv):
                                   scale=d ** -0.5, interpret=True, tile_t=32)
     np.testing.assert_allclose(np.asarray(o_ref), np.asarray(o_pl),
                                rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("d", [64, 80, 128])
+def test_fused_decode_ragged_edges(rng, dtype, d):
+    """n_valid ∈ {0, 1, tile_t, T} per row: the DMA-skipping grid clamps
+    past-depth tiles, empty rows finalize to a zero vector, and partial
+    tiles mask correctly — all against the jnp oracle."""
+    BH, G, T, tile_t = 4, 2, 64, 16
+    k = _keep_k(d, 0.7)
+    q = _mk(rng, (BH, G, d), dtype)
+    kx = _mk(rng, (BH, T, d), dtype)
+    vx = _mk(rng, (BH, T, d), dtype)
+    kv_, kb_ = ref.mustafar_compress_ref(kx, k)
+    vv_, vb_ = ref.mustafar_compress_ref(vx, k)
+    n_valid = jnp.asarray([0, 1, tile_t, T], jnp.int32)
+    o_ref = ref.decode_attention_fused_ref(q, kv_, kb_, vv_, vb_, n_valid, d,
+                                           scale=d ** -0.5)
+    o_pl = decode_attention_fused(q, kv_, kb_, vv_, vb_, n_valid, d=d,
+                                  scale=d ** -0.5, interpret=True,
+                                  tile_t=tile_t)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(o_ref), np.asarray(o_pl),
+                               rtol=tol, atol=tol)
+    assert np.all(np.asarray(o_pl)[0] == 0.0)  # empty row -> zero vector
+
+
+def test_fused_decode_state(rng):
+    """return_state hands back (acc, m, l) consistent with the normalized
+    output and the jnp state oracle."""
+    BH, G, d, T, k = 3, 4, 128, 128, 40
+    q = _mk(rng, (BH, G, d), jnp.float32)
+    kx = _mk(rng, (BH, T, d), jnp.float32)
+    vx = _mk(rng, (BH, T, d), jnp.float32)
+    kv_, kb_ = ref.mustafar_compress_ref(kx, k)
+    vv_, vb_ = ref.mustafar_compress_ref(vx, k)
+    n_valid = jnp.asarray([128, 40, 0], jnp.int32)
+    o, acc, m, l = decode_attention_fused(
+        q, kv_, kb_, vv_, vb_, n_valid, d=d, scale=d ** -0.5,
+        interpret=True, tile_t=32, return_state=True)
+    o_ref, acc_ref, m_ref, l_ref = ref.decode_attention_fused_state_ref(
+        q, kv_, kb_, vv_, vb_, n_valid, d, scale=d ** -0.5)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(m), np.asarray(m_ref),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(l), np.asarray(l_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(
+        np.asarray(acc), np.asarray(o) * np.maximum(np.asarray(l), 1e-30),
+        rtol=1e-5, atol=1e-5)
 
 
 @pytest.mark.parametrize("Hq,Hkv,T,d,bq,bk", [(4, 2, 128, 64, 64, 64),
@@ -104,3 +228,44 @@ def test_ops_dispatch_cpu(rng):
     s2 = ops.sparse_qk(q, v1, b1, scale=0.1, use_pallas=True)
     np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-5,
                                atol=1e-5)
+    p = jax.nn.softmax(_mk(rng, (B, Hq, T), jnp.float32), axis=-1)
+    o1 = ops.sparse_av(p, v1, b1, d=d)
+    o2 = ops.sparse_av(p, v1, b1, d=d, use_pallas=True)
+    assert o1.shape == o2.shape == (B, Hq, d)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_ops_compress_auto_tile(rng):
+    """ops.compress tiles ragged token counts automatically: T=80 (a
+    tile_tokens=16 prefill) is not a multiple of the default tile_t=64, so
+    the dispatch picks the largest divisor (40) instead of raising."""
+    from repro.kernels import ops
+    x = _mk(rng, (2, 2, 80, 64), jnp.float32)
+    v1, b1 = ops.compress(x, 24)                      # jnp path
+    v2, b2 = ops.compress(x, 24, use_pallas=True)     # interpret path
+    np.testing.assert_array_equal(np.asarray(b1), np.asarray(b2))
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+
+
+def test_kernelized_decode_matches_chunked(rng):
+    """decode_attention_mustafar_kernelized (fused kernel + window merge)
+    == the chunked jnp formulation on the same view."""
+    from repro.core.attention import (MustafarCacheView,
+                                      decode_attention_mustafar_chunked,
+                                      decode_attention_mustafar_kernelized)
+    B, Hkv, Hq, Tc, W, d, k = 2, 2, 4, 128, 16, 128, 40
+    kx = _mk(rng, (B, Hkv, Tc, d), jnp.float32)
+    vx = _mk(rng, (B, Hkv, Tc, d), jnp.float32)
+    ckv, ckb = ref.mustafar_compress_ref(kx, k)
+    cvv, cvb = ref.mustafar_compress_ref(vx, k)
+    view = MustafarCacheView(
+        ckv, ckb, cvv, cvb, jnp.asarray([128, 40], jnp.int32),
+        _mk(rng, (B, Hkv, W, d), jnp.float32),
+        _mk(rng, (B, Hkv, W, d), jnp.float32),
+        jnp.asarray([16, 9], jnp.int32))
+    q = _mk(rng, (B, Hq, d), jnp.float32)
+    o_kern = decode_attention_mustafar_kernelized(q, view)
+    o_chnk = decode_attention_mustafar_chunked(q, view, chunk=32)
+    np.testing.assert_allclose(np.asarray(o_kern), np.asarray(o_chnk),
+                               rtol=1e-4, atol=1e-4)
