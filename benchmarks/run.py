@@ -22,6 +22,7 @@ SUITES = {
     "kernels": bench_kernel.main,         # Fig 6a + PR-2 kernel overhaul
     "compression": bench_compression.main,  # Fig 6b
     "throughput": bench_throughput.main,  # Fig 7
+    "paging": bench_throughput.paging_main,  # paged vs contiguous pools
 }
 _ALIASES = {"kernel": "kernels"}          # pre-PR-2 suite name
 

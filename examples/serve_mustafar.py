@@ -32,6 +32,13 @@ def main():
     ap.add_argument("--dense", action="store_true",
                     help="disable Mustafar (dense-cache baseline)")
     ap.add_argument("--sparsity", type=float, default=0.7)
+    ap.add_argument("--page-tokens", type=int, default=0,
+                    help="paged compressed pools: tokens per page (multiple "
+                         "of tile_tokens; 0 = contiguous per-slot pools)")
+    ap.add_argument("--n-pages", type=int, default=0,
+                    help="physical page-pool size (0 = full contiguous "
+                         "capacity; smaller overcommits under the page-"
+                         "budget admission gate)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -42,8 +49,14 @@ def main():
         cfg = cfg.with_sparsity(args.sparsity, args.sparsity)
     params = init_params(jax.random.PRNGKey(0), cfg)
     max_total = 64 + args.gen + 64
+    if args.page_tokens and args.dense:
+        ap.error("--page-tokens requires the Mustafar cache (drop --dense)")
+    if args.n_pages and not args.page_tokens:
+        ap.error("--n-pages only bounds PAGED pools; pass --page-tokens too")
     sched = Scheduler(cfg, params, n_slots=args.slots,
-                      max_total_tokens=max_total)
+                      max_total_tokens=max_total,
+                      page_tokens=args.page_tokens or None,
+                      n_pages=args.n_pages or None)
 
     # Poisson arrival trace with ragged prompts (a few length buckets so the
     # per-length prefill executables amortize across requests)
@@ -73,14 +86,24 @@ def main():
           f"{sched.step_count} engine steps in {dt:.2f}s")
     print(f"  decode throughput: {new_tokens/dt:.1f} tok/s "
           f"(CPU reference path, incl. compiles)")
-    print(f"  batch occupancy:   {sched.occupancy*100:.1f}% "
-          f"of {args.slots} slots")
+    occ = sched.occupancy
+    print(f"  batch occupancy:   {occ.slots*100:.1f}% of {args.slots} slots")
+    if occ.pages is not None:
+        print(f"  page occupancy:    {occ.pages*100:.1f}% of "
+              f"{sched.n_pages} pages "
+              f"(peak {sched.allocator.peak_in_use} drawn)")
     print(f"  latency (steps):   p50={int(np.median(lat))} "
           f"max={int(np.max(lat))}")
-    acct = cache_hbm_bytes(cfg, args.slots, max_total)
+    acct = cache_hbm_bytes(cfg, args.slots, max_total,
+                           page_tokens=args.page_tokens or None,
+                           n_pages=args.n_pages or None)
     print(f"  cache bytes: dense={acct['dense']/2**20:.1f}MiB "
           f"mustafar={acct['mustafar']/2**20:.1f}MiB "
           f"ratio={acct['ratio']*100:.1f}%")
+    if "paged" in acct:
+        print(f"  paged bytes: pool={acct['paged_pool']/2**20:.2f}MiB "
+              f"meta={acct['page_meta']/2**10:.1f}KiB "
+              f"total={acct['paged']/2**20:.2f}MiB")
     print("  sample:", sched.finished[0].output_tokens[:12])
 
 

@@ -18,7 +18,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.sparse_format import pad_to_words, unpack_fixedk
+from repro.core.sparse_format import gather_pages, pad_to_words, unpack_fixedk
 
 NEG_INF = -1e30
 
@@ -38,6 +38,39 @@ class MustafarCacheView(NamedTuple):
     k_window: jax.Array       # [B, Hkv, W, d]
     v_window: jax.Array       # [B, Hkv, W, d]
     n_window: jax.Array       # [B] int32 — valid window tokens per row
+
+
+class PagedMustafarCacheView(NamedTuple):
+    """Decode-attention operands when the compressed pools are PAGED.
+
+    The four pool leaves are page-major ``[n_phys, Hkv, page_tokens, ·]``
+    globals shared by every batch slot; ``block_table [B, max_pages]``
+    (int32, -1 = unmapped) maps each slot's logical pages to physical ones.
+    Window operands and the per-row validity vectors are identical to
+    ``MustafarCacheView``. ``to_contiguous()`` materialises the gather view
+    — the CPU/jnp decode paths read through it, which keeps their numerics
+    bit-identical to contiguous pools; the fused TPU kernel instead
+    translates tile→page inside its scalar-prefetch grid and never
+    materialises the gather."""
+    ck_pool: jax.Array        # [n_phys, Hkv, page_tokens, k_k]
+    ck_bitmap: jax.Array      # [n_phys, Hkv, page_tokens, d//32] uint32
+    cv_pool: jax.Array        # [n_phys, Hkv, page_tokens, k_v]
+    cv_bitmap: jax.Array      # [n_phys, Hkv, page_tokens, d//32] uint32
+    block_table: jax.Array    # [B, max_pages] int32
+    n_compressed: jax.Array   # [B] int32 — valid compressed tokens per row
+    k_window: jax.Array       # [B, Hkv, W, d]
+    v_window: jax.Array       # [B, Hkv, W, d]
+    n_window: jax.Array       # [B] int32 — valid window tokens per row
+
+    def to_contiguous(self) -> "MustafarCacheView":
+        return MustafarCacheView(
+            ck_values=gather_pages(self.ck_pool, self.block_table),
+            ck_bitmap=gather_pages(self.ck_bitmap, self.block_table),
+            cv_values=gather_pages(self.cv_pool, self.block_table),
+            cv_bitmap=gather_pages(self.cv_bitmap, self.block_table),
+            n_compressed=self.n_compressed,
+            k_window=self.k_window, v_window=self.v_window,
+            n_window=self.n_window)
 
 
 def _expand_gqa(x: jax.Array, n_q_heads: int) -> jax.Array:
@@ -215,6 +248,27 @@ def decode_attention_mustafar_kernelized(q: jax.Array, cache: MustafarCacheView,
         q, cache.ck_values, cache.ck_bitmap, cache.cv_values, cache.cv_bitmap,
         cache.n_compressed, scale=scale, return_state=True)
     # window part joins the same online softmax (shared chunked epilogue)
+    return _merge_window(q, cache, scale, m, l, acc).astype(q.dtype)
+
+
+def decode_attention_mustafar_kernelized_paged(
+        q: jax.Array, cache: PagedMustafarCacheView,
+        scale: Optional[float] = None) -> jax.Array:
+    """Decode attention with the fused Pallas kernel over PAGED pools.
+
+    Same epilogue as ``decode_attention_mustafar_kernelized`` — the kernel
+    hands back raw ``(acc, m, l)`` softmax state and the dense local window
+    merges into the same running softmax here; only the compressed operands'
+    residency differs (tile→page translation in the kernel's scalar-prefetch
+    grid instead of contiguous tiles). On CPU the dispatch gathers the pages
+    and runs the jnp oracle, so the path stays backend-portable."""
+    from repro.kernels import ops as kops
+    d = q.shape[-1]
+    scale = scale if scale is not None else d ** -0.5
+    _, acc, m, l = kops.decode_attention_fused_paged(
+        q, cache.ck_pool, cache.ck_bitmap, cache.cv_pool, cache.cv_bitmap,
+        cache.block_table, cache.n_compressed, scale=scale,
+        return_state=True)
     return _merge_window(q, cache, scale, m, l, acc).astype(q.dtype)
 
 

@@ -97,6 +97,28 @@ def prune_and_pack(x: jax.Array, k: int):
 
 
 # ----------------------------------------------------------------------
+# paged layout (vLLM-style block indirection over the fixed-k format)
+
+def gather_pages(pool: jax.Array, block_table: jax.Array) -> jax.Array:
+    """Materialise a per-slot contiguous view of a paged pool.
+
+    pool        [n_pages, Hkv, page_tokens, c]  (c = k values or d//32 words)
+    block_table [B, max_pages] int32            (-1 = unmapped)
+    returns     [B, Hkv, max_pages * page_tokens, c]
+
+    Unmapped entries clamp to page 0: the gathered rows there are garbage,
+    but every consumer masks tokens at or past ``n_compressed``, and since
+    pool values are finite the masked contributions are exactly zero — the
+    gathered view is therefore bit-identical to a contiguous pool wherever
+    the token index is valid (the paged differential tests assert this).
+    """
+    idx = jnp.clip(block_table, 0, pool.shape[0] - 1)   # [B, MP]
+    g = pool[idx]                                       # [B, MP, Hkv, pt, c]
+    B, MP, Hkv, pt, c = g.shape
+    return jnp.moveaxis(g, 2, 1).reshape(B, Hkv, MP * pt, c)
+
+
+# ----------------------------------------------------------------------
 # accounting (paper Fig. 6b — compression rate)
 
 def dense_bytes(T: int, d: int, itemsize: int = 2) -> int:

@@ -14,6 +14,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.sparse_format import gather_pages
 from repro.kernels import bitmap_compress, ref, sparse_decode
 
 
@@ -132,6 +133,55 @@ def decode_attention_fused(q: jax.Array,
         res = ref.decode_attention_fused_state_ref(*args, nv, d, scale)
     else:
         res = ref.decode_attention_fused_ref(*args, nv, d, scale)
+    if return_state:
+        o, acc, m, l = res
+        return (o.reshape(B, Hkv * G, d), acc.reshape(B, Hkv * G, d),
+                m.reshape(B, Hkv * G, 1), l.reshape(B, Hkv * G, 1))
+    return res.reshape(B, Hkv * G, d)
+
+
+def decode_attention_fused_paged(q: jax.Array,
+                                 ck_pool: jax.Array, ck_bitmap: jax.Array,
+                                 cv_pool: jax.Array, cv_bitmap: jax.Array,
+                                 block_table: jax.Array, n_valid: jax.Array,
+                                 *, scale: Optional[float] = None,
+                                 use_pallas: Optional[bool] = None,
+                                 return_state: bool = False):
+    """Fused decode attention over PAGED compressed pools.
+
+    q [B,Hq,d]; pools [n_phys,Hkv,page_tokens,·]; block_table [B,max_pages]
+    int32; n_valid [B] -> out [B,Hq,d] fp32 (+ raw (acc, m, l) state with
+    ``return_state=True``).
+
+    On TPU the Pallas kernel translates tile→page in the scalar-prefetch
+    index maps (block-table rows live in SMEM beside ``n_valid``), keeping
+    per-row DMA proportional to each slot's own compressed depth. Off-TPU
+    (and inside traced pjit graphs) the pools are gathered into the
+    contiguous layout and the jnp oracle runs — bit-identical numerics, so
+    the CPU serving path needs no special casing.
+    """
+    B, Hq, d = q.shape
+    n_phys, Hkv, page_tokens, kk = ck_pool.shape
+    scale = scale if scale is not None else d ** -0.5
+    qg, G = _group_q(q, Hkv)
+    nv = jnp.repeat(n_valid.astype(jnp.int32), Hkv)
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        res = sparse_decode.decode_attention_fused_paged(
+            qg, ck_pool, ck_bitmap, cv_pool, cv_bitmap,
+            block_table, nv, d=d, scale=scale, interpret=not _on_tpu(),
+            tile_t=_auto_tile(page_tokens, sparse_decode.TILE_T),
+            return_state=return_state)
+    else:
+        T = block_table.shape[1] * page_tokens
+        args = tuple(
+            gather_pages(pool, block_table).reshape(B * Hkv, T, -1)
+            for pool in (ck_pool, ck_bitmap, cv_pool, cv_bitmap))
+        if return_state:
+            res = ref.decode_attention_fused_state_ref(qg, *args, nv, d, scale)
+        else:
+            res = ref.decode_attention_fused_ref(qg, *args, nv, d, scale)
     if return_state:
         o, acc, m, l = res
         return (o.reshape(B, Hkv * G, d), acc.reshape(B, Hkv * G, d),

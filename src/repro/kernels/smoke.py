@@ -51,8 +51,36 @@ def main() -> int:
     np.testing.assert_allclose(np.asarray(l), np.asarray(l_ref),
                                rtol=1e-4, atol=1e-4)
     assert np.all(np.asarray(out)[2] == 0.0), "empty row must be zeros"
+
+    # paged decode: scatter the same pools into shuffled pages and run the
+    # block-table-translating kernel — must be BIT-exact vs the contiguous
+    # kernel (same tile math, only the residency differs)
+    from repro.kernels.sparse_decode import decode_attention_fused_paged
+
+    pt = 2 * tile_t                       # page_tokens = 32, 2 tiles/page
+    MP = T // pt
+    Hkv = 1                               # BH rows act as B slots here
+    n_phys = BH * MP + 1                  # + write-discard scratch page
+    perm = rng.permutation(BH * MP)
+    bt = np.full((BH, MP), -1, np.int32)
+    paged = []
+    for arr in (kv_, kb_, vv_, vb_):
+        a = np.asarray(arr)
+        pool = np.zeros((n_phys, Hkv, pt, a.shape[-1]), a.dtype)
+        for b in range(BH):
+            for lp in range(MP):
+                bt[b, lp] = perm[b * MP + lp]
+                pool[bt[b, lp], 0] = a[b, lp * pt:(lp + 1) * pt]
+        paged.append(jnp.asarray(pool))
+    out_p = decode_attention_fused_paged(
+        q, *paged, jnp.asarray(bt), n_valid, d=d, scale=d ** -0.5,
+        interpret=True, tile_t=tile_t)
+    np.testing.assert_array_equal(
+        np.asarray(out_p), np.asarray(acc / jnp.maximum(l, 1e-30)))
     print("kernel smoke OK: compress -> fused decode round-trip matches "
-          f"oracle (BH={BH}, T={T}, d={d}, k={k}, n_valid={list(map(int, n_valid))})")
+          f"oracle (BH={BH}, T={T}, d={d}, k={k}, "
+          f"n_valid={list(map(int, n_valid))}); paged decode bit-exact "
+          f"(page_tokens={pt}, {BH * MP} pages shuffled)")
     return 0
 
 

@@ -27,6 +27,12 @@ index maps clamp each row's tile index to its own compressed depth, so tiles
 past a ragged row's fill are never DMA'd from HBM at all (PR 1's per-row
 early-out skipped the FLOPs but still paid the DMA — the dominant cost in a
 memory-bound kernel).
+
+``decode_attention_fused_paged`` extends the fused kernel to PAGED pools
+(``serving.cache`` block-table indirection): the per-slot block-table rows
+join ``n_valid`` in SMEM and the tile→page translation happens in the same
+index maps, after the ragged clamp — so the DMA-skipping property holds per
+page and the gather view is never materialised on TPU.
 """
 from __future__ import annotations
 
@@ -264,6 +270,130 @@ def decode_attention_fused(q: jax.Array,
         ],
         interpret=interpret,
     )(n_valid.astype(jnp.int32), q, ck_values, ck_bitmap, cv_values, cv_bitmap)
+    out = acc / jnp.maximum(l, 1e-30)
+    if return_state:
+        return out, acc, m, l
+    return out
+
+
+# ----------------------------------------------------------------------
+# Paged variant: same fused online-softmax decode, but the compressed
+# operands live in a global page pool [n_phys, Hkv, page_tokens, ·] indexed
+# through a per-slot block table. The tile→page translation happens in the
+# BlockSpec index maps on the scalar-prefetch grid — the block-table rows
+# sit in SMEM next to n_valid — so the DMA-skipping property survives
+# paging: a clamped (past-depth) step translates to the same physical page
+# block as the previous step and the pipeline issues no new HBM DMA.
+
+def _fused_paged_kernel(nv_ref, bt_ref, q_ref, kv_ref, kb_ref, vv_ref, vb_ref,
+                        acc_ref, m_ref, l_ref, *, d, kk, kv, scale, tile_t):
+    b = pl.program_id(0)
+    t = pl.program_id(1)
+    nv = nv_ref[b]
+
+    @pl.when(t == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # identical math to _fused_kernel; only the residency of the compressed
+    # tile differs (one page's sub-tile instead of a contiguous-pool tile)
+    @pl.when(t * tile_t < nv)
+    def _tile():
+        q = q_ref[0]                                           # [G, d]
+        k_dense = _decompress(kv_ref[0, 0], kb_ref[0, 0], d, kk)
+        s = _dot_compressed(q, k_dense[:, :d],
+                            (((1,), (1,)), ((), ()))) * scale  # [G, T]
+        token_idx = t * tile_t + lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(token_idx < nv, s, NEG_INF)
+
+        m_prev, l_prev = m_ref[0], l_ref[0]                    # [G, 1]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        v_dense = _decompress(vv_ref[0, 0], vb_ref[0, 0], d, kv)
+        pv = _dot_compressed(p, v_dense[:, :d], (((1,), (0,)), ((), ())))
+        acc_ref[0] = acc_ref[0] * alpha + pv.astype(acc_ref.dtype)
+        l_ref[0] = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+        m_ref[0] = m_new
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("d", "scale", "interpret", "tile_t",
+                                    "return_state"))
+def decode_attention_fused_paged(q: jax.Array,
+                                 ck_pool: jax.Array, ck_bitmap: jax.Array,
+                                 cv_pool: jax.Array, cv_bitmap: jax.Array,
+                                 block_table: jax.Array, n_valid: jax.Array,
+                                 *, d: int, scale: float,
+                                 interpret: bool = False,
+                                 tile_t: int = TILE_T,
+                                 return_state: bool = False):
+    """Fused decode attention over PAGED compressed pools.
+
+    q [BH, G, d] (BH = B·Hkv, batch-major); pools [n_phys, Hkv, page_tokens,
+    ·]; block_table [B, max_pages] int32 (-1 unmapped); n_valid [BH] int32.
+    Returns out [BH, G, d] fp32 (plus raw (acc, m, l) state with
+    ``return_state=True`` — same contract as ``decode_attention_fused``).
+
+    ``tile_t`` must divide ``page_tokens`` so a kernel tile never straddles
+    a page. Index maps clamp step t to the row's last valid tile exactly as
+    the contiguous kernel does, THEN translate tile→(physical page, in-page
+    tile) through the prefetched block table; unmapped / garbage entries
+    clamp into range and their compute is skipped by the same per-row
+    ``n_valid`` guard, so they cost one harmless resident-block fetch at
+    most. Numerics are bit-identical to ``decode_attention_fused`` on the
+    equivalent contiguous pool (asserted in tests/test_paged_equivalence)."""
+    BH, G, _ = q.shape
+    n_phys, Hkv, page_tokens, kk = ck_pool.shape
+    kv = cv_pool.shape[-1]
+    W = ck_bitmap.shape[-1]
+    max_pages = block_table.shape[1]
+    T = max_pages * page_tokens
+    assert page_tokens % tile_t == 0, (page_tokens, tile_t)
+    assert BH == block_table.shape[0] * Hkv, (BH, block_table.shape, Hkv)
+    grid = (BH, T // tile_t)
+    kernel = functools.partial(_fused_paged_kernel, d=d, kk=kk, kv=kv,
+                               scale=scale, tile_t=tile_t)
+
+    def page_idx(b, t, nv_ref, bt_ref):
+        # clamp to the row's last valid tile (DMA-skip), then translate the
+        # logical token offset through the slot's block-table row
+        last = jnp.maximum((nv_ref[b] + tile_t - 1) // tile_t - 1, 0)
+        tok = jnp.minimum(t, last) * tile_t
+        phys = bt_ref[b // Hkv, tok // page_tokens]
+        phys = jnp.clip(phys, 0, n_phys - 1)
+        return (phys, b % Hkv, (tok % page_tokens) // tile_t, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, G, d), lambda b, t, nv, bt: (b, 0, 0)),
+            pl.BlockSpec((1, 1, tile_t, kk), page_idx),
+            pl.BlockSpec((1, 1, tile_t, W), page_idx),
+            pl.BlockSpec((1, 1, tile_t, kv), page_idx),
+            pl.BlockSpec((1, 1, tile_t, W), page_idx),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, G, d), lambda b, t, nv, bt: (b, 0, 0)),
+            pl.BlockSpec((1, G, 1), lambda b, t, nv, bt: (b, 0, 0)),
+            pl.BlockSpec((1, G, 1), lambda b, t, nv, bt: (b, 0, 0)),
+        ],
+    )
+    acc, m, l = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, G, d), jnp.float32),
+            jax.ShapeDtypeStruct((BH, G, 1), jnp.float32),
+            jax.ShapeDtypeStruct((BH, G, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(n_valid.astype(jnp.int32), block_table.astype(jnp.int32),
+      q, ck_pool, ck_bitmap, cv_pool, cv_bitmap)
     out = acc / jnp.maximum(l, 1e-30)
     if return_state:
         return out, acc, m, l

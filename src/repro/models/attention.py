@@ -199,13 +199,28 @@ def decode_attention_auto(q: jax.Array, cache_view, cfg: ModelConfig,
       past each row's own compressed depth.
     * multi-chunk batched elsewhere → the chunked online-softmax scan (same
       math as the kernel, temp memory bounded by one chunk).
+
+    Accepts either a contiguous ``MustafarCacheView`` or a
+    ``PagedMustafarCacheView``. Paged pools on TPU with a multi-chunk view
+    take the paged fused kernel (tile→page translation in the
+    scalar-prefetch grid — the gather is never materialised); everywhere
+    else the paged view reads through ``to_contiguous()``'s gather and the
+    selection below proceeds unchanged, so paged CPU numerics stay
+    bit-identical to contiguous pools.
     """
-    from repro.core.attention import (DECODE_CHUNK, decode_attention_mustafar,
-                                      decode_attention_mustafar_chunked,
-                                      decode_attention_mustafar_kernelized)
+    from repro.core.attention import (
+        DECODE_CHUNK, PagedMustafarCacheView, decode_attention_mustafar,
+        decode_attention_mustafar_chunked, decode_attention_mustafar_kernelized,
+        decode_attention_mustafar_kernelized_paged)
     B = q.shape[0]
-    Tc = cache_view.ck_values.shape[2]
     scale = scale if scale is not None else cfg.d_head ** -0.5
+    if isinstance(cache_view, PagedMustafarCacheView):
+        Tc = cache_view.block_table.shape[1] * cache_view.ck_pool.shape[2]
+        if B > 1 and Tc > DECODE_CHUNK and jax.default_backend() == "tpu":
+            return decode_attention_mustafar_kernelized_paged(q, cache_view,
+                                                              scale=scale)
+        cache_view = cache_view.to_contiguous()
+    Tc = cache_view.ck_values.shape[2]
     if B == 1 or Tc <= DECODE_CHUNK:
         return decode_attention_mustafar(q, cache_view, scale=scale)
     if jax.default_backend() == "tpu":

@@ -147,11 +147,33 @@ def terms_from_compiled(compiled, n_chips: int,
 # analytic corrections for loops left as scans (global numbers; divided by
 # chips by the caller)
 
+def paged_metadata_bytes(cfg: ModelConfig, B: int, max_total_tokens: int,
+                         page_tokens: int) -> int:
+    """Per-decode-step HBM bytes the PAGED pool layout adds on top of the
+    contiguous cost model: every attention layer reads the int32 block
+    table (tile→page translation — SMEM-prefetched by the fused kernel,
+    gathered by the jnp paths) and the scratch page costs one page of pool
+    bytes once. Per step:
+
+        n_attn · 4 · B · max_pages          (block-table words)
+
+    The compressed-token bytes themselves are unchanged — pages hold the
+    same fixed-k rows, just at translated addresses — so this term is the
+    entire steady-state paging overhead (the scratch page is capacity, not
+    traffic)."""
+    from repro.serving.cache import plan_pages
+    max_pages = plan_pages(cfg, max_total_tokens, page_tokens, batch=B)
+    n_attn = len(cfg.attention_layers())
+    return n_attn * 4 * B * max_pages
+
+
 def scan_corrections(cfg: ModelConfig, shape: ShapeConfig,
-                     mode: str, train_factor: float = 3.0) -> Dict[str, float]:
+                     mode: str, train_factor: float = 3.0,
+                     page_tokens: Optional[int] = None) -> Dict[str, float]:
     """(flops, bytes) NOT counted by cost_analysis because they sit inside a
     while-loop body that executes trip>1 times. ``train_factor`` accounts for
-    fwd+bwd (~3x) on those bodies in training mode."""
+    fwd+bwd (~3x) on those bodies in training mode. ``page_tokens`` adds the
+    paged-pool metadata traffic (block-table reads) to decode mode."""
     B, T = shape.global_batch, shape.seq_len
     fl = 0.0
     by = 0.0
@@ -234,6 +256,8 @@ def scan_corrections(cfg: ModelConfig, shape: ShapeConfig,
                 + 2.0 * B * cfg.n_kv_heads * chunk * d
             fl += (n_chunks - 1) * n_attn * body_fl
             by += (n_chunks - 1) * n_attn * body_by
+        if page_tokens is not None:
+            by += paged_metadata_bytes(cfg, B, T, page_tokens)
     return {"flops": fl, "bytes": by}
 
 

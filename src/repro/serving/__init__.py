@@ -1,6 +1,7 @@
 """Serving: Mustafar KV-cache manager, prefill/decode engine, sampler,
 continuous-batching scheduler."""
-from repro.serving.cache import (cache_hbm_bytes, init_cache, plan_pools,
-                                 write_slot)
-from repro.serving.engine import (Engine, Request, Scheduler, decode_step,
-                                  prefill, prefill_into_slot)
+from repro.serving.cache import (PageAllocator, cache_hbm_bytes, init_cache,
+                                 pages_for_request, plan_pages, plan_pools,
+                                 write_slot, write_slot_paged)
+from repro.serving.engine import (Engine, Occupancy, Request, Scheduler,
+                                  decode_step, prefill, prefill_into_slot)

@@ -21,6 +21,17 @@ tile group when *its own* window fills (per-slot masked updates; the engine
 wraps them in an any-slot work-skip cond) — which is what lets the
 continuous-batching scheduler in ``serving.engine`` admit/release ragged
 requests without forcing the batch into lockstep.
+
+PAGED POOLS (``init_cache(page_tokens=...)``) decouple slot capacity from
+pool allocation: instead of ``[B, Hkv, Tc_max, k]`` per-slot compressed
+pools (every slot pays worst-case context), one global page pool
+``[n_pages + 1, Hkv, page_tokens, k]`` is shared by all slots through a
+per-slot int32 block table — vLLM-style indirection over the fixed-k bitmap
+format. ``PageAllocator`` manages the free list (reserve at admission, draw
+lazily at compaction, free at retire); ``compact_layer_paged`` scatters tile
+retirements through the table; reads gather pages back into the contiguous
+view (bit-exact on CPU) or translate inside the fused kernel's
+scalar-prefetch grid (TPU).
 """
 from __future__ import annotations
 
@@ -65,6 +76,110 @@ def plan_pools(cfg: ModelConfig, max_total_tokens: int,
         unit = DECODE_CHUNK * CONTEXT_SHARDS
     Tc_max = (max_total_tokens + unit - 1) // unit * unit
     return Tc_max, Wbuf
+
+
+# ----------------------------------------------------------------------
+# paged pools: a global page pool [n_pages, Hkv, page_tokens, ·] shared by
+# every batch slot, indexed through a per-slot int32 block table — slot
+# capacity (max_total_tokens) no longer dictates pool allocation, so short
+# requests stop reserving long-request memory (vLLM-style paging over the
+# fixed-k bitmap format).
+
+PAGE_UNMAPPED = -1      # block-table entry for a logical page with no backing
+
+
+def plan_pages(cfg: ModelConfig, max_total_tokens: int, page_tokens: int,
+               batch: int = 0) -> int:
+    """max_pages: block-table width so the paged view covers Tc_max.
+
+    ``page_tokens`` must be a positive multiple of ``tile_tokens`` — a tile
+    group is the compaction write granule and must never straddle a page
+    boundary (one dynamic_update_slice per retirement, one page per tile)."""
+    m = cfg.mustafar
+    if page_tokens <= 0 or page_tokens % m.tile_tokens:
+        raise ValueError(
+            f"page_tokens={page_tokens} must be a positive multiple of "
+            f"tile_tokens={m.tile_tokens}")
+    Tc_max, _ = plan_pools(cfg, max_total_tokens, batch=batch)
+    return (Tc_max + page_tokens - 1) // page_tokens
+
+
+def max_compressed_tokens(cfg: ModelConfig, total_tokens: int) -> int:
+    """Upper bound on a request's pool fill over its whole lifetime.
+
+    A tile group retires only when the window holds Wbuf tokens, so at every
+    compaction ``n_compressed = position − local_window``; position at a
+    compacting step's entry is at most ``total − 1`` (the final token is
+    appended after the last compaction can fire)."""
+    m = cfg.mustafar
+    return max(0, (total_tokens - 1 - m.local_window) // m.tile_tokens) \
+        * m.tile_tokens
+
+
+def pages_for_request(cfg: ModelConfig, total_tokens: int,
+                      page_tokens: int) -> int:
+    """Worst-case page budget for ``prompt + max_new_tokens`` total tokens."""
+    comp = max_compressed_tokens(cfg, total_tokens)
+    return (comp + page_tokens - 1) // page_tokens
+
+
+class PageAllocator:
+    """Free-list allocator over the global compressed-page pool.
+
+    Two-phase discipline so admission can never deadlock mid-decode:
+    ``reserve(n)`` promises n pages to a request at admission (fails upfront
+    if the budget isn't there), ``draw()`` converts one promised page into a
+    physical page id lazily — the scheduler draws right before the decode
+    step whose compaction writes it — and ``free``/``unreserve`` return a
+    retired request's drawn pages and unused promises. ``peak_in_use``
+    tracks the high-water mark of physically drawn pages (the byte number
+    BENCH_paging.json compares against contiguous allocation).
+    """
+
+    def __init__(self, n_pages: int):
+        if n_pages <= 0:
+            raise ValueError(f"n_pages={n_pages} must be positive")
+        self.n_pages = n_pages
+        self._free = list(range(n_pages - 1, -1, -1))   # LIFO: low ids first
+        self.n_reserved = 0
+        self.peak_in_use = 0
+
+    @property
+    def in_use(self) -> int:
+        return self.n_pages - len(self._free)
+
+    @property
+    def available(self) -> int:
+        """Pages neither drawn nor promised to an admitted request."""
+        return len(self._free) - self.n_reserved
+
+    def can_reserve(self, n: int) -> bool:
+        return self.available >= n
+
+    def reserve(self, n: int) -> None:
+        if not self.can_reserve(n):
+            raise ValueError(
+                f"cannot reserve {n} pages: {self.available} available "
+                f"({self.in_use} in use, {self.n_reserved} reserved, "
+                f"{self.n_pages} total)")
+        self.n_reserved += n
+
+    def unreserve(self, n: int) -> None:
+        assert 0 <= n <= self.n_reserved, (n, self.n_reserved)
+        self.n_reserved -= n
+
+    def draw(self) -> int:
+        """Convert one reserved promise into a physical page id."""
+        assert self.n_reserved > 0, "draw() without a reservation"
+        self.n_reserved -= 1
+        page = self._free.pop()
+        self.peak_in_use = max(self.peak_in_use, self.in_use)
+        return page
+
+    def free(self, pages) -> None:
+        for p in pages:
+            assert 0 <= p < self.n_pages and p not in self._free, p
+            self._free.append(p)
 
 
 def layer_cache_shapes(cfg: ModelConfig, kind: str, B: int,
@@ -113,24 +228,58 @@ def layer_cache_shapes(cfg: ModelConfig, kind: str, B: int,
             "cm_shift": (st["cm_shift"], cdt)}
 
 
+# pool leaves that switch from slot-major [B, Hkv, Tc, ·] to page-major
+# [n_pages, Hkv, page_tokens, ·] under paging
+_POOL_KEYS = ("ck_vals", "ck_bm", "cv_vals", "cv_bm")
+
+
 def init_cache(cfg: ModelConfig, B: int, max_total_tokens: int,
-               enc_ctx: int = 0):
+               enc_ctx: int = 0, page_tokens: Optional[int] = None,
+               n_pages: Optional[int] = None):
     """Zero-filled cache pytree: (blocks=tuple over period positions of
-    stacked [n_periods, ...] dicts, plus per-sequence [B] state vectors)."""
+    stacked [n_periods, ...] dicts, plus per-sequence [B] state vectors).
+
+    ``page_tokens`` switches the compressed pools to the PAGED layout: one
+    global pool ``[n_phys, Hkv, page_tokens, ·]`` per leaf (shared by all
+    slots; ``n_phys = n_pages + 1`` — the last page is a write-discard
+    scratch target for masked compactions) plus a per-slot int32
+    ``block_table [B, max_pages]`` initialised to ``PAGE_UNMAPPED``. One
+    block table serves every layer: compaction retires the same token range
+    in all layers, so logical page p of a slot backs the same physical page
+    index in each layer's pool. ``n_pages`` defaults to full contiguous
+    capacity (``B * max_pages``) — pass less to overcommit and let the
+    scheduler's page-budget admission gate ride the difference."""
     period = structural_period(cfg)
     n_periods = cfg.n_layers // period
+    paged = page_tokens is not None
+    if paged:
+        if not cfg.mustafar.enabled or not cfg.attention_layers():
+            raise ValueError("paged pools require mustafar.enabled and at "
+                             "least one attention layer")
+        max_pages = plan_pages(cfg, max_total_tokens, page_tokens, batch=B)
+        if n_pages is None:
+            n_pages = B * max_pages
     blocks = []
     for j in range(period):
-        spec = layer_cache_shapes(cfg, cfg.layer_kind(j), B,
-                                  max_total_tokens, enc_ctx)
+        kind = cfg.layer_kind(j)
+        spec = layer_cache_shapes(cfg, kind, B, max_total_tokens, enc_ctx)
+        if paged and kind == "attn":
+            for name in _POOL_KEYS:
+                (_, _, _, c), dt = spec[name]
+                spec[name] = ((n_pages + 1, cfg.n_kv_heads, page_tokens, c),
+                              dt)
         blocks.append({k: jnp.zeros((n_periods,) + shp, dt)
                        for k, (shp, dt) in spec.items()})
-    return {
+    out = {
         "blocks": tuple(blocks),
         "position": jnp.zeros((B,), jnp.int32),       # total tokens per slot
         "w_len": jnp.zeros((B,), jnp.int32),          # valid window per slot
         "n_compressed": jnp.zeros((B,), jnp.int32),   # pool tokens per slot
     }
+    if paged:
+        out["block_table"] = jnp.full((B, max_pages), PAGE_UNMAPPED,
+                                      jnp.int32)
+    return out
 
 
 # ----------------------------------------------------------------------
@@ -192,6 +341,61 @@ def compact_layer(cfg: ModelConfig, lc: Dict[str, jax.Array],
         else:
             mask = need.reshape((-1,) + (1,) * (comp[k].ndim - 1))
             out[k] = jnp.where(mask, comp[k], lc[k])
+    return out
+
+
+def compact_layer_paged(cfg: ModelConfig, lc: Dict[str, jax.Array],
+                        n_compressed: jax.Array, block_table: jax.Array,
+                        need: jax.Array) -> Dict[str, jax.Array]:
+    """Per-slot tile-group retirement into PAGED pools.
+
+    Pool leaves are page-major ``[n_phys, Hkv, page_tokens, ·]`` (no batch
+    dim); windows stay slot-major ``[B, Hkv, Wbuf, d]``. Each needy slot's
+    oldest tile compresses into physical page
+    ``block_table[b, n_compressed[b] // page_tokens]`` at the in-page token
+    offset; slots where ``need`` is False — and, defensively, needy slots
+    whose target page is unmapped — write to the scratch page (last physical
+    index) instead, which keeps the write unconditional (static shapes)
+    while discarding it. Writes are a ``lax.scan`` of dynamic_update_slices
+    over slots: the allocator guarantees live pages are never shared, so
+    slot order cannot alias."""
+    m = cfg.mustafar
+    d = cfg.d_head
+    tt = m.tile_tokens
+    kk = m.keep_k(d, m.key_sparsity)
+    kv = m.keep_k(d, m.value_sparsity)
+    n_phys, _, pt, _ = lc["ck_vals"].shape
+
+    k_tile = lc["k_win"][:, :, :tt, :]                 # [B,Hkv,tt,d]
+    v_tile = lc["v_win"][:, :, :tt, :]
+    ck_v, ck_b = kops.compress(k_tile, kk)             # [B,Hkv,tt,·]
+    cv_v, cv_b = kops.compress(v_tile, kv)
+
+    lp = n_compressed // pt                            # [B] logical page
+    off = n_compressed % pt                            # [B] in-page offset
+    phys = jnp.take_along_axis(block_table, lp[:, None], axis=1)[:, 0]
+    ok = need & (phys >= 0)
+    phys = jnp.where(ok, jnp.clip(phys, 0, n_phys - 1), n_phys - 1)
+    off = jnp.where(ok, off, 0)
+
+    def scatter(pool, tiles):
+        def body(p, xs):
+            tile, pg, o = xs                           # tile [Hkv, tt, ·]
+            return jax.lax.dynamic_update_slice(
+                p, tile[None].astype(p.dtype), (pg, 0, o, 0)), None
+        p, _ = jax.lax.scan(body, pool, (tiles, phys, off))
+        return p
+
+    out = dict(lc)
+    out["ck_vals"] = scatter(lc["ck_vals"], ck_v)
+    out["ck_bm"] = scatter(lc["ck_bm"], ck_b)
+    out["cv_vals"] = scatter(lc["cv_vals"], cv_v)
+    out["cv_bm"] = scatter(lc["cv_bm"], cv_b)
+    wmask = need.reshape((-1, 1, 1, 1))
+    out["k_win"] = jnp.where(wmask, jnp.roll(lc["k_win"], -tt, axis=2),
+                             lc["k_win"])
+    out["v_win"] = jnp.where(wmask, jnp.roll(lc["v_win"], -tt, axis=2),
+                             lc["v_win"])
     return out
 
 
@@ -289,12 +493,80 @@ def write_slot(cache, solo_cache, slot):
     return out
 
 
-def cache_hbm_bytes(cfg: ModelConfig, B: int, max_total_tokens: int) -> Dict[str, int]:
+def write_slot_paged(cfg: ModelConfig, cache, solo_cache, slot,
+                     pages, page_tokens: int):
+    """Splice a single-sequence CONTIGUOUS cache into slot ``slot`` of a
+    PAGED shared cache.
+
+    ``pages`` is the host list of physical page ids backing the request's
+    logical pages 0..len(pages)-1 (at least the prefill fill —
+    ``ceil(prefill_split(cfg, T)[0] / page_tokens)`` pages; later logical
+    pages may be drawn lazily). Pool contents are copied page by page from
+    the solo contiguous pool (token range ``[lp·pt, (lp+1)·pt)`` → physical
+    page ``pages[lp]``), every other leaf takes the contiguous slot splice,
+    and the slot's block-table row is rewritten (mapped prefix + UNMAPPED
+    tail), which also severs any retired tenant's mappings."""
+    pt = page_tokens
+    new_blocks = []
+    for shared_lc, solo_lc in zip(cache["blocks"], solo_cache["blocks"]):
+        nl = dict(shared_lc)
+        paged_attn = all(kn in shared_lc for kn in _POOL_KEYS)
+        for name, leaf in shared_lc.items():
+            src = solo_lc[name].astype(leaf.dtype)
+            if paged_attn and name in _POOL_KEYS:
+                for logical, phys in enumerate(pages):
+                    chunk = src[:, :, :, logical * pt:(logical + 1) * pt]
+                    leaf = jax.lax.dynamic_update_slice(
+                        leaf, chunk, (0, phys, 0, 0, 0))
+                nl[name] = leaf
+            else:
+                start = (0, slot) + (0,) * (leaf.ndim - 2)
+                nl[name] = jax.lax.dynamic_update_slice(leaf, src, start)
+        new_blocks.append(nl)
+    out = dict(cache)
+    out["blocks"] = tuple(new_blocks)
+    for key in ("position", "w_len", "n_compressed"):
+        out[key] = cache[key].at[slot].set(solo_cache[key][0])
+    max_pages = cache["block_table"].shape[1]
+    row = jnp.full((max_pages,), PAGE_UNMAPPED, jnp.int32)
+    if pages:
+        row = row.at[:len(pages)].set(jnp.asarray(pages, jnp.int32))
+    out["block_table"] = cache["block_table"].at[slot].set(row)
+    return out
+
+
+def page_bytes(cfg: ModelConfig, page_tokens: int) -> int:
+    """HBM bytes one physical page costs across all attention layers
+    (packed K+V values at POOL_DTYPE width + both bitmap planes)."""
+    m = cfg.mustafar
+    d, Hkv = cfg.d_head, cfg.n_kv_heads
+    pool_itemsize = jnp.dtype(POOL_DTYPE).itemsize
+    W32 = pad_to_words(d) // 32
+    kk = m.keep_k(d, m.key_sparsity)
+    kv = m.keep_k(d, m.value_sparsity)
+    n_attn = len(cfg.attention_layers())
+    return n_attn * Hkv * page_tokens * (
+        (kk + kv) * pool_itemsize + 2 * W32 * 4)
+
+
+def cache_hbm_bytes(cfg: ModelConfig, B: int, max_total_tokens: int,
+                    page_tokens: Optional[int] = None,
+                    n_pages: Optional[int] = None) -> Dict[str, int]:
     """Static accounting of cache memory (dense vs Mustafar) — Fig. 6b terms.
 
     Packed values are sized at the bf16 ``POOL_DTYPE`` width (pools never
     widen with the compute dtype); the dense window and the dense baseline
-    use the compute dtype."""
+    use the compute dtype.
+
+    With ``page_tokens`` set, three paged keys are added: ``paged_pool``
+    (``(n_pages + 1)`` physical pages incl. the scratch page, at
+    ``page_bytes`` each), ``page_meta`` (the int32 block table), and
+    ``paged`` (pool + metadata + the per-slot dense windows). Formula:
+
+        paged = (n_pages + 1) · page_bytes(cfg, page_tokens)
+              + 4 · B · max_pages                       (block table)
+              + n_attn · B · Hkv · 2 · Wbuf · d · itemsize
+    """
     itemsize = jnp.dtype(cfg.dtype).itemsize
     pool_itemsize = jnp.dtype(POOL_DTYPE).itemsize
     d, Hkv = cfg.d_head, cfg.n_kv_heads
@@ -305,8 +577,18 @@ def cache_hbm_bytes(cfg: ModelConfig, B: int, max_total_tokens: int) -> Dict[str
     W32 = pad_to_words(d) // 32
     kk = m.keep_k(d, m.key_sparsity)
     kv = m.keep_k(d, m.value_sparsity)
-    must = n_attn * B * Hkv * (
-        Tc_max * ((kk + kv) * pool_itemsize + 2 * W32 * 4)
-        + 2 * Wbuf * d * itemsize)
-    return {"dense": dense, "mustafar": must,
-            "ratio": must / max(dense, 1)}
+    win = n_attn * B * Hkv * 2 * Wbuf * d * itemsize
+    must = n_attn * B * Hkv * Tc_max * (
+        (kk + kv) * pool_itemsize + 2 * W32 * 4) + win
+    out = {"dense": dense, "mustafar": must,
+           "ratio": must / max(dense, 1)}
+    if page_tokens is not None:
+        max_pages = plan_pages(cfg, max_total_tokens, page_tokens, batch=B)
+        if n_pages is None:
+            n_pages = B * max_pages
+        pool = (n_pages + 1) * page_bytes(cfg, page_tokens)
+        meta = 4 * B * max_pages
+        out["paged_pool"] = pool
+        out["page_meta"] = meta
+        out["paged"] = pool + meta + win
+    return out

@@ -30,13 +30,14 @@ from __future__ import annotations
 import collections
 from dataclasses import dataclass, field
 from functools import partial
-from typing import Any, Deque, Dict, List, Optional, Tuple
+from typing import Any, Deque, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.attention import MustafarCacheView, decode_attention_dense
+from repro.core.attention import (MustafarCacheView, PagedMustafarCacheView,
+                                  decode_attention_dense)
 from repro.models import attention as attn
 from repro.models import mamba as mamba_mod
 from repro.models import moe as moe_mod
@@ -157,24 +158,35 @@ def prefill(params, tokens: jax.Array, cfg: ModelConfig,
 # ----------------------------------------------------------------------
 # decode
 
-def _attn_decode(bp, h, cfg: ModelConfig, lc, position, w_len, n_compressed):
+def _attn_decode(bp, h, cfg: ModelConfig, lc, position, w_len, n_compressed,
+                 block_table=None):
     """One attention layer, one token. h [B,1,D] -> (out [B,1,D], new lc).
 
     ``position``/``w_len``/``n_compressed`` are per-sequence [B] vectors —
     RoPE rotates each row at its own ragged offset and the validity masks
-    differ per row, so slots at different depths coexist in one batch."""
+    differ per row, so slots at different depths coexist in one batch.
+    ``block_table`` (paged caches) switches the compressed operands to the
+    paged view; formulation choice still lives in decode_attention_auto."""
     B = h.shape[0]
     q, k, v = attn.qkv_proj(bp["mixer"], h, cfg, position[:, None])  # [B,1,H,dh]
     m = cfg.mustafar
     if m.enabled:
         lc = cache_mod.append_window(lc, jnp.swapaxes(k, 1, 2),
                                      jnp.swapaxes(v, 1, 2), w_len)
-        view = MustafarCacheView(
-            ck_values=lc["ck_vals"], ck_bitmap=lc["ck_bm"],
-            cv_values=lc["cv_vals"], cv_bitmap=lc["cv_bm"],
-            n_compressed=n_compressed,
-            k_window=lc["k_win"], v_window=lc["v_win"],
-            n_window=w_len + 1)
+        if block_table is not None:
+            view = PagedMustafarCacheView(
+                ck_pool=lc["ck_vals"], ck_bitmap=lc["ck_bm"],
+                cv_pool=lc["cv_vals"], cv_bitmap=lc["cv_bm"],
+                block_table=block_table, n_compressed=n_compressed,
+                k_window=lc["k_win"], v_window=lc["v_win"],
+                n_window=w_len + 1)
+        else:
+            view = MustafarCacheView(
+                ck_values=lc["ck_vals"], ck_bitmap=lc["ck_bm"],
+                cv_values=lc["cv_vals"], cv_bitmap=lc["cv_bm"],
+                n_compressed=n_compressed,
+                k_window=lc["k_win"], v_window=lc["v_win"],
+                n_window=w_len + 1)
         # formulation choice (two-pass / fused Pallas kernel / chunked scan)
         # lives in models.attention.decode_attention_auto: sharding-friendly
         # two-pass for B==1 and small pools, the DMA-skipping fused kernel
@@ -214,6 +226,7 @@ def decode_step(params, token: jax.Array, cache, cfg: ModelConfig,
     position = cache["position"]                   # [B]
     w_len = cache["w_len"]                         # [B]
     n_comp = cache["n_compressed"]                 # [B]
+    block_table = cache.get("block_table")         # [B, MP] iff paged
     act = jnp.ones((B,), jnp.int32) if active is None \
         else active.astype(jnp.int32)
     blocks = cache["blocks"]
@@ -237,8 +250,12 @@ def decode_step(params, token: jax.Array, cache, cfg: ModelConfig,
             for j in range(period):
                 lc = blocks[j]
                 if cfg.layer_kind(j) == "attn":
-                    lc = jax.vmap(lambda one: cache_mod.compact_layer(
-                        cfg, one, n_comp, need))(lc)
+                    if block_table is not None:
+                        lc = jax.vmap(lambda one: cache_mod.compact_layer_paged(
+                            cfg, one, n_comp, block_table, need))(lc)
+                    else:
+                        lc = jax.vmap(lambda one: cache_mod.compact_layer(
+                            cfg, one, n_comp, need))(lc)
                 new_blocks.append(lc)
             return tuple(new_blocks)
 
@@ -261,7 +278,8 @@ def decode_step(params, token: jax.Array, cache, cfg: ModelConfig,
             kind = cfg.layer_kind(j)
             h = norm_apply(bp["norm1"], x, cfg.norm)
             if kind == "attn":
-                y, lc = _attn_decode(bp, h, cfg, lc, position, w_len, n_comp)
+                y, lc = _attn_decode(bp, h, cfg, lc, position, w_len, n_comp,
+                                     block_table)
                 x = x + y
                 if cfg.family == "audio":
                     hc = norm_apply(bp["norm_cross"], x, cfg.norm)
@@ -296,6 +314,8 @@ def decode_step(params, token: jax.Array, cache, cfg: ModelConfig,
         "w_len": w_len + act if m.enabled else jnp.zeros_like(w_len),
         "n_compressed": n_comp,
     }
+    if block_table is not None:
+        new_cache["block_table"] = block_table     # mappings change host-side
     return logits, new_cache
 
 
@@ -305,7 +325,8 @@ def decode_step(params, token: jax.Array, cache, cfg: ModelConfig,
 def prefill_into_slot(params, tokens: jax.Array, cache, slot, cfg: ModelConfig,
                       max_total_tokens: int,
                       extra: Optional[Dict[str, jax.Array]] = None,
-                      prefill_fn=None):
+                      prefill_fn=None, pages=None,
+                      page_tokens: Optional[int] = None):
     """Prefill ONE sequence (tokens [1, T], any T — requests stay ragged)
     and splice its compressed pools + right-padded window into batch slot
     ``slot`` of the shared cache via ``dynamic_update_slice``.
@@ -315,12 +336,20 @@ def prefill_into_slot(params, tokens: jax.Array, cache, slot, cfg: ModelConfig,
     ``prefill_fn`` overrides the solo prefill callable — the Scheduler
     passes its jitted one; it must accept (params, tokens) and already
     bind cfg/max_total/plan_batch consistently with this cache.
+
+    For a PAGED shared cache pass ``pages`` (physical page ids covering at
+    least the prefill's compressed fill) and ``page_tokens``: the solo
+    contiguous pools are then copied page-by-page and the slot's
+    block-table row rewritten (``cache_mod.write_slot_paged``).
     """
     if prefill_fn is None:
         n_slots = cache["position"].shape[0]
         prefill_fn = lambda p, t: prefill(p, t, cfg, max_total_tokens,
                                           extra=extra, plan_batch=n_slots)
     logits, solo = prefill_fn(params, tokens)
+    if pages is not None:
+        return logits[0], cache_mod.write_slot_paged(cfg, cache, solo, slot,
+                                                     pages, page_tokens)
     return logits[0], cache_mod.write_slot(cache, solo, slot)
 
 
@@ -348,6 +377,19 @@ class Request:
         return self.finish_step >= 0
 
 
+class Occupancy(NamedTuple):
+    """Scheduler utilization report.
+
+    ``slots`` — mean fraction of batch slots doing useful work per decode
+    step. ``pages`` — mean fraction of the physical page pool drawn per
+    decode step (None when the cache is contiguous). Under page-budget
+    admission the interesting regime is high ``slots`` at modest ``pages``:
+    heterogeneous-length batches keep every slot busy without any slot
+    reserving worst-case pool memory."""
+    slots: float
+    pages: Optional[float] = None
+
+
 class Scheduler:
     """Continuous-batching serving loop over a shared ``n_slots`` cache.
 
@@ -367,16 +409,48 @@ class Scheduler:
     bit-exact; larger pools decode batched via the chunked online softmax,
     whose fp reordering vs the solo two-pass path can differ in the last
     ulp (greedy ties may resolve differently at that scale).
+
+    PAGED MODE (``page_tokens`` set): the compressed pools become one
+    global page pool shared by all slots, and admission is gated on the
+    PAGE budget, not just a free slot — a request is admitted only when the
+    allocator can promise its worst-case page count
+    (``cache.pages_for_request``), so decode can never run out of pool
+    mid-request. Physical pages are drawn lazily: the prefill's fill at
+    admission, then one page right before the decode step whose compaction
+    first writes it (the scheduler mirrors each slot's ``w_len`` /
+    ``n_compressed`` counters on the host to predict compactions — decode
+    itself stays one jitted call). Retirement returns drawn pages and
+    unused promises to the free list and severs the slot's block-table row.
+    ``n_pages`` below ``n_slots · max_pages`` overcommits: all slots can be
+    busy as long as their combined worst-case budgets fit, which is the
+    whole payoff for heterogeneous-length traffic.
     """
 
     def __init__(self, cfg: ModelConfig, params, n_slots: int,
                  max_total_tokens: int, seed: int = 0,
-                 collect_logits: bool = False):
+                 collect_logits: bool = False,
+                 page_tokens: Optional[int] = None,
+                 n_pages: Optional[int] = None):
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
         self.max_total = max_total_tokens
-        self.cache = cache_mod.init_cache(cfg, n_slots, max_total_tokens)
+        self.page_tokens = page_tokens
+        self.paged = page_tokens is not None
+        if self.paged:
+            self.max_pages = cache_mod.plan_pages(
+                cfg, max_total_tokens, page_tokens, batch=n_slots)
+            self.n_pages = (n_slots * self.max_pages if n_pages is None
+                            else n_pages)
+            self.allocator = cache_mod.PageAllocator(self.n_pages)
+            self._slot_pages: List[List[int]] = [[] for _ in range(n_slots)]
+            self._slot_reserved = [0] * n_slots   # undrawn promises per slot
+            self._w_len = [0] * n_slots           # host mirrors of the
+            self._n_comp = [0] * n_slots          # per-slot device counters
+            self.busy_page_steps = 0
+        self.cache = cache_mod.init_cache(cfg, n_slots, max_total_tokens,
+                                          page_tokens=page_tokens,
+                                          n_pages=n_pages)
         self.slots: List[Optional[Request]] = [None] * n_slots
         self.waiting: Deque[Request] = collections.deque()
         self.next_tokens = jnp.zeros((n_slots,), jnp.int32)
@@ -393,13 +467,34 @@ class Scheduler:
                                         plan_batch=n_slots))
 
     # ------------------------------------------------------------------
+    def _check_admissible(self, req: Request) -> int:
+        """Raise unless the request could EVER be served; return its total
+        token need. Silent truncation (admit + rely on max-length
+        retirement) is not an option: under page budgets an oversized
+        request would sit at the queue head waiting for pages that can
+        never materialise, deadlocking every request behind it."""
+        n_prompt = len(req.prompt)
+        # the prefill itself emits one output token, so a request always
+        # generates >= 1 even with max_new_tokens=0 — budgeting with the
+        # raw value would under-reserve the prefill's own page fill
+        total = n_prompt + max(req.max_new_tokens, 1)
+        if total > self.max_total:
+            raise ValueError(
+                f"request needs {n_prompt} prompt + {req.max_new_tokens} new "
+                f"tokens = {total}; slot capacity is {self.max_total} "
+                f"(max_total_tokens) — rejecting rather than truncating")
+        if self.paged:
+            need = cache_mod.pages_for_request(self.cfg, total,
+                                               self.page_tokens)
+            if need > self.n_pages:
+                raise ValueError(
+                    f"request needs {need} pages worst-case; the pool holds "
+                    f"{self.n_pages} — it could never be admitted")
+        return total
+
     def submit(self, req: Request) -> Request:
         """Queue a request (admitted at the next step with a free slot)."""
-        n_prompt = len(req.prompt)
-        if n_prompt + req.max_new_tokens > self.max_total:
-            raise ValueError(
-                f"request needs {n_prompt}+{req.max_new_tokens} tokens; "
-                f"cache holds {self.max_total}")
+        self._check_admissible(req)
         if req.uid < 0:
             req.uid = self._uid
         self._uid = max(self._uid, req.uid) + 1
@@ -412,9 +507,14 @@ class Scheduler:
         return bool(self.waiting) or any(s is not None for s in self.slots)
 
     @property
-    def occupancy(self) -> float:
-        """Mean fraction of slots doing useful work per decode step."""
-        return self.busy_slot_steps / max(1, self.decode_steps * self.n_slots)
+    def occupancy(self) -> Occupancy:
+        """Slot AND page utilization (see ``Occupancy``)."""
+        slots = self.busy_slot_steps / max(1, self.decode_steps * self.n_slots)
+        pages = None
+        if self.paged:
+            pages = self.busy_page_steps / max(
+                1, self.decode_steps * self.n_pages)
+        return Occupancy(slots, pages)
 
     # ------------------------------------------------------------------
     def _sample_one(self, logits: jax.Array, req: Request) -> int:
@@ -451,19 +551,85 @@ class Scheduler:
             return True
         return False
 
+    def _release_pages(self, slot: int) -> None:
+        """Return a retired (or never-occupied) slot's drawn pages and
+        unused promises; sever its block-table row so a later tenant can
+        never alias a freed page."""
+        if not self.paged:
+            return
+        self.allocator.free(self._slot_pages[slot])
+        self.allocator.unreserve(self._slot_reserved[slot])
+        self._slot_pages[slot] = []
+        self._slot_reserved[slot] = 0
+        self._w_len[slot] = 0
+        self._n_comp[slot] = 0
+        self.cache["block_table"] = self.cache["block_table"].at[slot].set(
+            cache_mod.PAGE_UNMAPPED)
+
+    def _provision_pages(self, active_flags: List[bool]) -> None:
+        """Host mirror of ``decode_step``'s per-slot counter logic: if the
+        upcoming step will compact a slot into a not-yet-mapped logical
+        page, draw one (from the reservation made at admission) and write
+        the block-table entry BEFORE the jitted decode fires."""
+        m = self.cfg.mustafar
+        if not m.enabled:
+            return
+        tt = m.tile_tokens
+        wbuf = m.local_window + tt
+        for slot, act in enumerate(active_flags):
+            if not act:
+                continue
+            if self._w_len[slot] >= wbuf:              # compaction this step
+                lp = self._n_comp[slot] // self.page_tokens
+                if lp >= len(self._slot_pages[slot]):
+                    assert self._slot_reserved[slot] > 0, \
+                        "page budget exhausted mid-request (planner bug)"
+                    page = self.allocator.draw()
+                    self._slot_reserved[slot] -= 1
+                    self._slot_pages[slot].append(page)
+                    self.cache["block_table"] = \
+                        self.cache["block_table"].at[slot, lp].set(page)
+                self._n_comp[slot] += tt
+                self._w_len[slot] -= tt
+            self._w_len[slot] += 1
+
     def _admit(self) -> None:
         free = [i for i, s in enumerate(self.slots) if s is None]
         while free and self.waiting:
+            req = self.waiting[0]
+            # re-validate at admission: requests can reach the queue without
+            # submit() (or be mutated after it), and an inadmissible head
+            # would deadlock the queue under page-budget gating
+            total = self._check_admissible(req)
+            pages_needed = 0
+            if self.paged:
+                pages_needed = cache_mod.pages_for_request(
+                    self.cfg, total, self.page_tokens)
+                if not self.allocator.can_reserve(pages_needed):
+                    break            # wait for a retirement to free pages
+            self.waiting.popleft()
             slot = free[0]
-            req = self.waiting.popleft()
             toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
+            pages = None
+            if self.paged:
+                comp, win = cache_mod.prefill_split(self.cfg, len(req.prompt))
+                n_prefill = -(-comp // self.page_tokens)
+                assert n_prefill <= pages_needed, (n_prefill, pages_needed)
+                self.allocator.reserve(pages_needed)
+                pages = [self.allocator.draw() for _ in range(n_prefill)]
+                self._slot_pages[slot] = pages
+                self._slot_reserved[slot] = pages_needed - n_prefill
+                self._w_len[slot] = win
+                self._n_comp[slot] = comp
             # jit caches one prefill executable per distinct prompt length
             lg, self.cache = prefill_into_slot(
                 self.params, toks, self.cache, slot, self.cfg, self.max_total,
-                prefill_fn=self._prefill)
+                prefill_fn=self._prefill, pages=pages,
+                page_tokens=self.page_tokens)
             req.prefill_step = self.step_count
             tok = self._sample_one(lg, req)
             if self._record(req, tok, lg):
+                self._release_pages(slot)
                 continue                 # finished on the prefill token;
                                          # slot stays free for the next one
             free.pop(0)
@@ -476,11 +642,15 @@ class Scheduler:
         self._admit()
         active_flags = [s is not None for s in self.slots]
         if any(active_flags):
+            if self.paged:
+                self._provision_pages(active_flags)
             active = jnp.asarray(active_flags)
             logits, self.cache = self._decode(self.params, self.next_tokens,
                                               self.cache, active=active)
             self.decode_steps += 1
             self.busy_slot_steps += sum(active_flags)
+            if self.paged:
+                self.busy_page_steps += self.allocator.in_use
             batch_toks = self._sample_batch(logits)
             for slot, req in enumerate(self.slots):
                 if req is None:
@@ -489,6 +659,7 @@ class Scheduler:
                        else self._sample_one(logits[slot], req))
                 if self._record(req, tok, logits[slot]):
                     self.slots[slot] = None          # released for reuse
+                    self._release_pages(slot)
                 else:
                     self.next_tokens = self.next_tokens.at[slot].set(tok)
         self.step_count += 1

@@ -1,0 +1,225 @@
+"""Differential oracle tests: PAGED compressed pools vs CONTIGUOUS pools.
+
+Every read path must be bit-exact fp32 between the two layouts — the gather
+view, the two-pass and chunked jnp formulations, the fused Pallas kernel
+(interpret mode), and the full decode_step over a paged cache — across head
+dims, sparsities, page sizes, and ragged fills sitting exactly on/around
+page boundaries. ``repro.kernels.legacy`` is reused as the ground-truth
+decompression oracle the same way tests/test_kernels.py does: paging only
+relocates fixed-k rows, so the legacy one-hot expansion of the contiguous
+pool is the authority both layouts must reproduce.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import MustafarConfig
+from repro.core.attention import (MustafarCacheView, PagedMustafarCacheView,
+                                  decode_attention_mustafar,
+                                  decode_attention_mustafar_chunked)
+from repro.core.sparse_format import gather_pages, unpack_fixedk
+from repro.kernels import legacy, ref
+from repro.kernels.sparse_decode import (decode_attention_fused,
+                                         decode_attention_fused_paged)
+
+TILE_T = 16           # kernel token tile for these tests
+
+
+def _mk(rng, shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+def _keep_k(d, sparsity):
+    """The production k formula — the same one the serving stack packs with."""
+    return MustafarConfig().keep_k(d, sparsity)
+
+
+def _page_layout(rng, arrs, B, Hkv, pt):
+    """Scatter contiguous [B*Hkv, T, c] leaves into shuffled paged pools.
+
+    Returns (pools, block_table): pools [n_phys, Hkv, pt, c] with physical
+    page ids drawn from a random permutation (so logical adjacency never
+    accidentally survives in physical order), block_table [B, MP] int32,
+    plus one trailing scratch page left zeroed."""
+    T = arrs[0].shape[1]
+    assert T % pt == 0
+    MP = T // pt
+    n_phys = B * MP + 1
+    perm = rng.permutation(B * MP)
+    bt = np.full((B, MP), -1, np.int32)
+    pools = []
+    for arr in arrs:
+        a = np.asarray(arr).reshape(B, Hkv, T, arr.shape[-1])
+        pool = np.zeros((n_phys, Hkv, pt) + a.shape[3:], a.dtype)
+        for b in range(B):
+            for lp in range(MP):
+                bt[b, lp] = perm[b * MP + lp]
+                pool[bt[b, lp]] = a[b, :, lp * pt:(lp + 1) * pt]
+        pools.append(jnp.asarray(pool))
+    return pools, jnp.asarray(bt)
+
+
+def _ragged_nv(pt, T):
+    """The ISSUE's page-boundary fills: 0, 1, boundary, boundary ± 1."""
+    return [0, 1, min(pt, T), max(pt - 1, 0), min(pt + 1, T)]
+
+
+def _compressed(rng, B, Hkv, T, d, k):
+    kx = _mk(rng, (B * Hkv, T, d))
+    vx = _mk(rng, (B * Hkv, T, d))
+    ckv, ckb = ref.mustafar_compress_ref(kx, k)
+    cvv, cvb = ref.mustafar_compress_ref(vx, k)
+    return ckv, ckb, cvv, cvb
+
+
+@pytest.mark.parametrize("sparsity", [0.5, 0.7])
+@pytest.mark.parametrize("d", [64, 80, 128])
+@pytest.mark.parametrize("pt_mult", [1, 2])
+def test_gather_view_matches_legacy_oracle(rng, d, sparsity, pt_mult):
+    """The paged gather view must reproduce the contiguous pool bit-for-bit,
+    and its decompression must equal the LEGACY one-hot expansion of the
+    contiguous pool (the pre-overhaul ground truth) exactly in fp32."""
+    B, Hkv, T = 3, 2, 64
+    pt = pt_mult * TILE_T
+    k = _keep_k(d, sparsity)
+    ckv, ckb, cvv, cvb = _compressed(np.random.default_rng(0), B, Hkv, T, d, k)
+    pools, bt = _page_layout(np.random.default_rng(7), (ckv, ckb, cvv, cvb),
+                             B, Hkv, pt)
+    for contig, pool in zip((ckv, ckb, cvv, cvb), pools):
+        view = gather_pages(pool, bt).reshape(B * Hkv, T, -1)
+        np.testing.assert_array_equal(np.asarray(view), np.asarray(contig))
+    # legacy one-hot decompression of the contiguous pool == unpack of the
+    # gathered paged pool (fp32 bit-exact)
+    gk = gather_pages(pools[0], bt).reshape(B * Hkv, T, -1)
+    gb = gather_pages(pools[1], bt).reshape(B * Hkv, T, -1)
+    dense_paged = unpack_fixedk(gk, gb, d)
+    for r in range(B * Hkv):
+        dense_legacy = legacy.decompress_onehot(ckv[r], ckb[r], k)[:, :d]
+        np.testing.assert_array_equal(
+            np.asarray(dense_paged[r], np.float32),
+            np.asarray(dense_legacy, np.float32))
+
+
+@pytest.mark.parametrize("sparsity", [0.5, 0.7])
+@pytest.mark.parametrize("d", [64, 80, 128])
+@pytest.mark.parametrize("pt_mult", [1, 2])
+def test_paged_fused_kernel_bitexact(rng, d, sparsity, pt_mult):
+    """Paged fused kernel == contiguous fused kernel, bit-for-bit fp32, for
+    ragged fills on and around every page boundary (tile→page translation
+    in the scalar-prefetch grid changes residency, never math)."""
+    Hkv, G, T = 1, 2, 64
+    pt = pt_mult * TILE_T
+    k = _keep_k(d, sparsity)
+    nv_list = _ragged_nv(pt, T) + [T]
+    B = len(nv_list)
+    ckv, ckb, cvv, cvb = _compressed(np.random.default_rng(1), B, Hkv, T, d, k)
+    q = _mk(np.random.default_rng(2), (B * Hkv, G, d))
+    nv = jnp.asarray(nv_list, jnp.int32)
+    o_contig = decode_attention_fused(
+        q, ckv, ckb, cvv, cvb, nv, d=d, scale=d ** -0.5,
+        interpret=True, tile_t=TILE_T)
+    pools, bt = _page_layout(np.random.default_rng(8), (ckv, ckb, cvv, cvb),
+                             B, Hkv, pt)
+    o_paged = decode_attention_fused_paged(
+        q, *pools, bt, nv, d=d, scale=d ** -0.5,
+        interpret=True, tile_t=TILE_T)
+    np.testing.assert_array_equal(np.asarray(o_contig), np.asarray(o_paged))
+    assert np.all(np.asarray(o_paged)[0] == 0.0)   # nv=0 row -> zero vector
+    # and both agree with the jnp oracle
+    o_ref = ref.decode_attention_fused_ref(q, ckv, ckb, cvv, cvb, nv, d,
+                                           scale=d ** -0.5)
+    np.testing.assert_allclose(np.asarray(o_paged), np.asarray(o_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("sparsity", [0.5, 0.7])
+@pytest.mark.parametrize("d", [64, 80, 128])
+@pytest.mark.parametrize("pt_mult", [1, 2])
+def test_paged_view_two_pass_and_chunked_bitexact(rng, d, sparsity, pt_mult):
+    """The jnp decode formulations (two-pass joint softmax and chunked
+    online softmax) read the paged cache through the gather view — outputs
+    must be bit-identical fp32 to the contiguous view, page-boundary fills
+    included. This is the CPU serving path's equivalence guarantee."""
+    Hkv, Hq, T, W = 2, 4, 64, 8
+    pt = pt_mult * TILE_T
+    k = _keep_k(d, sparsity)
+    nv_list = _ragged_nv(pt, T)
+    B = len(nv_list)
+    r = np.random.default_rng(3)
+    ckv, ckb, cvv, cvb = _compressed(r, B, Hkv, T, d, k)
+
+    def shp(x):
+        return x.reshape(B, Hkv, T, x.shape[-1])
+
+    kw = _mk(r, (B, Hkv, W, d))
+    vw = _mk(r, (B, Hkv, W, d))
+    n_win = jnp.asarray(r.integers(1, W + 1, size=B), jnp.int32)
+    n_comp = jnp.asarray(nv_list, jnp.int32)
+    contig = MustafarCacheView(shp(ckv), shp(ckb), shp(cvv), shp(cvb),
+                               n_comp, kw, vw, n_win)
+    pools, bt = _page_layout(np.random.default_rng(9), (ckv, ckb, cvv, cvb),
+                             B, Hkv, pt)
+    paged = PagedMustafarCacheView(*pools, bt, n_comp, kw, vw, n_win)
+    q = _mk(r, (B, Hq, d))
+
+    via_gather = paged.to_contiguous()
+    o_two = decode_attention_mustafar(q, contig)
+    o_two_p = decode_attention_mustafar(q, via_gather)
+    np.testing.assert_array_equal(np.asarray(o_two), np.asarray(o_two_p))
+    o_chnk = decode_attention_mustafar_chunked(q, contig, chunk=TILE_T)
+    o_chnk_p = decode_attention_mustafar_chunked(q, via_gather, chunk=TILE_T)
+    np.testing.assert_array_equal(np.asarray(o_chnk), np.asarray(o_chnk_p))
+
+
+# ----------------------------------------------------------------------
+# full-stack: decode_step over a paged cache vs a contiguous cache
+
+def test_decode_step_paged_cache_bitexact():
+    """The whole serving step — append, per-slot compaction across page
+    boundaries, paged attention view — produces logits bit-identical to the
+    contiguous cache, for both page sizes, over enough steps that every
+    slot retires tile groups into first and subsequent pages."""
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.serving import cache as cache_mod
+    from repro.serving.engine import decode_step, prefill_into_slot
+
+    cfg = get_config("starcoder2-3b").reduced().with_sparsity(0.5, 0.5)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    max_total = 96
+    tt = cfg.mustafar.tile_tokens
+    rng = np.random.default_rng(4)
+    prompts = [jnp.asarray(rng.integers(0, cfg.vocab_size, size=n), jnp.int32)
+               for n in (23, 9)]          # slot 0 compacts first
+
+    for pt in (tt, 2 * tt):
+        max_pages = cache_mod.plan_pages(cfg, max_total, pt, batch=2)
+        contig = cache_mod.init_cache(cfg, 2, max_total)
+        paged = cache_mod.init_cache(cfg, 2, max_total, page_tokens=pt)
+        # pre-map each slot's full logical range (identity-per-slot pages;
+        # the scheduler normally draws these lazily from the allocator)
+        slot_pages = [list(range(max_pages)),
+                      list(range(max_pages, 2 * max_pages))]
+        for slot, prompt in enumerate(prompts):
+            _, contig = prefill_into_slot(params, prompt[None], contig, slot,
+                                          cfg, max_total)
+            _, paged = prefill_into_slot(params, prompt[None], paged, slot,
+                                         cfg, max_total,
+                                         pages=slot_pages[slot],
+                                         page_tokens=pt)
+        np.testing.assert_array_equal(np.asarray(paged["w_len"]),
+                                      np.asarray(contig["w_len"]))
+        step = jax.jit(lambda p, t, c: decode_step(p, t, c, cfg))
+        tok = jnp.zeros((2,), jnp.int32)
+        for i in range(2 * tt + 4):       # spans >= 2 compactions on slot 0
+            lg_c, contig = step(params, tok, contig)
+            lg_p, paged = step(params, tok, paged)
+            np.testing.assert_array_equal(
+                np.asarray(lg_c, np.float32), np.asarray(lg_p, np.float32),
+                err_msg=f"pt={pt} step={i}")
+            tok = jnp.argmax(lg_c, axis=-1).astype(jnp.int32)
+        for key in ("position", "w_len", "n_compressed"):
+            np.testing.assert_array_equal(np.asarray(contig[key]),
+                                          np.asarray(paged[key]))
+        assert int(paged["n_compressed"].max()) > pt   # crossed a boundary

@@ -162,5 +162,38 @@ def test_occupancy_accounting():
         sched.submit(Request(prompt=_prompt(9, seed=20 + i),
                              max_new_tokens=8))
     sched.run()
-    assert 0.0 < sched.occupancy <= 1.0
-    assert sched.occupancy > 0.8                   # queue kept slots busy
+    occ = sched.occupancy
+    assert 0.0 < occ.slots <= 1.0
+    assert occ.slots > 0.8                         # queue kept slots busy
+    assert occ.pages is None                       # contiguous cache
+
+
+def test_admit_rejects_oversized_request():
+    """A request whose prompt + max_new_tokens exceeds slot capacity is
+    REJECTED with a clear error — both at submit() and, for requests that
+    reach the queue without it, at admission time inside step(). Silent
+    truncation via max-length retirement would deadlock the queue under
+    page-budget gating (the head request would wait forever for pages that
+    can never materialise)."""
+    import pytest
+
+    sched = Scheduler(CFG, PARAMS, n_slots=1, max_total_tokens=MAX_TOTAL)
+    big = Request(prompt=_prompt(40, seed=30), max_new_tokens=MAX_TOTAL)
+    with pytest.raises(ValueError, match="rejecting rather than truncating"):
+        sched.submit(big)
+    # sneak past submit(): _admit must still reject, not truncate
+    sched.waiting.append(big)
+    with pytest.raises(ValueError, match="rejecting rather than truncating"):
+        sched.step()
+
+    # paged: a request needing more pages than the whole pool can never be
+    # admitted -> rejected upfront instead of deadlocking the queue
+    sched_p = Scheduler(CFG, PARAMS, n_slots=2, max_total_tokens=MAX_TOTAL,
+                        page_tokens=CFG.mustafar.tile_tokens, n_pages=1)
+    with pytest.raises(ValueError, match="could never be admitted"):
+        sched_p.submit(Request(prompt=_prompt(40, seed=31),
+                               max_new_tokens=40))
+    # a request that DOES fit still round-trips
+    ok = sched_p.submit(Request(prompt=_prompt(9, seed=32), max_new_tokens=4))
+    sched_p.run()
+    assert ok.done and len(ok.output_tokens) == 4
