@@ -190,6 +190,120 @@ def paging_main(rng=None) -> dict:
             "tokens_per_s_contiguous": toks_c / dt_c}
 
 
+def prefix_main(rng=None) -> dict:
+    """BENCH_prefix: shared-prefix CoW paging + chunked prefill vs the
+    no-sharing baseline (the PR-5 serving-tier payoff).
+
+    One seeded Poisson trace of requests that all carry the same 56-token
+    system prefix plus a short private suffix (the chat-template pattern
+    prefix sharing exists for) is served three ways through the live
+    Scheduler on identical paged pools:
+
+      * ``baseline``  — paged, no sharing: every request compresses and
+        stores its own copy of the prefix pages;
+      * ``shared``    — ``share_prefix=True``: admissions alias the retired
+        prefix pages read-only (refcounted, copy-on-write at the boundary);
+      * ``shared+chunked`` — sharing plus ``prefill_chunk``-token admission
+        chunks, bounding the per-step decode stall.
+
+    Outputs must be IDENTICAL across all three (sharing is storage dedup,
+    chunking is an exact-math re-schedule). Reported per mode: peak drawn
+    pool bytes, mean/max admission-to-first-token latency in engine steps,
+    and the worst per-step prefill-token stall. The acceptance bar is the
+    peak-pool-bytes ratio baseline/shared >= 1.5x."""
+    import time
+
+    import jax
+
+    from repro.models import init_params
+    from repro.serving.cache import page_bytes, plan_pages
+    from repro.serving.engine import Request, Scheduler
+
+    arch, n_slots, n_requests, seed = "starcoder2-3b", 4, 12, 0
+    prefix_len, chunk = 56, 8
+    cfg = get_config(arch).reduced().with_sparsity(0.7, 0.7)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    page_tokens = cfg.mustafar.tile_tokens
+    max_total = 128
+    max_pages = plan_pages(cfg, max_total, page_tokens, batch=n_slots)
+
+    def trace():
+        r = np.random.default_rng(seed)
+        prefix = list(r.integers(0, cfg.vocab_size, size=prefix_len))
+        arrivals = np.cumsum(r.exponential(1.2, size=n_requests)).astype(int)
+        lens = r.choice((4, 6, 8), size=n_requests)
+        gens = r.choice((8, 16, 24), size=n_requests, p=(.4, .4, .2))
+        reqs = [Request(prompt=np.asarray(
+                            prefix + list(r.integers(0, cfg.vocab_size,
+                                                     size=int(L)))),
+                        max_new_tokens=int(g))
+                for L, g in zip(lens, gens)]
+        return arrivals, reqs
+
+    def serve(share: bool, prefill_chunk=None):
+        sched = Scheduler(cfg, params, n_slots=n_slots,
+                          max_total_tokens=max_total,
+                          page_tokens=page_tokens, share_prefix=share,
+                          prefill_chunk=prefill_chunk)
+        arrivals, reqs = trace()
+        t0 = time.perf_counter()
+        i = 0
+        while i < n_requests or sched.has_work:
+            while i < n_requests and arrivals[i] <= sched.step_count:
+                sched.submit(reqs[i])
+                i += 1
+            sched.step()
+        dt = time.perf_counter() - t0
+        toks = sum(r.num_generated for r in sched.finished)
+        ttft = [r.first_token_step - r.arrival_step for r in sched.finished]
+        return sched, reqs, dt, toks, ttft
+
+    pb = page_bytes(cfg, page_tokens)
+    # STORAGE metadata: the int32 block table is held once, shared by all
+    # layers (same convention as paging_main and cache_hbm_bytes). The
+    # n_attn-scaled roofline.paged_metadata_bytes models per-step READ
+    # traffic, not pool residency — don't swap one in for the other.
+    meta = 4 * n_slots * max_pages
+    results = {}
+    outputs = {}
+    for tag, share, pchunk in (("baseline", False, None),
+                               ("shared", True, None),
+                               ("shared+chunked", True, chunk)):
+        sched, reqs, dt, toks, ttft = serve(share, pchunk)
+        peak_bytes = sched.allocator.peak_in_use * pb + meta
+        occ = sched.occupancy
+        derived = (f"tokens_per_s={toks/dt:.1f} "
+                   f"peak_pages={sched.allocator.peak_in_use} "
+                   f"ttft_steps_mean={np.mean(ttft):.1f}")
+        extra = {}
+        if share:
+            extra["shared_admissions"] = sched.shared_admissions
+            extra["prefix_hits"] = sched.prefix.hits
+            extra["pages_shared_occupancy"] = occ.pages_shared
+        if pchunk is not None:
+            derived += (f" stall_max={sched.max_prefill_step_tokens}"
+                        f"<=chunk={pchunk}")
+            extra["max_prefill_step_tokens"] = sched.max_prefill_step_tokens
+            extra["prefill_tokens_per_step"] = occ.prefill_tokens_per_step
+            assert sched.max_prefill_step_tokens <= pchunk
+        emit(f"prefix/{tag}", dt * 1e6 / max(1, toks), derived,
+             peak_pool_bytes=peak_bytes,
+             peak_pages=sched.allocator.peak_in_use,
+             ttft_steps_mean=float(np.mean(ttft)),
+             ttft_steps_max=int(np.max(ttft)),
+             tokens_per_s=toks / dt, page_tokens=page_tokens, **extra)
+        results[tag] = peak_bytes
+        outputs[tag] = [r.output_tokens for r in reqs]
+
+    assert outputs["baseline"] == outputs["shared"] \
+        == outputs["shared+chunked"], "modes diverged"
+    saving = results["baseline"] / results["shared"]
+    emit("prefix/peak_bytes_reduction", 0.0, f"{saving:.2f}x (bar: 1.5x)",
+         reduction=saving)
+    assert saving >= 1.5, f"sharing cut peak pool bytes only {saving:.2f}x"
+    return {"reduction": saving}
+
+
 if __name__ == "__main__":
     import argparse
 

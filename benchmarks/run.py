@@ -23,6 +23,7 @@ SUITES = {
     "compression": bench_compression.main,  # Fig 6b
     "throughput": bench_throughput.main,  # Fig 7
     "paging": bench_throughput.paging_main,  # paged vs contiguous pools
+    "prefix": bench_throughput.prefix_main,  # shared-prefix CoW + chunked
 }
 _ALIASES = {"kernel": "kernels"}          # pre-PR-2 suite name
 

@@ -39,6 +39,20 @@ def main():
                     help="physical page-pool size (0 = full contiguous "
                          "capacity; smaller overcommits under the page-"
                          "budget admission gate)")
+    ap.add_argument("--share-prefix", action="store_true",
+                    help="share retired compressed prefix pages across "
+                         "requests (refcounted copy-on-write block tables; "
+                         "requires --page-tokens). The trace then gives "
+                         "every prompt a common system prefix so sharing "
+                         "actually fires.")
+    ap.add_argument("--prefix-len", type=int, default=48,
+                    help="common-prefix tokens prepended to every prompt "
+                         "when --share-prefix is on")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="split admission prefills into N-token chunks "
+                         "interleaved with decode steps (0 = one-shot solo "
+                         "prefill; bounds the per-step decode stall to N "
+                         "prompt tokens)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -48,24 +62,34 @@ def main():
     else:
         cfg = cfg.with_sparsity(args.sparsity, args.sparsity)
     params = init_params(jax.random.PRNGKey(0), cfg)
-    max_total = 64 + args.gen + 64
+    max_total = 64 + args.gen + 64 \
+        + (args.prefix_len if args.share_prefix else 0)
     if args.page_tokens and args.dense:
         ap.error("--page-tokens requires the Mustafar cache (drop --dense)")
     if args.n_pages and not args.page_tokens:
         ap.error("--n-pages only bounds PAGED pools; pass --page-tokens too")
+    if args.share_prefix and not args.page_tokens:
+        ap.error("--share-prefix aliases PAGED pools; pass --page-tokens too")
     sched = Scheduler(cfg, params, n_slots=args.slots,
                       max_total_tokens=max_total,
                       page_tokens=args.page_tokens or None,
-                      n_pages=args.n_pages or None)
+                      n_pages=args.n_pages or None,
+                      share_prefix=args.share_prefix,
+                      prefill_chunk=args.prefill_chunk or None)
 
     # Poisson arrival trace with ragged prompts (a few length buckets so the
-    # per-length prefill executables amortize across requests)
+    # per-length prefill executables amortize across requests); with
+    # --share-prefix every prompt opens with the same system prefix
     rng = np.random.default_rng(args.seed)
     arrivals = np.cumsum(rng.exponential(1.0 / args.rate,
                                          size=args.requests)).astype(int)
     buckets = (16, 24, 40, 64)
-    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size,
-                                        size=int(rng.choice(buckets))),
+    prefix = list(rng.integers(0, cfg.vocab_size, size=args.prefix_len)) \
+        if args.share_prefix else []
+    reqs = [Request(prompt=np.asarray(
+                        prefix + list(rng.integers(
+                            0, cfg.vocab_size,
+                            size=int(rng.choice(buckets))))),
                     max_new_tokens=args.gen,
                     temperature=0.7)
             for _ in range(args.requests)]
@@ -92,6 +116,18 @@ def main():
         print(f"  page occupancy:    {occ.pages*100:.1f}% of "
               f"{sched.n_pages} pages "
               f"(peak {sched.allocator.peak_in_use} drawn)")
+    if args.share_prefix:
+        print(f"  prefix sharing:    {sched.shared_admissions}/"
+              f"{args.requests} admissions aliased pages "
+              f"({sched.prefix.hits} page hits, {sched.cow_count} "
+              f"copy-on-writes; occupancy owned={occ.pages_owned*100:.1f}% "
+              f"shared={occ.pages_shared*100:.1f}%)")
+    if args.prefill_chunk:
+        ttft = [r.first_token_step - r.arrival_step for r in sched.finished]
+        print(f"  chunked prefill:   <= {sched.max_prefill_step_tokens} "
+              f"prefill tokens/step (budget {args.prefill_chunk}); "
+              f"mean {occ.prefill_tokens_per_step:.1f} tok/step; "
+              f"ttft p50={int(np.median(ttft))} steps")
     print(f"  latency (steps):   p50={int(np.median(lat))} "
           f"max={int(np.max(lat))}")
     acct = cache_hbm_bytes(cfg, args.slots, max_total,

@@ -111,11 +111,29 @@ def gather_pages(pool: jax.Array, block_table: jax.Array) -> jax.Array:
     pool values are finite the masked contributions are exactly zero — the
     gathered view is therefore bit-identical to a contiguous pool wherever
     the token index is valid (the paged differential tests assert this).
+
+    ALIASED rows are fine: under prefix sharing several rows may map the
+    same physical page (refcounted, copy-on-write before any write — see
+    ``serving.cache``). The gather just reads the page once per mapping;
+    each row's contiguous view is bit-identical to the view it would get
+    from a private copy of that page, which is the whole point of sharing.
     """
     idx = jnp.clip(block_table, 0, pool.shape[0] - 1)   # [B, MP]
     g = pool[idx]                                       # [B, MP, Hkv, pt, c]
     B, MP, Hkv, pt, c = g.shape
     return jnp.moveaxis(g, 2, 1).reshape(B, Hkv, MP * pt, c)
+
+
+def mapped_page_counts(block_table):
+    """(unique_mapped, total_mapped) over a block table — the gap between
+    them is exactly the pages deduplicated by prefix sharing. This is the
+    standalone checkable statement of the no-double-counting rule
+    (asserted in tests/test_prefix_sharing.py); production accounting
+    counts unique physical pages at the allocator instead
+    (``serving.cache.PageAllocator.in_use_split``)."""
+    bt = np.asarray(block_table)
+    mapped = bt[bt >= 0]
+    return len(np.unique(mapped)), int(mapped.size)
 
 
 # ----------------------------------------------------------------------

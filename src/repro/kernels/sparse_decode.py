@@ -345,7 +345,18 @@ def decode_attention_fused_paged(q: jax.Array,
     clamp into range and their compute is skipped by the same per-row
     ``n_valid`` guard, so they cost one harmless resident-block fetch at
     most. Numerics are bit-identical to ``decode_attention_fused`` on the
-    equivalent contiguous pool (asserted in tests/test_paged_equivalence)."""
+    equivalent contiguous pool (asserted in tests/test_paged_equivalence).
+
+    ALIASED ROWS ARE LEGAL: under prefix sharing several block-table rows
+    may map the SAME physical page (refcounted copy-on-write in
+    ``serving.cache``/``serving.engine``). This kernel only ever READS
+    through the table — the index maps translate addresses, nothing writes
+    the pools — so aliasing cannot race; two rows mapping one page simply
+    fetch identical tiles (and consecutive grid steps on the same physical
+    block skip the DMA as usual). The write-side invariant (no compaction
+    may target a refcount>1 page) is the scheduler's to uphold —
+    ``validate_block_table`` below is the checkable statement of both
+    halves, asserted by the fuzz harness."""
     BH, G, _ = q.shape
     n_phys, Hkv, page_tokens, kk = ck_pool.shape
     kv = cv_pool.shape[-1]
@@ -398,3 +409,63 @@ def decode_attention_fused_paged(q: jax.Array,
     if return_state:
         return out, acc, m, l
     return out
+
+
+# ----------------------------------------------------------------------
+# paged-operand invariant checks (host-side: Scheduler._provision_pages
+# asserts the full read+write contract before every decode under
+# debug_invariants; the scheduler fuzz harness re-checks the read side
+# after every step)
+
+def validate_block_table(block_table, n_phys: int, *,
+                         page_tokens: int = 0,
+                         n_compressed=None,
+                         refcounts=None,
+                         will_compact=None) -> None:
+    """Assert the invariants the paged decode/compaction kernels stand on.
+
+    READ side (always checked): every mapped entry must be a real physical
+    page (``0 <= p < n_phys``, the scratch page excluded — decode must never
+    read it), and with ``n_compressed``/``page_tokens`` given, every row
+    must map all logical pages its valid depth covers. Aliasing between
+    rows is LEGAL here — the kernels only read (see
+    ``decode_attention_fused_paged``).
+
+    WRITE side (checked when ``refcounts`` and ``will_compact`` are given —
+    the scheduler's host mirrors): a row about to compact targets logical
+    page ``n_compressed[b] // page_tokens``; that page must be mapped and
+    its refcount must be exactly 1 — a shared (refcount > 1) page is
+    immutable and must have been copied-on-write BEFORE the decode step
+    fires. This is the machine-checkable form of "no write ever lands in a
+    shared page".
+    """
+    import numpy as np
+
+    bt = np.asarray(block_table)
+    mapped = bt >= 0
+    assert (bt[mapped] < n_phys - 1).all(), \
+        f"block table maps past the last real page (n_phys={n_phys}): " \
+        f"{bt[mapped][bt[mapped] >= n_phys - 1]}"
+    if n_compressed is not None and page_tokens:
+        nc = np.asarray(n_compressed)
+        for b in range(bt.shape[0]):
+            need = -(-int(nc[b]) // page_tokens)
+            row = bt[b, :need]
+            assert (row >= 0).all(), \
+                f"row {b}: depth {int(nc[b])} needs {need} mapped pages, " \
+                f"got {row}"
+    if refcounts is not None and will_compact is not None:
+        assert n_compressed is not None and page_tokens, \
+            "write-side check needs n_compressed and page_tokens " \
+            "(the compaction target is n_compressed[b] // page_tokens)"
+        nc = np.asarray(n_compressed)
+        rc = list(refcounts)
+        for b, compacting in enumerate(will_compact):
+            if not compacting:
+                continue
+            lp = int(nc[b]) // page_tokens
+            tgt = int(bt[b, lp])
+            assert tgt >= 0, f"row {b}: compaction target page unmapped"
+            assert rc[tgt] == 1, \
+                f"row {b}: compaction would write physical page {tgt} " \
+                f"with refcount {rc[tgt]} (copy-on-write missed)"

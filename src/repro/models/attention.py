@@ -164,6 +164,36 @@ def causal_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                       preferred_element_type=jnp.float32).astype(q.dtype)
 
 
+def prefix_causal_attention(q: jax.Array, k_buf: jax.Array, v_buf: jax.Array,
+                            q_positions: jax.Array,
+                            cfg: ModelConfig) -> jax.Array:
+    """Causal attention for one CHUNK of queries over a prefix K/V buffer.
+
+    q [B, C, Hq, dh] are the chunk's queries at absolute positions
+    ``q_positions`` [B, C]; k_buf/v_buf [B, T_buf, Hkv, dh] hold the K/V of
+    every position processed so far (this chunk included), zero-padded past
+    the current fill. The mask admits key index <= query position, which is
+    exactly the tril mask ``causal_attention`` applies over a full
+    sequence — and since masked scores hit the same NEG_INF and fp32
+    softmax, exp underflows to exactly 0.0 for them, the chunked result is
+    BIT-IDENTICAL to the full-prefill attention rows (asserted in
+    tests/test_prefix_sharing.py). This is what lets the scheduler split an
+    admission prefill into fixed-size chunks interleaved with decode steps
+    without perturbing a single logit."""
+    T_buf = k_buf.shape[1]
+    k = _expand_kv(k_buf, cfg.n_heads)
+    v = _expand_kv(v_buf, cfg.n_heads)
+    scale = cfg.d_head ** -0.5
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    mask = jnp.arange(T_buf)[None, None, None, :] \
+        <= q_positions[:, None, :, None]
+    s = jnp.where(mask, s, NEG_INF)
+    p_attn = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", p_attn, v,
+                      preferred_element_type=jnp.float32).astype(q.dtype)
+
+
 def bidirectional_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                             cfg: ModelConfig) -> jax.Array:
     """Encoder / cross attention (no mask). Shapes as above, Tq may != Tk."""

@@ -167,6 +167,44 @@ def paged_metadata_bytes(cfg: ModelConfig, B: int, max_total_tokens: int,
     return n_attn * 4 * B * max_pages
 
 
+def prefix_shared_pool_bytes_saved(cfg: ModelConfig, page_tokens: int,
+                                   prefix_tokens: int, n_sharers: int) -> int:
+    """Modeled pool-byte saving from prefix sharing (BENCH_prefix term).
+
+    ``n_sharers`` live requests whose prompts agree on ``prefix_tokens``
+    leading tokens alias the prefix's fully-retired compressed pages
+    instead of each owning a copy: the pool holds those pages ONCE, so the
+    saving is ``(n_sharers - 1) · floor(prefix_tokens / page_tokens) ·
+    page_bytes``. (The partially-filled boundary page is shared too until
+    a sharer's first compaction copies-on-write, so this is the
+    steady-state lower bound; block-table metadata is unchanged — aliasing
+    costs no extra entries.)"""
+    from repro.serving.cache import page_bytes
+    full_pages = prefix_tokens // page_tokens
+    return max(0, n_sharers - 1) * full_pages * page_bytes(cfg, page_tokens)
+
+
+def chunked_prefill_stall_model(prompt_tokens: int, prefill_chunk: int,
+                                t_token_s: float) -> Dict[str, float]:
+    """Decode-stall model for chunked admissions: a solo prefill stalls the
+    running batch for ``prompt_tokens`` token-equivalents at once; chunked
+    admission bounds the per-step stall to ``prefill_chunk`` tokens and
+    spreads the prefill over ``ceil(T / chunk)`` engine steps. Returns both
+    stalls in seconds plus the added first-token latency in steps.
+
+    The per-step stall is the FULL chunk even for prompts shorter than it:
+    the engine pads every chunk to ``prefill_chunk`` tokens and charges the
+    padded size (``Scheduler._run_prefill_chunks``), so that is the
+    wall-clock a decode step actually loses."""
+    import math
+    steps = math.ceil(prompt_tokens / max(1, prefill_chunk))
+    return {
+        "solo_stall_s": prompt_tokens * t_token_s,
+        "chunked_stall_per_step_s": prefill_chunk * t_token_s,
+        "first_token_extra_steps": float(steps - 1),
+    }
+
+
 def scan_corrections(cfg: ModelConfig, shape: ShapeConfig,
                      mode: str, train_factor: float = 3.0,
                      page_tokens: Optional[int] = None) -> Dict[str, float]:

@@ -35,7 +35,9 @@ scalar-prefetch grid (TPU).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+import collections
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -124,7 +126,7 @@ def pages_for_request(cfg: ModelConfig, total_tokens: int,
 
 
 class PageAllocator:
-    """Free-list allocator over the global compressed-page pool.
+    """Refcounted free-list allocator over the global compressed-page pool.
 
     Two-phase discipline so admission can never deadlock mid-decode:
     ``reserve(n)`` promises n pages to a request at admission (fails upfront
@@ -133,7 +135,18 @@ class PageAllocator:
     step whose compaction writes it — and ``free``/``unreserve`` return a
     retired request's drawn pages and unused promises. ``peak_in_use``
     tracks the high-water mark of physically drawn pages (the byte number
-    BENCH_paging.json compares against contiguous allocation).
+    BENCH_paging.json / BENCH_prefix.json compare against contiguous
+    allocation; a shared page counts ONCE however many slots map it).
+
+    SHARING: every drawn page carries a refcount (1 at ``draw()``).
+    ``share(page)`` adds a holder — a second slot mapping a common-prefix
+    page read-only, or the scheduler's prefix index caching it past its
+    donor's lifetime — and ``release(page)`` drops one holder, returning the
+    page to the free list only when the last holder lets go. The write rule
+    the whole design stands on: a page with ``refcount > 1`` is IMMUTABLE —
+    any writer (tile-group compaction into a shared boundary page) must
+    copy-on-write first (``Scheduler._provision_pages``), and the fuzz
+    harness asserts no write ever targets a shared page.
     """
 
     def __init__(self, n_pages: int):
@@ -141,12 +154,22 @@ class PageAllocator:
             raise ValueError(f"n_pages={n_pages} must be positive")
         self.n_pages = n_pages
         self._free = list(range(n_pages - 1, -1, -1))   # LIFO: low ids first
+        self._ref = [0] * n_pages                        # holders per page
         self.n_reserved = 0
         self.peak_in_use = 0
 
     @property
     def in_use(self) -> int:
         return self.n_pages - len(self._free)
+
+    @property
+    def in_use_split(self) -> Tuple[int, int]:
+        """(owned, shared) physical pages: ``owned`` have exactly one holder,
+        ``shared`` more than one. Each physical page counts once, so
+        ``owned + shared == in_use`` — utilization is never double-counted
+        however many block-table rows alias a page."""
+        owned = sum(1 for r in self._ref if r == 1)
+        return owned, self.in_use - owned
 
     @property
     def available(self) -> int:
@@ -169,17 +192,272 @@ class PageAllocator:
         self.n_reserved -= n
 
     def draw(self) -> int:
-        """Convert one reserved promise into a physical page id."""
+        """Convert one reserved promise into a physical page id (refcount 1)."""
         assert self.n_reserved > 0, "draw() without a reservation"
         self.n_reserved -= 1
         page = self._free.pop()
+        self._ref[page] = 1
         self.peak_in_use = max(self.peak_in_use, self.in_use)
         return page
 
+    def refcount(self, page: int) -> int:
+        assert 0 <= page < self.n_pages, page
+        return self._ref[page]
+
+    def share(self, page: int) -> int:
+        """Add a holder to a live page (maps it read-only somewhere else)."""
+        assert 0 <= page < self.n_pages and self._ref[page] >= 1, \
+            f"share() of page {page} with refcount {self._ref[page]}"
+        self._ref[page] += 1
+        return page
+
+    def release(self, page: int) -> None:
+        """Drop one holder; the page frees when the last holder lets go."""
+        assert 0 <= page < self.n_pages and self._ref[page] >= 1, \
+            f"release() of page {page} with refcount {self._ref[page]}"
+        self._ref[page] -= 1
+        if self._ref[page] == 0:
+            self._free.append(page)
+
     def free(self, pages) -> None:
+        """Drop one holder from each page (uniquely-owned pages free now)."""
         for p in pages:
-            assert 0 <= p < self.n_pages and p not in self._free, p
-            self._free.append(p)
+            self.release(p)
+
+
+class PrefixIndex:
+    """Token-trie (radix) index from PROMPT prefixes to retired compressed
+    pages, for cross-request sharing.
+
+    Per-token magnitude pruning (paper §3) is deterministic and position-
+    independent within the compressed region: two prompts that agree on
+    their first ``(lp+1)·page_tokens`` tokens produce BIT-IDENTICAL
+    compressed content for logical page ``lp`` once that page is fully
+    retired. The index therefore keys physical pages on the exact token
+    prefix they compress:
+
+      * FULL pages — one trie node per retired page, its parent edge keyed
+        on that page's own ``page_tokens``-token slice (a node at depth
+        ``lp+1`` therefore identifies the whole prefix
+        ``prompt[: (lp+1)·page_tokens]``; match walks edges outward from
+        the root and stops at the first miss, so a hit is always a
+        contiguous chain).
+      * BOUNDARY pages — a partially-filled last page (``comp % page_tokens
+        != 0``) is shareable too: rows past a sharer's own ``n_compressed``
+        are masked by every consumer, so a sharer may alias a donor page
+        whose fill is >= its own as long as the covered tokens agree. These
+        hang off their full-page base node, keyed on the partial tokens.
+
+    The index holds ONE allocator reference per entry (``register`` shares,
+    eviction releases), so cached pages survive their donor's retirement.
+    Matching hands refs to the caller per matched page; eviction is LRU and
+    drops a chain's descendants with it (an orphaned descendant could never
+    match again — match walks from the root).
+
+    STORAGE is a real trie over ``page_tokens``-token chunks (integer node
+    ids, each edge keyed by ONE page's token slice), so a cached L-token
+    prefix costs O(L) key storage and match/register do O(L) hashing total
+    — not the O(L^2) a flat whole-prefix-keyed map would pay.
+    """
+
+    _ROOT = 0                              # virtual root node id
+
+    def __init__(self, page_tokens: int):
+        self.page_tokens = page_tokens
+        # node id -> {"page": phys, "parent": id, "chunk": edge tokens}
+        self._nodes: Dict[int, Dict[str, Any]] = {}
+        # node id -> {edge chunk -> child node id}
+        self._children: Dict[int, Dict[Tuple[int, ...], int]] = {
+            self._ROOT: {}}
+        self._next_id = self._ROOT + 1
+        # full-page nodes in LRU order (oldest first)
+        self._lru: "collections.OrderedDict[int, None]" = \
+            collections.OrderedDict()
+        # base node id -> (partial token tuple, phys page), LRU order
+        self._partials: "collections.OrderedDict[int, Tuple[Tuple[int, ...], int]]" = \
+            collections.OrderedDict()
+        # sharing stats, bumped by the SCHEDULER at admission commit (not
+        # in match() — a blocked head-of-queue admission re-matches every
+        # engine step and would inflate them arbitrarily)
+        self.hits = 0      # pages mapped from the index, admitted matches
+        self.misses = 0    # committed admissions that matched nothing
+
+    @property
+    def held_pages(self) -> List[int]:
+        """Pages the index itself holds a reference on (one per entry)."""
+        return [n["page"] for n in self._nodes.values()] \
+            + [p for _, p in self._partials.values()]
+
+    def match(self, prompt, comp: int, touch_lru: bool = False):
+        """Longest shared prefix for ``prompt`` with compressed fill ``comp``.
+
+        Returns ``(full_pages, boundary_page, shared_tokens)``:
+        ``full_pages`` are physical ids for logical pages ``0..n-1``,
+        ``boundary_page`` (or None) backs the partially-filled last page,
+        and ``shared_tokens`` is the compressed-token count the caller can
+        skip re-compressing (``n·page_tokens``, or ``comp`` when the
+        boundary matched too). The caller must ``share()`` each returned
+        page before relying on it.
+
+        LRU recency moves only under ``touch_lru`` — the scheduler sets it
+        at ADMISSION COMMIT, like the hit/miss stats: a blocked
+        head-of-queue admission probes every engine step, and letting
+        probes refresh recency would pin the never-admitted request's
+        chain while chains that live requests re-use get evicted."""
+        pt = self.page_tokens
+        toks = tuple(int(t) for t in prompt)
+        full: List[int] = []
+        node = self._ROOT
+        for lp in range(comp // pt):
+            child = self._children.get(node, {}).get(
+                toks[lp * pt:(lp + 1) * pt])
+            if child is None:
+                break
+            if touch_lru:
+                self._lru.move_to_end(child)
+            full.append(self._nodes[child]["page"])
+            node = child
+        boundary = None
+        shared_tokens = len(full) * pt
+        fill = comp % pt
+        if fill and len(full) == comp // pt:
+            ent = self._partials.get(node)
+            if ent is not None:
+                donor_toks, page = ent
+                if (len(donor_toks) >= fill
+                        and donor_toks[:fill] == toks[comp - fill:comp]):
+                    if touch_lru:
+                        self._partials.move_to_end(node)
+                    boundary = page
+                    shared_tokens = comp
+        return full, boundary, shared_tokens
+
+    def register(self, prompt, comp: int, slot_pages: List[int],
+                 allocator: PageAllocator) -> None:
+        """Index a freshly-spliced request's prefill pages.
+
+        ``slot_pages[lp]`` is the physical page backing logical page ``lp``
+        (shared or owned — already-indexed prefixes are skipped). The index
+        takes its own reference on every entry it adds; a boundary entry is
+        replaced only by a strict extension of itself (longer fill, same
+        leading tokens), releasing the superseded page."""
+        pt = self.page_tokens
+        toks = tuple(int(t) for t in prompt)
+        node = self._ROOT
+        for lp in range(comp // pt):
+            chunk = toks[lp * pt:(lp + 1) * pt]
+            ch = self._children.setdefault(node, {})
+            child = ch.get(chunk)
+            if child is None:
+                child = self._next_id
+                self._next_id += 1
+                self._nodes[child] = {
+                    "page": allocator.share(slot_pages[lp]),
+                    "parent": node, "chunk": chunk}
+                ch[chunk] = child
+                self._lru[child] = None
+            node = child
+        fill = comp % pt
+        if fill:
+            part = toks[comp - fill:comp]
+            ent = self._partials.get(node)
+            if ent is None:
+                self._partials[node] = (part, allocator.share(
+                    slot_pages[comp // pt]))
+            else:
+                donor_toks, old_page = ent
+                if len(part) > len(donor_toks) \
+                        and part[: len(donor_toks)] == donor_toks:
+                    self._partials[node] = (part, allocator.share(
+                        slot_pages[comp // pt]))
+                    allocator.release(old_page)
+
+    def _drop_subtree(self, root: int, allocator: PageAllocator) -> None:
+        """Release the trie subtree rooted at ``root`` (its pages, partials
+        and the edge from its parent)."""
+        parent = self._nodes[root]
+        self._children.get(parent["parent"], {}).pop(parent["chunk"], None)
+        stack = [root]
+        while stack:
+            nid = stack.pop()
+            stack.extend(self._children.pop(nid, {}).values())
+            node = self._nodes.pop(nid)
+            del self._lru[nid]
+            allocator.release(node["page"])
+            ent = self._partials.pop(nid, None)
+            if ent is not None:
+                allocator.release(ent[1])
+
+    def _evict_one(self, allocator: PageAllocator) -> bool:
+        """Drop the least-recently-used entry (and, for a full page, every
+        descendant that extends it — an orphaned descendant can never match)."""
+        oldest = next(iter(self._lru), None)
+        if oldest is None:
+            if not self._partials:
+                return False
+            _, (_, page) = self._partials.popitem(last=False)
+            allocator.release(page)
+            return True
+        self._drop_subtree(oldest, allocator)
+        return True
+
+    def evict_until(self, allocator: PageAllocator, n_pages: int) -> None:
+        """LRU-evict entries until ``n_pages`` can be reserved (or the index
+        is empty). Pages still mapped by live slots stay allocated — only
+        the index's reference drops — so this can legitimately fall short;
+        the caller then waits for retirements like any other admission."""
+        while not allocator.can_reserve(n_pages):
+            if not self._evict_one(allocator):
+                return
+
+    def clear(self, allocator: PageAllocator) -> None:
+        """Release every held reference (drain/shutdown path)."""
+        for node in self._nodes.values():
+            allocator.release(node["page"])
+        for _, page in self._partials.values():
+            allocator.release(page)
+        self._nodes.clear()
+        self._children = {self._ROOT: {}}
+        self._lru.clear()
+        self._partials.clear()
+
+
+@partial(jax.jit, donate_argnums=0)
+def _copy_page_leaf(leaf: jax.Array, src: jax.Array,
+                    dst: jax.Array) -> jax.Array:
+    """One pool leaf with physical page ``dst`` overwritten by page ``src``.
+
+    Jitted with the leaf DONATED and src/dst as traced scalars: the update
+    runs in place at O(page_bytes) cost (one executable per leaf shape,
+    reused for every page id), instead of XLA materialising a full new
+    leaf — O(pool bytes) and a transient 2x pool footprint — per
+    copy-on-write event."""
+    return leaf.at[:, dst].set(leaf[:, src])
+
+
+def copy_page(cache, src: int, dst: int):
+    """Device-side copy of one physical page across every pool leaf of every
+    attention layer — the COPY-ON-WRITE step. A slot about to compact into a
+    shared (refcount > 1) page first duplicates it into a freshly drawn page
+    and remaps its block-table entry; the original stays immutable for the
+    other holders. Pool leaves are ``[n_periods, n_phys, Hkv, page_tokens,
+    ·]`` under the period stack, so the copy is one in-place
+    ``_copy_page_leaf`` per leaf. The input leaves are DONATED — callers
+    must drop their reference to ``cache`` in favour of the returned one."""
+    src = jnp.int32(src)
+    dst = jnp.int32(dst)
+    new_blocks = []
+    for lc in cache["blocks"]:
+        if all(kn in lc for kn in _POOL_KEYS):
+            nl = dict(lc)
+            for name in _POOL_KEYS:
+                nl[name] = _copy_page_leaf(lc[name], src, dst)
+            new_blocks.append(nl)
+        else:
+            new_blocks.append(lc)
+    out = dict(cache)
+    out["blocks"] = tuple(new_blocks)
+    return out
 
 
 def layer_cache_shapes(cfg: ModelConfig, kind: str, B: int,
@@ -424,11 +702,19 @@ def prefill_split(cfg: ModelConfig, T: int) -> Tuple[int, int]:
 def build_layer_cache_from_prefill(cfg: ModelConfig, k: jax.Array, v: jax.Array,
                                    max_total_tokens: int,
                                    cross_kv=None,
-                                   plan_batch: Optional[int] = None
+                                   plan_batch: Optional[int] = None,
+                                   shared_tokens: int = 0
                                    ) -> Dict[str, jax.Array]:
     """k/v [B, T, Hkv, d] from a dense prefill -> one layer's Mustafar cache
     (no period dim; the engine scans this per layer). ``plan_batch`` forces
-    the pool planning batch (see layer_cache_shapes) for slot prefills."""
+    the pool planning batch (see layer_cache_shapes) for slot prefills.
+
+    ``shared_tokens`` (static, multiple of tile_tokens, <= the prefill's
+    compressed fill) skips compressing the first S tokens: those live in
+    prefix pages shared from another request's bit-identical compression, so
+    only the UNMATCHED suffix is pruned+compressed (pool region [0, S) stays
+    zero and is never copied — the paged splice maps the shared pages there
+    instead). ``n_compressed`` still covers the full fill."""
     B, T, Hkv, d = k.shape
     m = cfg.mustafar
     kT = jnp.swapaxes(k, 1, 2)                         # [B,Hkv,T,d]
@@ -439,17 +725,19 @@ def build_layer_cache_from_prefill(cfg: ModelConfig, k: jax.Array, v: jax.Array,
     lc = {name: jnp.zeros(shp, dt) for name, (shp, dt) in spec.items()}
     if m.enabled:
         comp, win = prefill_split(cfg, T)
+        S = shared_tokens
+        assert 0 <= S <= comp and S % m.tile_tokens == 0, (S, comp)
         kk = m.keep_k(d, m.key_sparsity)
         kv_ = m.keep_k(d, m.value_sparsity)
-        if comp > 0:
-            ck_v, ck_b = kops.compress(kT[:, :, :comp], kk)
-            cv_v, cv_b = kops.compress(vT[:, :, :comp], kv_)
+        if comp > S:
+            ck_v, ck_b = kops.compress(kT[:, :, S:comp], kk)
+            cv_v, cv_b = kops.compress(vT[:, :, S:comp], kv_)
             lc["ck_vals"] = jax.lax.dynamic_update_slice(
-                lc["ck_vals"], ck_v.astype(lc["ck_vals"].dtype), (0, 0, 0, 0))
-            lc["ck_bm"] = jax.lax.dynamic_update_slice(lc["ck_bm"], ck_b, (0, 0, 0, 0))
+                lc["ck_vals"], ck_v.astype(lc["ck_vals"].dtype), (0, 0, S, 0))
+            lc["ck_bm"] = jax.lax.dynamic_update_slice(lc["ck_bm"], ck_b, (0, 0, S, 0))
             lc["cv_vals"] = jax.lax.dynamic_update_slice(
-                lc["cv_vals"], cv_v.astype(lc["cv_vals"].dtype), (0, 0, 0, 0))
-            lc["cv_bm"] = jax.lax.dynamic_update_slice(lc["cv_bm"], cv_b, (0, 0, 0, 0))
+                lc["cv_vals"], cv_v.astype(lc["cv_vals"].dtype), (0, 0, S, 0))
+            lc["cv_bm"] = jax.lax.dynamic_update_slice(lc["cv_bm"], cv_b, (0, 0, S, 0))
         lc["k_win"] = jax.lax.dynamic_update_slice(
             lc["k_win"], kT[:, :, comp:].astype(lc["k_win"].dtype), (0, 0, 0, 0))
         lc["v_win"] = jax.lax.dynamic_update_slice(
@@ -494,19 +782,26 @@ def write_slot(cache, solo_cache, slot):
 
 
 def write_slot_paged(cfg: ModelConfig, cache, solo_cache, slot,
-                     pages, page_tokens: int):
+                     pages, page_tokens: int, shared_pages=()):
     """Splice a single-sequence CONTIGUOUS cache into slot ``slot`` of a
-    PAGED shared cache.
+    PAGED shared cache, optionally on top of a SHARED prefix.
 
-    ``pages`` is the host list of physical page ids backing the request's
-    logical pages 0..len(pages)-1 (at least the prefill fill —
-    ``ceil(prefill_split(cfg, T)[0] / page_tokens)`` pages; later logical
-    pages may be drawn lazily). Pool contents are copied page by page from
-    the solo contiguous pool (token range ``[lp·pt, (lp+1)·pt)`` → physical
-    page ``pages[lp]``), every other leaf takes the contiguous slot splice,
-    and the slot's block-table row is rewritten (mapped prefix + UNMAPPED
-    tail), which also severs any retired tenant's mappings."""
+    ``shared_pages`` are physical page ids another request (or the prefix
+    index) already holds — they back logical pages ``0..len(shared)-1``
+    read-only and are only MAPPED into the slot's block-table row, never
+    written (the caller must hold a reference per page; a compaction that
+    would later write the last of them copies-on-write first). ``pages``
+    are the slot's OWNED pages for the next logical pages
+    ``len(shared)..len(shared)+len(pages)-1`` (at least the rest of the
+    prefill fill; later logical pages may be drawn lazily) — pool contents
+    are copied into them page by page from the solo contiguous pool (token
+    range ``[lp·pt, (lp+1)·pt)``), every other leaf takes the contiguous
+    slot splice, and the slot's block-table row is rewritten
+    (shared prefix + owned suffix + UNMAPPED tail), which also severs any
+    retired tenant's mappings."""
     pt = page_tokens
+    shared_pages = list(shared_pages)
+    n_shared = len(shared_pages)
     new_blocks = []
     for shared_lc, solo_lc in zip(cache["blocks"], solo_cache["blocks"]):
         nl = dict(shared_lc)
@@ -514,7 +809,8 @@ def write_slot_paged(cfg: ModelConfig, cache, solo_cache, slot,
         for name, leaf in shared_lc.items():
             src = solo_lc[name].astype(leaf.dtype)
             if paged_attn and name in _POOL_KEYS:
-                for logical, phys in enumerate(pages):
+                for i, phys in enumerate(pages):
+                    logical = n_shared + i
                     chunk = src[:, :, :, logical * pt:(logical + 1) * pt]
                     leaf = jax.lax.dynamic_update_slice(
                         leaf, chunk, (0, phys, 0, 0, 0))
@@ -529,8 +825,9 @@ def write_slot_paged(cfg: ModelConfig, cache, solo_cache, slot,
         out[key] = cache[key].at[slot].set(solo_cache[key][0])
     max_pages = cache["block_table"].shape[1]
     row = jnp.full((max_pages,), PAGE_UNMAPPED, jnp.int32)
-    if pages:
-        row = row.at[:len(pages)].set(jnp.asarray(pages, jnp.int32))
+    mapped = shared_pages + list(pages)
+    if mapped:
+        row = row.at[:len(mapped)].set(jnp.asarray(mapped, jnp.int32))
     out["block_table"] = cache["block_table"].at[slot].set(row)
     return out
 

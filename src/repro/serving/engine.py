@@ -72,12 +72,19 @@ def _ffn(bp, h, cfg: ModelConfig, kind: str, ffn_kind: str,
 def prefill(params, tokens: jax.Array, cfg: ModelConfig,
             max_total_tokens: int,
             extra: Optional[Dict[str, jax.Array]] = None,
-            plan_batch: Optional[int] = None):
+            plan_batch: Optional[int] = None,
+            shared_tokens: int = 0):
     """tokens [B, T] -> (logits [B, V] at last position, cache).
 
     extra carries the stub modality inputs (frames / patches).
     ``plan_batch`` forces the compressed-pool planning batch so a solo (B=1)
     prefill produces pool shapes matching an n-slot shared cache.
+    ``shared_tokens`` (static) skips compressing the first S tokens of the
+    compressed region — they arrive via shared prefix pages at the paged
+    splice; the forward pass itself still covers the whole prompt (exact
+    attention over the dense K/V is what keeps a shared-prefix admission
+    bit-identical to a solo run — the compressed pages only ever feed
+    DECODE steps, so sharing is a storage-level dedup, not an approximation).
     """
     extra = extra or {}
     B, T = tokens.shape
@@ -116,7 +123,8 @@ def prefill(params, tokens: jax.Array, cfg: ModelConfig,
                     x = x + attn.cross_attention_block(bp["cross"], hc,
                                                        cross_kv, cfg)
                 lc = cache_mod.build_layer_cache_from_prefill(
-                    cfg, k, v, max_total_tokens, cross_kv, plan_batch)
+                    cfg, k, v, max_total_tokens, cross_kv, plan_batch,
+                    shared_tokens)
             elif kind == "mamba":
                 st = mamba_mod.mamba_state_shapes(cfg, B)
                 mix, (conv_st, ssm_st) = mamba_mod.mamba_apply(
@@ -320,13 +328,130 @@ def decode_step(params, token: jax.Array, cache, cfg: ModelConfig,
 
 
 # ----------------------------------------------------------------------
+# chunked prefill: an admission prefill split into fixed-size chunks that
+# interleave with decode steps, so admitting a long prompt never stalls the
+# running batch for more than ``prefill_chunk`` tokens of prefill work per
+# engine step. A transformer position's activations depend on earlier
+# positions ONLY through their K/V, so each chunk's forward carries a dense
+# per-layer K/V buffer and attends over it (prefix_causal_attention) —
+# bit-identical to the one-shot prefill (masked tails underflow to exact
+# zeros; asserted in tests/test_prefix_sharing.py).
+
+def prefill_chunk_supported(cfg: ModelConfig) -> bool:
+    """Chunked prefill covers pure-attention decoder stacks (any FFN kind).
+
+    Recurrent kinds (mamba/rwkv) would need their own state carried between
+    chunks and audio/vlm prefills splice encoder context — those families
+    fall back to the one-shot solo prefill (the scheduler degrades the
+    chunk size to the whole prompt)."""
+    period = structural_period(cfg)
+    return (cfg.family not in ("audio", "vlm")
+            and all(cfg.layer_kind(j) == "attn" for j in range(period)))
+
+
+def init_chunk_carry(cfg: ModelConfig, T_buf: int):
+    """Zeroed per-layer dense K/V carry for one chunked prefill: a tuple
+    over period positions of {"k","v"} leaves [n_periods, 1, T_buf, Hkv, d]
+    (qkv_proj layout — batch 1, the admission is always solo). The buffer is
+    TRANSIENT: it lives only until the prefill's last chunk, then the usual
+    prune+compress splice runs and the buffer is dropped — it never counts
+    against the compressed pool budget."""
+    period = structural_period(cfg)
+    n_periods = cfg.n_layers // period
+    dt = cdtype(cfg)
+    shp = (n_periods, 1, T_buf, cfg.n_kv_heads, cfg.d_head)
+    return tuple({"k": jnp.zeros(shp, dt), "v": jnp.zeros(shp, dt)}
+                 for _ in range(period))
+
+
+def prefill_chunk_step(params, chunk_tokens: jax.Array, kv_carry,
+                       offset: jax.Array, cfg: ModelConfig):
+    """One prefill chunk: tokens [1, C] at absolute positions
+    ``offset + arange(C)`` -> (logits [1, C, V], updated kv_carry).
+
+    Identical per-position math to ``prefill`` (same projections, RoPE at
+    the same absolute offsets, same fp32 softmax) with the chunk's K/V
+    appended into the carry before attention. The caller reads the logits
+    row of the last VALID position (a ragged final chunk is padded; padded
+    rows sit at positions >= T so no valid query ever attends to them)."""
+    B, C = chunk_tokens.shape
+    x = embed_tokens(params["embed"], chunk_tokens, cfg)
+    x = shard_activation(x, DP, None, None)
+    positions = offset + jnp.arange(C)[None, :]
+    period = structural_period(cfg)
+
+    def body(carry, xs):
+        x = carry
+        bp_period, kc_period = xs
+        new_kc = []
+        for j in range(period):
+            bp, kc = bp_period[j], kc_period[j]
+            h = norm_apply(bp["norm1"], x, cfg.norm)
+            q, k, v = attn.qkv_proj(bp["mixer"], h, cfg, positions)
+            k_buf = jax.lax.dynamic_update_slice(
+                kc["k"], k.astype(kc["k"].dtype), (0, offset, 0, 0))
+            v_buf = jax.lax.dynamic_update_slice(
+                kc["v"], v.astype(kc["v"].dtype), (0, offset, 0, 0))
+            core = attn.prefix_causal_attention(q, k_buf, v_buf, positions,
+                                                cfg)
+            x = x + attn.o_proj(bp["mixer"], core, cfg)
+            h2 = norm_apply(bp["norm2"], x, cfg.norm)
+            f, _ = _ffn(bp, h2, cfg, "attn", cfg.ffn_kind(j))
+            x = x + f
+            new_kc.append({"k": k_buf, "v": v_buf})
+        return x, tuple(new_kc)
+
+    x, new_carry = jax.lax.scan(body, x, (params["blocks"], kv_carry),
+                                unroll=layer_scan_unroll())
+    x = norm_apply(params["final_norm"], x, cfg.norm)
+    logits = lm_logits(params["embed"], x, cfg)          # [1, C, V]
+    return logits, new_carry
+
+
+def finalize_chunked_prefill(params, kv_carry, cfg: ModelConfig, T: int,
+                             max_total_tokens: int,
+                             plan_batch: Optional[int] = None,
+                             shared_tokens: int = 0):
+    """Turn a completed chunk carry into the solo cache ``prefill`` builds.
+
+    Slices each layer's dense K/V back to the true prompt length and runs
+    the same prune+compress+window split (``build_layer_cache_from_prefill``
+    with the same ``shared_tokens`` skip), so the resulting solo cache is
+    leaf-for-leaf what the one-shot prefill would have produced."""
+    period = structural_period(cfg)
+    blocks = []
+    for j in range(period):
+        kc = kv_carry[j]
+
+        def fin_body(_, kv_one):
+            # carry leaves are [1, T_buf, Hkv, d] — the qkv_proj layout
+            # build_layer_cache_from_prefill expects, sliced to the true T
+            lc = cache_mod.build_layer_cache_from_prefill(
+                cfg, kv_one["k"][:, :T], kv_one["v"][:, :T],
+                max_total_tokens, None, plan_batch, shared_tokens)
+            return None, lc
+
+        _, lc_stack = jax.lax.scan(fin_body, None, kc)
+        blocks.append(lc_stack)
+    comp, win = cache_mod.prefill_split(cfg, T)
+    m = cfg.mustafar
+    return {
+        "blocks": tuple(blocks),
+        "position": jnp.full((1,), T, jnp.int32),
+        "w_len": jnp.full((1,), win if m.enabled else 0, jnp.int32),
+        "n_compressed": jnp.full((1,), comp if m.enabled else 0, jnp.int32),
+    }
+
+
+# ----------------------------------------------------------------------
 # continuous batching: ragged admission + scheduler
 
 def prefill_into_slot(params, tokens: jax.Array, cache, slot, cfg: ModelConfig,
                       max_total_tokens: int,
                       extra: Optional[Dict[str, jax.Array]] = None,
                       prefill_fn=None, pages=None,
-                      page_tokens: Optional[int] = None):
+                      page_tokens: Optional[int] = None,
+                      shared_pages=(), shared_tokens: int = 0):
     """Prefill ONE sequence (tokens [1, T], any T — requests stay ragged)
     and splice its compressed pools + right-padded window into batch slot
     ``slot`` of the shared cache via ``dynamic_update_slice``.
@@ -334,22 +459,28 @@ def prefill_into_slot(params, tokens: jax.Array, cache, slot, cfg: ModelConfig,
     Returns (last-position logits [V], new shared cache). The solo prefill
     plans its pools with the shared batch size so the leaf shapes line up.
     ``prefill_fn`` overrides the solo prefill callable — the Scheduler
-    passes its jitted one; it must accept (params, tokens) and already
-    bind cfg/max_total/plan_batch consistently with this cache.
+    passes its jitted one; it must accept (params, tokens, shared_tokens=)
+    and already bind cfg/max_total/plan_batch consistently with this cache.
 
-    For a PAGED shared cache pass ``pages`` (physical page ids covering at
-    least the prefill's compressed fill) and ``page_tokens``: the solo
-    contiguous pools are then copied page-by-page and the slot's
-    block-table row rewritten (``cache_mod.write_slot_paged``).
+    For a PAGED shared cache pass ``pages`` (the slot's OWNED physical page
+    ids) and ``page_tokens``: the solo contiguous pools are then copied
+    page-by-page and the slot's block-table row rewritten
+    (``cache_mod.write_slot_paged``). A SHARED-PREFIX admission additionally
+    passes ``shared_pages`` (prefix pages mapped read-only ahead of the
+    owned ones) and ``shared_tokens`` (the compressed tokens they cover, so
+    the solo prefill skips re-compressing them — the splice starts its page
+    copies at the first unmatched logical page).
     """
     if prefill_fn is None:
         n_slots = cache["position"].shape[0]
-        prefill_fn = lambda p, t: prefill(p, t, cfg, max_total_tokens,
-                                          extra=extra, plan_batch=n_slots)
-    logits, solo = prefill_fn(params, tokens)
-    if pages is not None:
-        return logits[0], cache_mod.write_slot_paged(cfg, cache, solo, slot,
-                                                     pages, page_tokens)
+        prefill_fn = lambda p, t, shared_tokens=0: prefill(
+            p, t, cfg, max_total_tokens, extra=extra, plan_batch=n_slots,
+            shared_tokens=shared_tokens)
+    logits, solo = prefill_fn(params, tokens, shared_tokens=shared_tokens)
+    if pages is not None or shared_pages:
+        return logits[0], cache_mod.write_slot_paged(
+            cfg, cache, solo, slot, pages or [], page_tokens,
+            shared_pages=shared_pages)
     return logits[0], cache_mod.write_slot(cache, solo, slot)
 
 
@@ -360,11 +491,18 @@ class Request:
     max_new_tokens: int
     eos_token_id: Optional[int] = None
     temperature: float = 0.0
+    top_k: int = 0                       # 0 = no top-k truncation
+    top_p: float = 1.0                   # 1.0 = no nucleus truncation
     uid: int = -1
     # filled in by the scheduler:
     arrival_step: int = -1               # engine step when submitted
-    prefill_step: int = -1               # engine step when admitted
+    prefill_step: int = -1               # engine step when admission began
+    first_token_step: int = -1           # engine step of the first sampled
+                                         # token (== prefill_step unless the
+                                         # prefill ran chunked)
     finish_step: int = -1                # engine step when retired
+    shared_prefix_tokens: int = 0        # compressed tokens mapped from the
+                                         # prefix index instead of recompressed
     output_tokens: List[int] = field(default_factory=list)
     logits: List[Any] = field(default_factory=list)  # per-token, if collected
 
@@ -385,9 +523,44 @@ class Occupancy(NamedTuple):
     decode step (None when the cache is contiguous). Under page-budget
     admission the interesting regime is high ``slots`` at modest ``pages``:
     heterogeneous-length batches keep every slot busy without any slot
-    reserving worst-case pool memory."""
+    reserving worst-case pool memory.
+
+    Under PREFIX SHARING the drawn pages further split into
+    ``pages_owned`` (exactly one holder) and ``pages_shared`` (refcount
+    > 1 — a common prefix page or an index-cached one). Each physical page
+    counts ONCE whichever split it lands in, so ``pages_owned +
+    pages_shared == pages`` and utilization is never double-counted however
+    many block-table rows alias a page.
+
+    ``prefill_tokens_per_step`` is the mean prefill tokens EXECUTED per
+    engine step when a ``prefill_chunk`` budget is set (None when it
+    isn't). Chunk steps charge their full padded size, and a family that
+    cannot chunk (``prefill_chunk_supported`` False) still reports its
+    one-shot whole-prompt stalls here — the stat never claims a bound the
+    engine didn't enforce. The per-step maximum is
+    ``Scheduler.max_prefill_step_tokens``."""
     slots: float
     pages: Optional[float] = None
+    pages_owned: Optional[float] = None
+    pages_shared: Optional[float] = None
+    prefill_tokens_per_step: Optional[float] = None
+
+
+@dataclass
+class _PendingPrefill:
+    """A chunked admission in flight: the prompt's processed prefix lives in
+    the dense K/V carry; the slot is reserved (and its prefix-page refs
+    held) but not yet active in decode."""
+    req: Request
+    tokens: Any                          # host int tokens [T]
+    chunk: int                           # fixed chunk size C
+    T_buf: int                           # carry capacity (T rounded up to C)
+    carry: Any = None                    # per-layer dense K/V pytree
+    done: int = 0                        # tokens processed so far
+    last_logits: Any = None              # [1, C, V] of the latest chunk
+    last_offset: int = 0                 # absolute offset of that chunk
+    shared_pages: List[int] = field(default_factory=list)
+    shared_tokens: int = 0
 
 
 class Scheduler:
@@ -424,19 +597,54 @@ class Scheduler:
     ``n_pages`` below ``n_slots · max_pages`` overcommits: all slots can be
     busy as long as their combined worst-case budgets fit, which is the
     whole payoff for heterogeneous-length traffic.
+
+    PREFIX SHARING (``share_prefix=True``, requires paged mode): admissions
+    consult a token-trie ``cache.PrefixIndex`` mapping prompt prefixes to
+    retired compressed pages. Matched pages are refcount-``share()``d and
+    MAPPED read-only into the new slot's block table instead of being
+    recompressed and copied — per-token magnitude pruning is deterministic,
+    so a shared page is bit-identical to the page the slot would have
+    produced itself; the exact solo prefill forward still runs (the shared
+    pages only feed decode reads), which keeps shared-prefix runs
+    bit-identical to solo runs. Shared pages are IMMUTABLE: the one write
+    path into prefill pages — tile-group compaction appending to the
+    partially-filled boundary page — goes through a COPY-ON-WRITE in
+    ``_provision_pages`` (fresh page drawn from the slot's own budget, page
+    copied device-side, block-table entry remapped, shared ref released).
+    The fuzz harness asserts no write ever targets a refcount>1 page and no
+    reference leaks across a drain.
+
+    CHUNKED PREFILL (``prefill_chunk=N``): every admission prefill runs as
+    fixed-size chunks interleaved with decode steps (a short prompt is one
+    padded chunk) — at most N prefill tokens execute per engine step ACROSS
+    all admissions (the decode-stall budget; observed max in
+    ``max_prefill_step_tokens``, mean in
+    ``occupancy.prefill_tokens_per_step``). Chunks carry the prompt's dense
+    per-layer K/V (transient — dropped at the splice) and are bit-identical
+    to the one-shot prefill; see ``prefill_chunk_step``.
     """
 
     def __init__(self, cfg: ModelConfig, params, n_slots: int,
                  max_total_tokens: int, seed: int = 0,
                  collect_logits: bool = False,
                  page_tokens: Optional[int] = None,
-                 n_pages: Optional[int] = None):
+                 n_pages: Optional[int] = None,
+                 share_prefix: bool = False,
+                 prefill_chunk: Optional[int] = None,
+                 debug_invariants: bool = False):
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
         self.max_total = max_total_tokens
         self.page_tokens = page_tokens
         self.paged = page_tokens is not None
+        if share_prefix and not self.paged:
+            raise ValueError("share_prefix=True requires paged pools "
+                             "(pass page_tokens=...)")
+        if prefill_chunk is not None and prefill_chunk <= 0:
+            raise ValueError(f"prefill_chunk={prefill_chunk} must be positive")
+        self.share_prefix = share_prefix
+        self.debug_invariants = debug_invariants
         if self.paged:
             self.max_pages = cache_mod.plan_pages(
                 cfg, max_total_tokens, page_tokens, batch=n_slots)
@@ -448,6 +656,21 @@ class Scheduler:
             self._w_len = [0] * n_slots           # host mirrors of the
             self._n_comp = [0] * n_slots          # per-slot device counters
             self.busy_page_steps = 0
+            self.busy_owned_page_steps = 0
+            self.busy_shared_page_steps = 0
+        if share_prefix:
+            self.prefix = cache_mod.PrefixIndex(page_tokens)
+            self.shared_admissions = 0            # admissions that mapped
+                                                  # at least one prefix page
+        self.cow_count = 0                        # copy-on-write events
+        self.prefill_chunk = prefill_chunk
+        self._can_chunk = (prefill_chunk is not None
+                           and prefill_chunk_supported(cfg))
+        self._pending: "collections.OrderedDict[int, _PendingPrefill]" = \
+            collections.OrderedDict()
+        self.prefill_token_total = 0              # prefill tokens executed
+        self.max_prefill_step_tokens = 0          # worst per-step stall seen
+        self._step_prefill_tokens = 0             # running count, this step
         self.cache = cache_mod.init_cache(cfg, n_slots, max_total_tokens,
                                           page_tokens=page_tokens,
                                           n_pages=n_pages)
@@ -464,7 +687,13 @@ class Scheduler:
         self._decode = jax.jit(partial(decode_step, cfg=cfg))
         self._prefill = jax.jit(partial(prefill, cfg=cfg,
                                         max_total_tokens=max_total_tokens,
-                                        plan_batch=n_slots))
+                                        plan_batch=n_slots),
+                                static_argnames=("shared_tokens",))
+        self._chunk_step = jax.jit(partial(prefill_chunk_step, cfg=cfg))
+        self._finalize = jax.jit(partial(finalize_chunked_prefill, cfg=cfg,
+                                         max_total_tokens=max_total_tokens,
+                                         plan_batch=n_slots),
+                                 static_argnames=("T", "shared_tokens"))
 
     # ------------------------------------------------------------------
     def _check_admissible(self, req: Request) -> int:
@@ -484,8 +713,7 @@ class Scheduler:
                 f"tokens = {total}; slot capacity is {self.max_total} "
                 f"(max_total_tokens) — rejecting rather than truncating")
         if self.paged:
-            need = cache_mod.pages_for_request(self.cfg, total,
-                                               self.page_tokens)
+            need = self._worst_case_pages(n_prompt, total)
             if need > self.n_pages:
                 raise ValueError(
                     f"request needs {need} pages worst-case; the pool holds "
@@ -504,36 +732,47 @@ class Scheduler:
 
     @property
     def has_work(self) -> bool:
-        return bool(self.waiting) or any(s is not None for s in self.slots)
+        return (bool(self.waiting) or bool(self._pending)
+                or any(s is not None for s in self.slots))
 
     @property
     def occupancy(self) -> Occupancy:
-        """Slot AND page utilization (see ``Occupancy``)."""
+        """Slot AND page utilization (see ``Occupancy``), with drawn pages
+        split owned/shared so prefix aliasing is never double-counted."""
         slots = self.busy_slot_steps / max(1, self.decode_steps * self.n_slots)
-        pages = None
+        pages = owned = shared = None
         if self.paged:
-            pages = self.busy_page_steps / max(
-                1, self.decode_steps * self.n_pages)
-        return Occupancy(slots, pages)
+            denom = max(1, self.decode_steps * self.n_pages)
+            pages = self.busy_page_steps / denom
+            owned = self.busy_owned_page_steps / denom
+            shared = self.busy_shared_page_steps / denom
+        stall = None
+        if self.prefill_chunk is not None:
+            stall = self.prefill_token_total / max(1, self.step_count)
+        return Occupancy(slots, pages, owned, shared, stall)
 
     # ------------------------------------------------------------------
     def _sample_one(self, logits: jax.Array, req: Request) -> int:
         from repro.serving.sampler import sample
         self.rng, sub = jax.random.split(self.rng)
-        return int(sample(logits[None], req.temperature, sub)[0])
+        return int(sample(logits[None], req.temperature, sub,
+                          top_k=req.top_k, top_p=req.top_p)[0])
 
     def _sample_batch(self, logits: jax.Array):
         """One batched sample call + ONE device->host transfer per decode
-        step when every active request shares a temperature (the common
-        case); returns None to fall back to per-slot sampling otherwise."""
+        step when every active request shares (temperature, top_k, top_p)
+        — the common case; returns None to fall back to per-slot sampling
+        otherwise."""
         import numpy as np
 
         from repro.serving.sampler import sample
-        temps = {r.temperature for r in self.slots if r is not None}
-        if len(temps) != 1:
+        knobs = {(r.temperature, r.top_k, r.top_p)
+                 for r in self.slots if r is not None}
+        if len(knobs) != 1:
             return None
+        temp, top_k, top_p = knobs.pop()
         self.rng, sub = jax.random.split(self.rng)
-        return np.asarray(sample(logits, temps.pop(), sub))
+        return np.asarray(sample(logits, temp, sub, top_k=top_k, top_p=top_p))
 
     def _retire(self, req: Request) -> None:
         req.finish_step = self.step_count
@@ -552,9 +791,11 @@ class Scheduler:
         return False
 
     def _release_pages(self, slot: int) -> None:
-        """Return a retired (or never-occupied) slot's drawn pages and
+        """Drop a retired (or never-occupied) slot's page references and
         unused promises; sever its block-table row so a later tenant can
-        never alias a freed page."""
+        never alias a freed page. Under sharing a reference drop only frees
+        the physical page once the prefix index and every other slot have
+        let go too."""
         if not self.paged:
             return
         self.allocator.free(self._slot_pages[slot])
@@ -570,16 +811,33 @@ class Scheduler:
         """Host mirror of ``decode_step``'s per-slot counter logic: if the
         upcoming step will compact a slot into a not-yet-mapped logical
         page, draw one (from the reservation made at admission) and write
-        the block-table entry BEFORE the jitted decode fires."""
+        the block-table entry BEFORE the jitted decode fires.
+
+        COPY-ON-WRITE: when the compaction target is already mapped but
+        SHARED (refcount > 1 — a prefix boundary page, or the slot's own
+        boundary page the prefix index also caches), the page is immutable:
+        a fresh page is drawn from the slot's own budget (the admission
+        reservation deliberately keeps the boundary page's promise for
+        exactly this), its contents copied device-side, the block-table
+        entry remapped, and the shared reference released. After this no
+        write in ``compact_layer_paged`` can ever land in a refcount>1
+        page — under ``debug_invariants`` the full
+        ``kernels.sparse_decode.validate_block_table`` contract (read- AND
+        write-side) is asserted here before every decode, and the fuzz
+        harness re-checks the read side after every step."""
         m = self.cfg.mustafar
         if not m.enabled:
             return
         tt = m.tile_tokens
         wbuf = m.local_window + tt
-        for slot, act in enumerate(active_flags):
-            if not act:
+        will = [False] * len(active_flags)
+        nc_pre = [0] * len(active_flags)       # pre-compaction depths: the
+        for slot, act in enumerate(active_flags):   # write target is
+            if not act:                             # nc_pre // page_tokens
                 continue
+            nc_pre[slot] = self._n_comp[slot]
             if self._w_len[slot] >= wbuf:              # compaction this step
+                will[slot] = True
                 lp = self._n_comp[slot] // self.page_tokens
                 if lp >= len(self._slot_pages[slot]):
                     assert self._slot_reserved[slot] > 0, \
@@ -589,57 +847,268 @@ class Scheduler:
                     self._slot_pages[slot].append(page)
                     self.cache["block_table"] = \
                         self.cache["block_table"].at[slot, lp].set(page)
+                elif self.allocator.refcount(self._slot_pages[slot][lp]) > 1:
+                    assert self._slot_reserved[slot] > 0, \
+                        "no budget left for copy-on-write (planner bug)"
+                    old = self._slot_pages[slot][lp]
+                    new = self.allocator.draw()
+                    self._slot_reserved[slot] -= 1
+                    self.cache = cache_mod.copy_page(self.cache, old, new)
+                    self.allocator.release(old)
+                    self._slot_pages[slot][lp] = new
+                    self.cache["block_table"] = \
+                        self.cache["block_table"].at[slot, lp].set(new)
+                    self.cow_count += 1
                 self._n_comp[slot] += tt
                 self._w_len[slot] -= tt
             self._w_len[slot] += 1
+        if self.debug_invariants:
+            import numpy as np
+
+            from repro.kernels.sparse_decode import validate_block_table
+            validate_block_table(
+                np.asarray(self.cache["block_table"]), self.n_pages + 1,
+                page_tokens=self.page_tokens,
+                n_compressed=np.asarray(nc_pre),
+                refcounts=[self.allocator.refcount(p)
+                           for p in range(self.n_pages)],
+                will_compact=will)
+
+    def _worst_case_pages(self, n_prompt: int, total: int) -> int:
+        """A request's worst-case page reservation: the base budget for
+        ``total`` tokens PLUS one CoW-headroom page when the prompt's
+        compressed fill ends mid-page under sharing (whether the boundary
+        page ends up shared-in or owned-but-index-cached, the slot's first
+        compaction into it must copy into a fresh page). The ONLY place
+        this rule lives — admissibility checks, eviction targets, and
+        reservation sizing all call it, so they cannot disagree."""
+        need = cache_mod.pages_for_request(self.cfg, total, self.page_tokens)
+        if self.share_prefix:
+            comp, _ = cache_mod.prefill_split(self.cfg, n_prompt)
+            if comp % self.page_tokens:
+                need += 1
+        return need
+
+    def _match_prefix(self, req: Request, total: int):
+        """Prefix-index lookup + reservation sizing for one admission.
+
+        Returns (shared_pages, shared_tokens, pages_needed): the physical
+        pages to alias (full-prefix chain, possibly plus a boundary page),
+        the compressed tokens they cover, and the reservation AFTER
+        discounting the shared pages — each fully-shared page drops one
+        promise, and a SHARED boundary page drops the CoW-headroom page
+        from ``_worst_case_pages`` (its own logical page's promise is kept,
+        never drawn at admission, consumed by the CoW); an OWNED partial
+        boundary page keeps the headroom — the slot draws its whole worst
+        case itself AND the prefix index will register that boundary page
+        (refcount 2), so the slot's own first compaction into it must
+        copy."""
+        comp, _ = cache_mod.prefill_split(self.cfg, len(req.prompt))
+        shared: List[int] = []
+        shared_tokens = 0
+        pages_needed = self._worst_case_pages(len(req.prompt), total)
+        if self.share_prefix:
+            full, boundary, shared_tokens = self.prefix.match(req.prompt,
+                                                              comp)
+            shared = list(full) + ([boundary] if boundary is not None else [])
+            pages_needed -= len(full)
+            if boundary is not None:
+                pages_needed -= 1          # shared boundary: headroom page
+                                           # not needed (see docstring)
+        return shared, shared_tokens, pages_needed
+
+    def _after_first_token(self, slot: int, req: Request,
+                           lg: jax.Array) -> bool:
+        """Sample the prefill's own output token; returns True if the slot
+        is now actively decoding (False: finished on the prefill token)."""
+        req.first_token_step = self.step_count
+        tok = self._sample_one(lg, req)
+        if self._record(req, tok, lg):
+            self._release_pages(slot)
+            return False
+        self.slots[slot] = req
+        self.next_tokens = self.next_tokens.at[slot].set(tok)
+        return True
+
+    def _draw_prefill_pages(self, slot: int, T: int,
+                            shared_pages) -> List[int]:
+        """Draw the slot's OWNED prefill pages (the compressed fill minus
+        the shared prefix) from its reservation and set the host mirrors.
+        ``_slot_reserved[slot]`` must already hold the admission
+        reservation. One copy shared by the one-shot and chunked admission
+        paths, so their page/mirror bookkeeping — the invariant pair the
+        fuzz harness checks — cannot desynchronize."""
+        comp, win = cache_mod.prefill_split(self.cfg, T)
+        n_owned = -(-comp // self.page_tokens) - len(shared_pages)
+        assert 0 <= n_owned <= self._slot_reserved[slot]
+        owned = [self.allocator.draw() for _ in range(n_owned)]
+        self._slot_pages[slot] = list(shared_pages) + owned
+        self._slot_reserved[slot] -= n_owned
+        self._w_len[slot] = win
+        self._n_comp[slot] = comp
+        return owned
+
+    def _register_prefix(self, slot: int, req: Request) -> None:
+        """Index the slot's freshly-spliced prefill pages (prompt-derived
+        pages only — decode-time compactions mix in generated tokens)."""
+        if not self.share_prefix:
+            return
+        comp, _ = cache_mod.prefill_split(self.cfg, len(req.prompt))
+        self.prefix.register(req.prompt, comp, self._slot_pages[slot],
+                             self.allocator)
 
     def _admit(self) -> None:
-        free = [i for i, s in enumerate(self.slots) if s is None]
+        free = [i for i, s in enumerate(self.slots)
+                if s is None and i not in self._pending]
         while free and self.waiting:
             req = self.waiting[0]
             # re-validate at admission: requests can reach the queue without
             # submit() (or be mutated after it), and an inadmissible head
             # would deadlock the queue under page-budget gating
             total = self._check_admissible(req)
+            shared: List[int] = []
+            shared_tokens = 0
             pages_needed = 0
             if self.paged:
-                pages_needed = cache_mod.pages_for_request(
-                    self.cfg, total, self.page_tokens)
+                shared, shared_tokens, pages_needed = \
+                    self._match_prefix(req, total)
                 if not self.allocator.can_reserve(pages_needed):
-                    break            # wait for a retirement to free pages
+                    # index-cached pages are reclaimable cache, not demand:
+                    # LRU-evict until the reservation fits (pages still
+                    # mapped by live slots only drop the index's ref).
+                    # Evict against the UNDISCOUNTED worst case (incl. CoW
+                    # headroom) and re-match: eviction may have dropped the
+                    # very pages just matched
+                    if self.share_prefix:
+                        self.prefix.evict_until(
+                            self.allocator,
+                            self._worst_case_pages(len(req.prompt), total))
+                        shared, shared_tokens, pages_needed = \
+                            self._match_prefix(req, total)
+                    if not self.allocator.can_reserve(pages_needed):
+                        break        # wait for a retirement to free pages
             self.waiting.popleft()
-            slot = free[0]
+            slot = free.pop(0)
+            if self.paged:
+                self.allocator.reserve(pages_needed)
+                for p in shared:     # slot-held refs: eviction/donor retire
+                    self.allocator.share(p)   # can no longer free them
+                if self.share_prefix:  # stats + LRU recency move only on
+                    if shared:         # COMMITTED admissions (see
+                        self.shared_admissions += 1      # PrefixIndex.match)
+                        self.prefix.hits += len(shared)
+                        comp, _ = cache_mod.prefill_split(self.cfg,
+                                                          len(req.prompt))
+                        self.prefix.match(req.prompt, comp, touch_lru=True)
+                    else:
+                        self.prefix.misses += 1
+                req.shared_prefix_tokens = shared_tokens
+            req.prefill_step = self.step_count
+            if self._can_chunk:
+                # CHUNKED admission: reserve the slot + pages now, run the
+                # forward in prefill_chunk-token slices between decode
+                # steps. EVERY admission routes through the chunk queue —
+                # a prompt shorter than the chunk is one (padded) chunk —
+                # so the per-step stall budget in _run_prefill_chunks is a
+                # real bound over concurrent admissions, not per-request
+                C = self.prefill_chunk
+                T = len(req.prompt)
+                self._pending[slot] = _PendingPrefill(
+                    req=req, tokens=[int(t) for t in req.prompt], chunk=C,
+                    T_buf=-(-T // C) * C,
+                    carry=init_chunk_carry(self.cfg, -(-T // C) * C),
+                    shared_pages=shared, shared_tokens=shared_tokens)
+                if self.paged:
+                    self._slot_pages[slot] = list(shared)
+                    self._slot_reserved[slot] = pages_needed
+                continue
             toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
             pages = None
             if self.paged:
-                comp, win = cache_mod.prefill_split(self.cfg, len(req.prompt))
-                n_prefill = -(-comp // self.page_tokens)
-                assert n_prefill <= pages_needed, (n_prefill, pages_needed)
-                self.allocator.reserve(pages_needed)
-                pages = [self.allocator.draw() for _ in range(n_prefill)]
-                self._slot_pages[slot] = pages
-                self._slot_reserved[slot] = pages_needed - n_prefill
-                self._w_len[slot] = win
-                self._n_comp[slot] = comp
+                self._slot_reserved[slot] = pages_needed
+                pages = self._draw_prefill_pages(slot, len(req.prompt),
+                                                 shared)
+            if self.prefill_chunk is not None:
+                # chunking requested but unsupported for this family: the
+                # one-shot prefill stalls decode for the whole prompt —
+                # report it honestly instead of claiming a zero stall
+                self._step_prefill_tokens += len(req.prompt)
             # jit caches one prefill executable per distinct prompt length
+            # (and, under sharing, per distinct shared-token offset)
             lg, self.cache = prefill_into_slot(
                 self.params, toks, self.cache, slot, self.cfg, self.max_total,
                 prefill_fn=self._prefill, pages=pages,
-                page_tokens=self.page_tokens)
-            req.prefill_step = self.step_count
-            tok = self._sample_one(lg, req)
-            if self._record(req, tok, lg):
-                self._release_pages(slot)
-                continue                 # finished on the prefill token;
+                page_tokens=self.page_tokens, shared_pages=shared,
+                shared_tokens=shared_tokens)
+            if self.paged:
+                self._register_prefix(slot, req)
+            if not self._after_first_token(slot, req, lg):
+                free.insert(0, slot)     # finished on the prefill token;
                                          # slot stays free for the next one
-            free.pop(0)
-            self.slots[slot] = req
-            self.next_tokens = self.next_tokens.at[slot].set(tok)
+
+    # ------------------------------------------------------------------
+    def _run_prefill_chunks(self) -> None:
+        """Advance pending chunked prefills by at most ``prefill_chunk``
+        prefill tokens of EXECUTED COMPUTE this engine step (the
+        decode-stall budget), oldest admission first; completed prefills
+        splice in and go active for the decode that follows.
+
+        The budget charges the full padded chunk each jitted step actually
+        executes — a ragged final chunk of 3 real tokens still runs a
+        ``prefill_chunk``-token forward — so the bound holds in wall-clock
+        terms, not just in prompt-token bookkeeping."""
+        budget = self.prefill_chunk
+        while self._pending and budget > 0:
+            slot, pend = next(iter(self._pending.items()))
+            T = len(pend.tokens)
+            off = pend.done
+            if pend.chunk > budget:
+                break
+            n = min(pend.chunk, T - off)
+            chunk = pend.tokens[off:off + n] + [0] * (pend.chunk - n)
+            lg, pend.carry = self._chunk_step(
+                self.params, jnp.asarray(chunk, jnp.int32)[None, :],
+                pend.carry, jnp.int32(off))
+            pend.last_logits = lg
+            pend.last_offset = off
+            pend.done += n
+            budget -= pend.chunk
+            self._step_prefill_tokens += pend.chunk
+            if pend.done >= T:
+                del self._pending[slot]
+                self._complete_prefill(slot, pend)
+
+    def _complete_prefill(self, slot: int, pend: _PendingPrefill) -> None:
+        """Last chunk done: prune+compress the carried K/V (minus the shared
+        prefix), draw the owned prefill pages, splice, and sample the
+        request's first output token — exactly what the one-shot admission
+        does, just spread over the preceding steps."""
+        T = len(pend.tokens)
+        solo = self._finalize(self.params, pend.carry, T=T,
+                              shared_tokens=pend.shared_tokens)
+        if self.paged:
+            owned = self._draw_prefill_pages(slot, T, pend.shared_pages)
+            self.cache = cache_mod.write_slot_paged(
+                self.cfg, self.cache, solo, slot, owned, self.page_tokens,
+                shared_pages=pend.shared_pages)
+            self._register_prefix(slot, pend.req)
+        else:
+            self.cache = cache_mod.write_slot(self.cache, solo, slot)
+        lg = pend.last_logits[0, (T - 1) - pend.last_offset]
+        self._after_first_token(slot, pend.req, lg)
 
     # ------------------------------------------------------------------
     def step(self) -> None:
-        """One engine iteration: admit → batched decode → sample/retire."""
-        self._admit()
+        """One engine iteration: admit → prefill chunks → batched decode →
+        sample/retire."""
+        self._step_prefill_tokens = 0     # this step's prefill compute:
+        self._admit()                     # one-shot fallbacks count too
+        if self._pending:
+            self._run_prefill_chunks()
+        if self.prefill_chunk is not None:
+            self.prefill_token_total += self._step_prefill_tokens
+            self.max_prefill_step_tokens = max(self.max_prefill_step_tokens,
+                                               self._step_prefill_tokens)
         active_flags = [s is not None for s in self.slots]
         if any(active_flags):
             if self.paged:
@@ -651,6 +1120,9 @@ class Scheduler:
             self.busy_slot_steps += sum(active_flags)
             if self.paged:
                 self.busy_page_steps += self.allocator.in_use
+                owned, shared = self.allocator.in_use_split
+                self.busy_owned_page_steps += owned
+                self.busy_shared_page_steps += shared
             batch_toks = self._sample_batch(logits)
             for slot, req in enumerate(self.slots):
                 if req is None:

@@ -1,17 +1,44 @@
-"""Token sampling: greedy / temperature / top-k."""
+"""Token sampling: greedy / temperature / top-k / top-p (nucleus)."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+NEG_INF = -1e30
+
 
 def sample(logits: jax.Array, temperature: float = 0.0, rng=None,
-           top_k: int = 0) -> jax.Array:
-    """logits [B, V] -> tokens [B]."""
+           top_k: int = 0, top_p: float = 1.0) -> jax.Array:
+    """logits [B, V] -> tokens [B].
+
+    ``temperature <= 0`` is greedy (top_k/top_p are no-ops — argmax already
+    picks the nucleus head). ``top_k > 0`` keeps the k highest logits;
+    ``top_p < 1`` keeps the smallest set of tokens whose cumulative
+    probability reaches ``top_p`` (the argmax token always survives, so the
+    distribution can never empty — ``top_p <= 0`` keeps ONLY the argmax
+    rather than silently disabling truncation). Both truncations compose: top-k first,
+    then the nucleus over what remains — the scheduler plumbs them through
+    per request (``Request.top_k`` / ``Request.top_p``).
+    """
     if temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     logits = logits.astype(jnp.float32) / temperature
     if top_k > 0:
         kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
-        logits = jnp.where(logits < kth, -1e30, logits)
+        logits = jnp.where(logits < kth, NEG_INF, logits)
+    if top_p < 1.0:
+        # mask in RANK space and scatter back through the inverse sort:
+        # a value-threshold cutoff would leak every token TIED with the
+        # last nucleus member, sampling a larger set than specified
+        sort_idx = jnp.argsort(-logits, axis=-1)       # stable: ties by id
+        desc = jnp.take_along_axis(logits, sort_idx, axis=-1)
+        probs = jax.nn.softmax(desc, axis=-1)
+        # exclusive cumulative mass BEFORE each token: a token stays while
+        # the mass above it is still < top_p; rank 0 is pinned so top_p <= 0
+        # degrades to keep-argmax-only rather than an empty distribution
+        cum = jnp.cumsum(probs, axis=-1) - probs
+        kept_sorted = (cum < top_p).at[..., 0].set(True)
+        inv = jnp.argsort(sort_idx, axis=-1)
+        kept = jnp.take_along_axis(kept_sorted, inv, axis=-1)
+        logits = jnp.where(kept, logits, NEG_INF)
     return jax.random.categorical(rng, logits, axis=-1).astype(jnp.int32)

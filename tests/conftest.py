@@ -1,5 +1,7 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
 see the real single CPU device; only launch/dryrun.py forces 512."""
+import os
+
 import numpy as np
 import pytest
 
@@ -7,3 +9,19 @@ import pytest
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+def import_hypothesis():
+    """Import hypothesis for property tests.
+
+    Locally the property variants skip when hypothesis isn't installed
+    (runtime needs only jax + numpy). In CI the skip would silently shrink
+    coverage, so the workflow sets ``CI_REQUIRE_HYPOTHESIS=1`` and a missing
+    install becomes a hard FAILURE instead of an importorskip."""
+    if os.environ.get("CI_REQUIRE_HYPOTHESIS"):
+        import hypothesis
+        return hypothesis
+    return pytest.importorskip(
+        "hypothesis",
+        reason="property tests need hypothesis "
+               "(pip install -r requirements-dev.txt)")

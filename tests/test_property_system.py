@@ -6,9 +6,9 @@ import numpy as np
 import pytest
 from dataclasses import replace
 
-pytest.importorskip("hypothesis",
-                    reason="property tests need hypothesis "
-                           "(pip install -r requirements-dev.txt)")
+from conftest import import_hypothesis
+
+import_hypothesis()   # hard requirement in CI (CI_REQUIRE_HYPOTHESIS=1)
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_config

@@ -56,3 +56,24 @@ def test_scan_corrections_present_where_expected():
     assert c2["flops"] > 0                        # WKV time scan
     c3 = roofline.scan_corrections(cfg_d, get_shape("decode_32k"), "decode")
     assert c3["bytes"] > 0                        # chunked pool scan
+
+
+def test_prefix_sharing_and_stall_models():
+    """PR-5 serving models: shared-prefix byte saving scales with
+    (sharers-1)·full-pages, and the chunked stall model matches the
+    engine's charge-the-padded-chunk accounting."""
+    from repro.serving.cache import page_bytes
+
+    cfg = get_config("starcoder2-3b")
+    pt, prefix = 16, 56                      # 3 full pages + 8-token tail
+    saved = roofline.prefix_shared_pool_bytes_saved(cfg, pt, prefix, 4)
+    assert saved == 3 * 3 * page_bytes(cfg, pt)
+    assert roofline.prefix_shared_pool_bytes_saved(cfg, pt, prefix, 1) == 0
+    m = roofline.chunked_prefill_stall_model(60, 8, 1e-3)
+    assert m["solo_stall_s"] == pytest.approx(60e-3)
+    # padded chunks: the per-step stall is the FULL chunk, prompt < chunk
+    # included (the engine executes the padded forward either way)
+    assert m["chunked_stall_per_step_s"] == pytest.approx(8e-3)
+    assert roofline.chunked_prefill_stall_model(3, 8, 1e-3)[
+        "chunked_stall_per_step_s"] == pytest.approx(8e-3)
+    assert m["first_token_extra_steps"] == 7.0

@@ -166,6 +166,26 @@ def test_occupancy_accounting():
     assert 0.0 < occ.slots <= 1.0
     assert occ.slots > 0.8                         # queue kept slots busy
     assert occ.pages is None                       # contiguous cache
+    # sharing/chunking stats are paged/chunked-mode-only: the contiguous
+    # one-shot scheduler must report None, not zeros masquerading as data
+    assert occ.pages_owned is None and occ.pages_shared is None
+    assert occ.prefill_tokens_per_step is None
+
+
+def test_one_shot_admission_latency_bookkeeping():
+    """Without chunking, the first sampled token lands in the same engine
+    step the admission began (first_token_step == prefill_step), and
+    shared_prefix_tokens stays 0 outside sharing mode — the baselines the
+    chunked-prefill and prefix-sharing stats are measured against."""
+    sched = Scheduler(CFG, PARAMS, n_slots=1, max_total_tokens=MAX_TOTAL)
+    req = Request(prompt=_prompt(14, seed=25), max_new_tokens=4)
+    sched.submit(req)
+    sched.run()
+    assert req.done
+    assert req.prefill_step >= 0
+    assert req.first_token_step == req.prefill_step
+    assert req.shared_prefix_tokens == 0
+    assert sched.max_prefill_step_tokens == 0      # no chunked tokens ran
 
 
 def test_admit_rejects_oversized_request():

@@ -6,13 +6,22 @@ invariants the paged pools stand on:
     match running it alone through the contiguous lockstep path (on CPU the
     paged read path is a gather view, so this is exact);
   * NO PAGE LEAKS — after all retirements the free list holds every page
-    again and no reservations remain;
-  * NO BLOCK-TABLE ALIASING — at every step, no physical page is mapped by
-    two live slots (in the device block table or the host mirrors), and
-    host mirrors track the device counters exactly.
+    again and no reservations remain; under PREFIX SHARING the only
+    post-drain holders are the prefix index's cache entries, and clearing
+    the index restores the full free list (zero refcount leaks);
+  * NO ILLEGAL ALIASING — at every step, a physical page mapped by two
+    live slots must be a SHARED page with a refcount covering every
+    holder (with sharing off: no aliasing at all), host mirrors track the
+    device counters exactly, and no compaction ever writes a refcount>1
+    page (``debug_invariants=True`` asserts the write-target rule inside
+    ``Scheduler._provision_pages`` right before every decode).
 
-A hypothesis variant fuzzes the trace parameters behind the repo's usual
-importorskip; the numpy-seeded traces below always run.
+Chunked-prefill traces additionally assert the decode-stall budget: no
+engine step ever ran more than ``prefill_chunk`` prefill tokens.
+
+A hypothesis variant fuzzes the trace parameters; locally it skips without
+hypothesis, in CI it is a hard requirement (CI_REQUIRE_HYPOTHESIS=1 — see
+conftest.import_hypothesis). The numpy-seeded traces below always run.
 """
 import collections
 
@@ -21,7 +30,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import import_hypothesis
 from repro.configs import get_config
+from repro.kernels.sparse_decode import validate_block_table
 from repro.models import init_params
 from repro.serving.engine import Request, Scheduler, decode_step, prefill
 
@@ -54,8 +65,12 @@ def _solo_tokens(prompt_key, n_new, eos):
     return toks
 
 
-def _make_trace(seed, n_requests):
+def _make_trace(seed, n_requests, prefix_len=0):
+    """``prefix_len > 0`` prepends one seeded common prefix to every prompt
+    (the system-prompt pattern prefix sharing exists for)."""
     rng = np.random.default_rng(seed)
+    prefix = tuple(int(t) for t in rng.integers(0, CFG.vocab_size,
+                                                size=prefix_len))
     arrivals = np.cumsum(rng.poisson(1.2, size=n_requests)).astype(int)
     reqs = []
     for i in range(n_requests):
@@ -64,7 +79,7 @@ def _make_trace(seed, n_requests):
         # lazy page draw; the rest are random
         plen = PROMPT_LENS[-1] if i == 0 \
             else int(rng.choice(PROMPT_LENS))
-        prompt = tuple(int(t) for t in rng.integers(
+        prompt = prefix + tuple(int(t) for t in rng.integers(
             0, CFG.vocab_size, size=plen))
         gen = GEN_LENS[-1] if i == 0 else int(rng.choice(GEN_LENS))
         # an in-vocab EOS that random prompts are unlikely to hit, except
@@ -81,14 +96,32 @@ def _make_trace(seed, n_requests):
 
 
 def _assert_no_aliasing(sched):
+    """With sharing OFF: no physical page mapped twice. With sharing ON:
+    any page aliased by several holders must carry a refcount covering all
+    of them (live-slot mappings + one possible prefix-index entry), and
+    every mapped page must be live (refcount >= 1)."""
     live = [s for s, r in enumerate(sched.slots) if r is not None]
-    # host-side drawn pages must be disjoint across live slots
-    drawn = [p for s in live for p in sched._slot_pages[s]]
-    assert len(drawn) == len(set(drawn)), f"host page aliasing: {drawn}"
-    # device block-table rows of live slots must not share mapped entries
+    pend = list(getattr(sched, "_pending", ()))
+    # host-side page lists across live AND pending (chunked) slots
+    counts = collections.Counter(
+        p for s in live + pend for p in sched._slot_pages[s])
     bt = np.asarray(sched.cache["block_table"])
-    mapped = [p for s in live for p in bt[s] if p >= 0]
-    assert len(mapped) == len(set(mapped)), f"block-table aliasing: {mapped}"
+    bt_counts = collections.Counter(int(p) for s in live for p in bt[s]
+                                    if p >= 0)
+    for src, cnt in (("host", counts), ("block-table", bt_counts)):
+        for p, n in cnt.items():
+            if n > 1:
+                assert sched.share_prefix, f"{src} aliasing w/o sharing: {p}"
+                assert sched.allocator.refcount(p) >= n, \
+                    f"{src} page {p}: {n} holders, refcount " \
+                    f"{sched.allocator.refcount(p)}"
+            assert sched.allocator.refcount(p) >= 1, f"{src} maps dead {p}"
+    # the kernels' read-side contract: mapped entries are real pages and
+    # every live row covers its compressed depth
+    nc_rows = np.asarray([sched._n_comp[s] if s in live else 0
+                          for s in range(sched.n_slots)])
+    validate_block_table(bt, sched.n_pages + 1,
+                         page_tokens=sched.page_tokens, n_compressed=nc_rows)
     # host mirrors track the device counters exactly
     w = np.asarray(sched.cache["w_len"])
     nc = np.asarray(sched.cache["n_compressed"])
@@ -97,11 +130,14 @@ def _assert_no_aliasing(sched):
         assert sched._n_comp[s] == int(nc[s])
 
 
-def _run_trace(seed, n_requests, page_tokens, n_slots=2, n_pages=None):
-    arrivals, reqs = _make_trace(seed, n_requests)
+def _run_trace(seed, n_requests, page_tokens, n_slots=2, n_pages=None,
+               share_prefix=False, prefill_chunk=None, prefix_len=0):
+    arrivals, reqs = _make_trace(seed, n_requests, prefix_len=prefix_len)
     sched = Scheduler(CFG, PARAMS, n_slots=n_slots,
                       max_total_tokens=MAX_TOTAL,
-                      page_tokens=page_tokens, n_pages=n_pages)
+                      page_tokens=page_tokens, n_pages=n_pages,
+                      share_prefix=share_prefix, prefill_chunk=prefill_chunk,
+                      debug_invariants=True)
     i = 0
     guard = 0
     while i < n_requests or sched.has_work:
@@ -118,9 +154,16 @@ def _run_trace(seed, n_requests, page_tokens, n_slots=2, n_pages=None):
 def _check_drained(sched, reqs):
     assert all(r.done for r in reqs)
     assert sched.slots == [None] * sched.n_slots
-    # no page leaked: free-list cardinality restored, nothing reserved
-    assert sched.allocator.in_use == 0
+    # no page leaked: nothing reserved; under sharing the prefix index may
+    # hold cached pages (exactly its entries, counted uniquely) and must
+    # give the whole free list back when cleared — zero refcount leaks
     assert sched.allocator.n_reserved == 0
+    if sched.share_prefix:
+        held = sched.prefix.held_pages
+        assert sched.allocator.in_use == len(set(held)), \
+            (sched.allocator.in_use, held)
+        sched.prefix.clear(sched.allocator)
+    assert sched.allocator.in_use == 0
     assert sorted(sched.allocator._free) == list(range(sched.n_pages))
     bt = np.asarray(sched.cache["block_table"])
     assert (bt < 0).all(), "retired slots left mapped block-table rows"
@@ -147,22 +190,70 @@ def test_fuzz_overcommitted_pool_still_drains():
     _check_drained(sched, reqs)
 
 
+def test_fuzz_shared_prefix_trace():
+    """Common-prefix trace with sharing on: solo-equivalent outputs, later
+    arrivals actually alias prefix pages, refcount leaks zero after the
+    drain (and ``debug_invariants`` asserts every decode's write target has
+    refcount 1 — the CoW rule — throughout)."""
+    sched, reqs = _run_trace(seed=3, n_requests=5, page_tokens=TT,
+                             share_prefix=True, prefix_len=40)
+    _check_drained(sched, reqs)
+    assert sched.prefix.hits > 0, "no prefix page was ever shared"
+    assert sched.shared_admissions >= 1
+    assert any(r.shared_prefix_tokens > 0 for r in reqs)
+
+
+def test_fuzz_shared_prefix_cow_fires():
+    """With page_tokens=2·tile the shared prefix ends in a partially-filled
+    boundary page, so compactions past it MUST copy-on-write (the
+    write-target assert inside the scheduler would trip otherwise)."""
+    sched, reqs = _run_trace(seed=7, n_requests=4, page_tokens=2 * TT,
+                             share_prefix=True, prefix_len=40)
+    _check_drained(sched, reqs)
+    assert sched.cow_count >= 1, "boundary page was never copied-on-write"
+
+
+def test_fuzz_chunked_prefill_trace():
+    """Chunked admissions interleaved with decode: same invariants, plus
+    the decode-stall budget — no engine step ran more than prefill_chunk
+    prefill tokens."""
+    sched, reqs = _run_trace(seed=4, n_requests=5, page_tokens=TT,
+                             prefill_chunk=8)
+    _check_drained(sched, reqs)
+    assert 0 < sched.max_prefill_step_tokens <= 8
+
+
+def test_fuzz_shared_and_chunked_trace():
+    """Sharing and chunked prefill composed on one trace."""
+    sched, reqs = _run_trace(seed=8, n_requests=5, page_tokens=TT,
+                             share_prefix=True, prefill_chunk=8,
+                             prefix_len=40)
+    _check_drained(sched, reqs)
+    assert sched.prefix.hits > 0
+    assert 0 < sched.max_prefill_step_tokens <= 8
+
+
 def test_fuzz_hypothesis_variant():
-    """Property-based trace fuzz (skipped without hypothesis, like
-    tests/test_property_system.py)."""
-    pytest.importorskip("hypothesis",
-                        reason="property fuzz needs hypothesis "
-                               "(pip install -r requirements-dev.txt)")
+    """Property-based trace fuzz over page size, arrival pattern, sharing
+    and chunking (locally skipped without hypothesis; in CI a hard
+    requirement via CI_REQUIRE_HYPOTHESIS=1)."""
+    import_hypothesis()
     from hypothesis import given, settings, strategies as st
 
-    @settings(max_examples=3, deadline=None)
+    @settings(max_examples=4, deadline=None)
     @given(seed=st.integers(min_value=10, max_value=10 ** 6),
            page_mult=st.sampled_from([1, 2]),
-           n_requests=st.integers(min_value=2, max_value=4))
-    def prop(seed, page_mult, n_requests):
+           n_requests=st.integers(min_value=2, max_value=4),
+           share=st.booleans(),
+           chunk=st.sampled_from([None, 8]))
+    def prop(seed, page_mult, n_requests, share, chunk):
         sched, reqs = _run_trace(seed, n_requests,
-                                 page_tokens=page_mult * TT)
+                                 page_tokens=page_mult * TT,
+                                 share_prefix=share, prefill_chunk=chunk,
+                                 prefix_len=40 if share else 0)
         _check_drained(sched, reqs)
+        if chunk is not None:
+            assert sched.max_prefill_step_tokens <= chunk
 
     prop()
 

@@ -3,9 +3,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-hypothesis = pytest.importorskip(
-    "hypothesis", reason="property tests need hypothesis "
-                         "(pip install -r requirements-dev.txt)")
+from conftest import import_hypothesis
+
+import_hypothesis()   # hard requirement in CI (CI_REQUIRE_HYPOTHESIS=1)
 from hypothesis import given, settings, strategies as st
 
 from repro.core.sparse_format import (compressed_bytes, compression_rate,
