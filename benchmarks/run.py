@@ -29,17 +29,27 @@ _ALIASES = {"kernel": "kernels"}          # pre-PR-2 suite name
 
 
 def main() -> None:
+    import inspect
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all")
     ap.add_argument("--out-dir", default=".",
                     help="directory for BENCH_<suite>.json files")
+    ap.add_argument("--smoke", action="store_true",
+                    help="shortened traces for CI gates (suites that "
+                         "support it); asserts still enforced")
     args = ap.parse_args()
     names = list(SUITES) if args.only == "all" else [
         _ALIASES.get(n, n) for n in args.only.split(",")]
+    os.makedirs(args.out_dir, exist_ok=True)
     print("name,us_per_call,derived")
     for n in names:
+        fn = SUITES[n]
+        kwargs = {}
+        if args.smoke and "smoke" in inspect.signature(fn).parameters:
+            kwargs["smoke"] = True
         common.drain_records()
-        SUITES[n](np.random.default_rng(0))
+        fn(np.random.default_rng(0), **kwargs)
         path = os.path.join(args.out_dir, f"BENCH_{n}.json")
         common.write_bench_json(path, common.drain_records())
 

@@ -32,9 +32,11 @@ def main():
     ap.add_argument("--dense", action="store_true",
                     help="disable Mustafar (dense-cache baseline)")
     ap.add_argument("--sparsity", type=float, default=0.7)
-    ap.add_argument("--page-tokens", type=int, default=0,
+    ap.add_argument("--page-tokens", default="0",
                     help="paged compressed pools: tokens per page (multiple "
-                         "of tile_tokens; 0 = contiguous per-slot pools)")
+                         "of tile_tokens; 0 = contiguous per-slot pools; "
+                         "'auto' = roofline-tuned page size, see "
+                         "repro.roofline.auto_page_tokens)")
     ap.add_argument("--n-pages", type=int, default=0,
                     help="physical page-pool size (0 = full contiguous "
                          "capacity; smaller overcommits under the page-"
@@ -53,8 +55,29 @@ def main():
                          "interleaved with decode steps (0 = one-shot solo "
                          "prefill; bounds the per-step decode stall to N "
                          "prompt tokens)")
+    ap.add_argument("--prefill-budget", type=int, default=0,
+                    help="per-step prefill-token budget across ALL "
+                         "admissions (0 = one chunk; requires "
+                         "--prefill-chunk)")
+    ap.add_argument("--pack-prefill", action="store_true",
+                    help="pack chunks from multiple waiting admissions "
+                         "into one batched prefill call per step "
+                         "(Sarathi-style; requires --prefill-chunk — "
+                         "collapses TTFT under bursts at the same "
+                         "per-step stall budget)")
+    ap.add_argument("--fused-compaction", action="store_true",
+                    help="compress-as-you-evict: retire window tile "
+                         "groups into their destination page in the "
+                         "decode dispatch's epilogue instead of a "
+                         "separate compaction launch (requires "
+                         "--page-tokens)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.page_tokens != "auto":
+        try:
+            args.page_tokens = int(args.page_tokens)
+        except ValueError:
+            ap.error("--page-tokens takes an integer or 'auto'")
 
     cfg = get_config(args.arch).reduced()
     if args.dense:
@@ -70,12 +93,24 @@ def main():
         ap.error("--n-pages only bounds PAGED pools; pass --page-tokens too")
     if args.share_prefix and not args.page_tokens:
         ap.error("--share-prefix aliases PAGED pools; pass --page-tokens too")
+    if args.fused_compaction and not args.page_tokens:
+        ap.error("--fused-compaction scatters into PAGED pools; pass "
+                 "--page-tokens too")
+    if (args.pack_prefill or args.prefill_budget) and not args.prefill_chunk:
+        ap.error("--pack-prefill/--prefill-budget require --prefill-chunk")
     sched = Scheduler(cfg, params, n_slots=args.slots,
                       max_total_tokens=max_total,
                       page_tokens=args.page_tokens or None,
                       n_pages=args.n_pages or None,
                       share_prefix=args.share_prefix,
-                      prefill_chunk=args.prefill_chunk or None)
+                      prefill_chunk=args.prefill_chunk or None,
+                      prefill_budget=args.prefill_budget or None,
+                      pack_prefill=args.pack_prefill,
+                      fused_compaction=args.fused_compaction)
+    if args.page_tokens == "auto":
+        print(f"# page_tokens=auto -> {sched.page_tokens} "
+              f"(roofline-tuned for {args.slots} slots x "
+              f"{max_total} tokens)")
 
     # Poisson arrival trace with ragged prompts (a few length buckets so the
     # per-length prefill executables amortize across requests); with
@@ -123,15 +158,20 @@ def main():
               f"copy-on-writes; occupancy owned={occ.pages_owned*100:.1f}% "
               f"shared={occ.pages_shared*100:.1f}%)")
     if args.prefill_chunk:
-        ttft = [r.first_token_step - r.arrival_step for r in sched.finished]
+        mode_note = ", packed" if args.pack_prefill else ""
         print(f"  chunked prefill:   <= {sched.max_prefill_step_tokens} "
-              f"prefill tokens/step (budget {args.prefill_chunk}); "
-              f"mean {occ.prefill_tokens_per_step:.1f} tok/step; "
-              f"ttft p50={int(np.median(ttft))} steps")
+              f"prefill tokens/step (budget {sched.prefill_budget}"
+              f"{mode_note}); "
+              f"mean {occ.prefill_tokens_per_step:.1f} tok/step, "
+              f"stall p50={occ.prefill_stall_p50:.0f} "
+              f"p99={occ.prefill_stall_p99:.0f}")
+    if occ.ttft_p50 is not None:
+        print(f"  ttft (steps):      p50={occ.ttft_p50:.0f} "
+              f"p99={occ.ttft_p99:.0f}")
     print(f"  latency (steps):   p50={int(np.median(lat))} "
           f"max={int(np.max(lat))}")
     acct = cache_hbm_bytes(cfg, args.slots, max_total,
-                           page_tokens=args.page_tokens or None,
+                           page_tokens=sched.page_tokens,
                            n_pages=args.n_pages or None)
     print(f"  cache bytes: dense={acct['dense']/2**20:.1f}MiB "
           f"mustafar={acct['mustafar']/2**20:.1f}MiB "

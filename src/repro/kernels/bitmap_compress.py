@@ -34,6 +34,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 
+from jax.experimental.pallas import tpu as pltpu
+
 from repro.core.sparse_format import pad_to_words
 
 TILE_T = 64  # token rows per grid step (default; see mustafar_compress)
@@ -97,17 +99,25 @@ def _compact_gather(x: jax.Array, keep: jax.Array, k: int) -> jax.Array:
     return jnp.take_along_axis(x, idx, axis=1)
 
 
-def _compress_kernel(x_ref, vals_ref, bm_ref, *, k: int, d: int):
-    x = x_ref[0]                                          # [T, d_pad]
+def _compress_tile(x: jax.Array, k: int, d: int):
+    """One [T, d_pad] tile -> (values [T, k] in x.dtype, words [T, d_pad/32]
+    uint32). Shared by the standalone compress kernel and the fused
+    compress-and-scatter epilogue below."""
     T, d_pad = x.shape
     keep = _topk_threshold_keep(x, k, d)
-    vals_ref[0] = _compact_gather(x, keep, k).astype(vals_ref.dtype)
-
-    # --- bit-packing into uint32 words ---
+    vals = _compact_gather(x, keep, k)
     n_words = d_pad // 32
     bits = keep.astype(jnp.uint32).reshape(T, n_words, 32)
     shifts = jnp.arange(32, dtype=jnp.uint32)[None, None, :]
-    bm_ref[0] = jnp.sum(bits << shifts, axis=2, dtype=jnp.uint32)
+    words = jnp.sum(bits << shifts, axis=2, dtype=jnp.uint32)
+    return vals, words
+
+
+def _compress_kernel(x_ref, vals_ref, bm_ref, *, k: int, d: int):
+    x = x_ref[0]                                          # [T, d_pad]
+    vals, words = _compress_tile(x, k, d)
+    vals_ref[0] = vals.astype(vals_ref.dtype)
+    bm_ref[0] = words
 
 
 @functools.partial(jax.jit, static_argnames=("k", "interpret", "tile_t"))
@@ -146,3 +156,102 @@ def mustafar_compress(x: jax.Array, k: int, *, interpret: bool = False,
         interpret=interpret,
     )(x)
     return vals, bm
+
+
+# ----------------------------------------------------------------------
+# fused compaction epilogue: compress-as-you-evict straight into the paged
+# pools. The retiring window tiles are already in VMEM when the decode
+# kernel's epilogue runs, so instead of a standalone compress (HBM round
+# trip) followed by a scan of per-slot dynamic_update_slices, ONE dispatch
+# compresses each slot's K and V tiles and DMAs the packed values + bitmap
+# words directly into their destination page. The pool leaves are ALIASED
+# input->output (donated): grid cells write only their own [tile, ·] block
+# and every untouched block keeps its bytes — the pallas analogue of the
+# paper's in-place CUDA cache-pointer update.
+
+def _compress_scatter_kernel(phys_ref, offt_ref, kx_ref, vx_ref,
+                             ckv_in, ckb_in, cvv_in, cvb_in,
+                             ckv_ref, ckb_ref, cvv_ref, cvb_ref, *,
+                             kk: int, kv: int, d: int):
+    del phys_ref, offt_ref, ckv_in, ckb_in, cvv_in, cvb_in  # index-map/alias
+    vals, words = _compress_tile(kx_ref[0, 0], kk, d)
+    ckv_ref[0, 0] = vals.astype(ckv_ref.dtype)
+    ckb_ref[0, 0] = words
+    vals, words = _compress_tile(vx_ref[0, 0], kv, d)
+    cvv_ref[0, 0] = vals.astype(cvv_ref.dtype)
+    cvb_ref[0, 0] = words
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def mustafar_compress_scatter(k_tile: jax.Array, v_tile: jax.Array,
+                              ck_vals: jax.Array, ck_bm: jax.Array,
+                              cv_vals: jax.Array, cv_bm: jax.Array,
+                              phys: jax.Array, off_tile: jax.Array, *,
+                              interpret: bool = False):
+    """Fused tile-group retirement: compress + scatter in ONE dispatch.
+
+    ``k_tile``/``v_tile`` [B, Hkv, tt, d] are the retiring window tiles;
+    pool leaves are page-major [n_phys, Hkv, page_tokens, ·]. ``phys`` [B]
+    is each row's pre-resolved physical destination page (the caller points
+    masked rows at the write-discard scratch page) and ``off_tile`` [B] the
+    in-page TILE index (token offset // tt — compaction offsets are always
+    tile-aligned). Returns the four updated pool leaves.
+
+    Scalar-prefetched ``phys``/``off_tile`` feed the OUTPUT index maps: grid
+    cell (b, h) compresses row b's head-h tiles and emits the packed values
+    and bitmap words straight into block (phys[b], h, off_tile[b]) of the
+    aliased pools. Rows sharing a destination (scratch) are legal — the
+    sequential grid makes the last write win, and scratch is never read.
+    Everything outside the visited blocks keeps its bytes via the aliasing,
+    so the two-dispatch path (``kops.compress`` + scan-of-DUS, kept as the
+    oracle) and this kernel produce bit-identical non-scratch pools
+    (tests/test_fused_compaction.py)."""
+    B, Hkv, tt, d = k_tile.shape
+    n_phys, _, pt, kk = ck_vals.shape
+    kv = cv_vals.shape[-1]
+    n_words = ck_bm.shape[-1]
+    d_pad = pad_to_words(d)
+    if d_pad != d:
+        pad = ((0, 0), (0, 0), (0, 0), (0, d_pad - d))
+        k_tile = jnp.pad(k_tile, pad)
+        v_tile = jnp.pad(v_tile, pad)
+    assert pt % tt == 0, (pt, tt)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, tt, d_pad), lambda b, h, ph, ot: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, tt, d_pad), lambda b, h, ph, ot: (b, h, 0, 0)),
+            pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
+            pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
+            pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
+            pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, tt, kk),
+                         lambda b, h, ph, ot: (ph[b], h, ot[b], 0)),
+            pl.BlockSpec((1, 1, tt, n_words),
+                         lambda b, h, ph, ot: (ph[b], h, ot[b], 0)),
+            pl.BlockSpec((1, 1, tt, kv),
+                         lambda b, h, ph, ot: (ph[b], h, ot[b], 0)),
+            pl.BlockSpec((1, 1, tt, n_words),
+                         lambda b, h, ph, ot: (ph[b], h, ot[b], 0)),
+        ],
+    )
+    kernel = functools.partial(_compress_scatter_kernel, kk=kk, kv=kv, d=d)
+    # inputs: 0=phys 1=off_tile 2=k_tile 3=v_tile 4..7=pool leaves; the
+    # leaves alias outputs 0..3 (donated — unvisited blocks keep their bytes)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct(ck_vals.shape, ck_vals.dtype),
+            jax.ShapeDtypeStruct(ck_bm.shape, ck_bm.dtype),
+            jax.ShapeDtypeStruct(cv_vals.shape, cv_vals.dtype),
+            jax.ShapeDtypeStruct(cv_bm.shape, cv_bm.dtype),
+        ],
+        input_output_aliases={4: 0, 5: 1, 6: 2, 7: 3},
+        interpret=interpret,
+    )(phys.astype(jnp.int32), off_tile.astype(jnp.int32),
+      k_tile, v_tile, ck_vals, ck_bm, cv_vals, cv_bm)

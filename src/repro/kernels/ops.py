@@ -55,6 +55,46 @@ def compress(x: jax.Array, k: int, *, use_pallas: Optional[bool] = None,
     return (vals.reshape(*lead, T, k), bm.reshape(*lead, T, bm.shape[-1]))
 
 
+def compress_scatter(k_tile: jax.Array, v_tile: jax.Array,
+                     ck_vals: jax.Array, ck_bm: jax.Array,
+                     cv_vals: jax.Array, cv_bm: jax.Array,
+                     phys: jax.Array, off: jax.Array, *,
+                     use_pallas: Optional[bool] = None):
+    """Fused tile-group retirement into paged pools (compress-as-you-evict).
+
+    ``k_tile``/``v_tile`` [B, Hkv, tt, d] retiring window tiles; pool leaves
+    [n_phys, Hkv, page_tokens, ·]; ``phys`` [B] pre-resolved destination
+    page per row (scratch page for masked rows); ``off`` [B] in-page TOKEN
+    offset (tile-aligned). Returns the four updated pool leaves.
+
+    On TPU this is ONE Pallas dispatch — the compressed values/bitmaps DMA
+    straight into their destination page blocks through scalar-prefetched
+    output index maps over aliased (donated) pools. Off-TPU the reference
+    compress feeds a single vectorized scatter — bit-identical to the
+    two-dispatch ``compress`` + scan-of-DUS oracle on every non-scratch
+    page (scratch rows may resolve duplicate writes in either order; the
+    scratch page is write-discard and never read)."""
+    B, Hkv, tt, d = k_tile.shape
+    kk = ck_vals.shape[-1]
+    kv = cv_vals.shape[-1]
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return bitmap_compress.mustafar_compress_scatter(
+            k_tile, v_tile, ck_vals, ck_bm, cv_vals, cv_bm,
+            phys, off // tt, interpret=not _on_tpu())
+    ck_v, ck_b = ref.mustafar_compress_ref(k_tile, kk)   # [B,Hkv,tt,·]
+    cv_v, cv_b = ref.mustafar_compress_ref(v_tile, kv)
+    idx_p = phys[:, None]                                # [B,1] page
+    idx_t = off[:, None] + jnp.arange(tt)[None, :]       # [B,tt] token rows
+    def scat(pool, tiles):
+        # advanced indices on dims 0/2 -> [B, tt, Hkv, c] value layout
+        return pool.at[idx_p, :, idx_t].set(
+            jnp.swapaxes(tiles, 1, 2).astype(pool.dtype))
+    return (scat(ck_vals, ck_v), scat(ck_bm, ck_b),
+            scat(cv_vals, cv_v), scat(cv_bm, cv_b))
+
+
 def _group_q(q: jax.Array, n_kv_heads: int):
     """[B, Hq, d] -> [B·Hkv, G, d] (query head h attends kv head h//G)."""
     B, Hq, d = q.shape

@@ -77,10 +77,41 @@ def main() -> int:
         interpret=True, tile_t=tile_t)
     np.testing.assert_array_equal(
         np.asarray(out_p), np.asarray(acc / jnp.maximum(l, 1e-30)))
+
+    # fused compress-scatter (the decode epilogue's compress-as-you-evict):
+    # one dispatch compresses retiring window tiles AND lands them at their
+    # destination page offsets through scalar-prefetched output index maps
+    # over aliased pools — must match the two-dispatch formulation
+    # (separate compress + scatter) bit-for-bit on non-scratch pages
+    from repro.kernels.ops import compress_scatter
+
+    B2, Hkv2, tt2 = 3, 2, 16
+    n_phys2 = 4                            # pages 0..2 + scratch page 3
+    kt = jnp.asarray(rng.normal(size=(B2, Hkv2, tt2, d)).astype(np.float32))
+    vt = jnp.asarray(rng.normal(size=(B2, Hkv2, tt2, d)).astype(np.float32))
+    nw = kb_.shape[-1]
+    pools2 = tuple(
+        jnp.asarray(rng.integers(0, 2 ** 31,
+                                 size=(n_phys2, Hkv2, pt, c)), jnp.uint32)
+        if bm else
+        jnp.asarray(rng.normal(size=(n_phys2, Hkv2, pt, c)), jnp.bfloat16)
+        for bm, c in ((False, k), (True, nw), (False, k), (True, nw)))
+    phys2 = jnp.asarray([2, n_phys2 - 1, 0], jnp.int32)  # row 1 -> scratch
+    off2 = jnp.asarray([tt2, 0, 0], jnp.int32)           # page-end fill
+    got = compress_scatter(kt, vt, *pools2, phys2, off2, use_pallas=True)
+    want = compress_scatter(kt, vt, *pools2, phys2, off2, use_pallas=False)
+    for name, g, w in zip(("ck_vals", "ck_bm", "cv_vals", "cv_bm"),
+                          got, want):
+        np.testing.assert_array_equal(
+            np.asarray(g.astype(jnp.float32))[:n_phys2 - 1],
+            np.asarray(w.astype(jnp.float32))[:n_phys2 - 1],
+            err_msg=f"compress-scatter {name} diverged")
+
     print("kernel smoke OK: compress -> fused decode round-trip matches "
           f"oracle (BH={BH}, T={T}, d={d}, k={k}, "
           f"n_valid={list(map(int, n_valid))}); paged decode bit-exact "
-          f"(page_tokens={pt}, {BH * MP} pages shuffled)")
+          f"(page_tokens={pt}, {BH * MP} pages shuffled); fused "
+          f"compress-scatter bit-exact (B={B2}, scratch-masked row)")
     return 0
 
 

@@ -167,6 +167,67 @@ def paged_metadata_bytes(cfg: ModelConfig, B: int, max_total_tokens: int,
     return n_attn * 4 * B * max_pages
 
 
+# Per-grid-step fixed cost of the paged decode kernel expressed in
+# HBM-byte equivalents (DMA issue + scalar-prefetch index math per tile).
+# Calibrated coarsely from the BENCH_paging trace: one extra tile costs
+# about as much as streaming 2 KiB at HBM bandwidth on a v5e-class part.
+TILE_OVERHEAD_BYTES = 2048
+
+
+def auto_page_tokens(cfg: ModelConfig, n_slots: int,
+                     max_total_tokens: int) -> int:
+    """Pick ``page_tokens`` for ``Scheduler(page_tokens="auto")``.
+
+    PAGE-SIZE TUNING GUIDE — the two costs that move with ``page_tokens``:
+
+    1. **Block-table metadata** (favors LARGE pages). Every attention layer
+       reads ``4 · B · max_pages`` bytes of int32 block table per decode
+       step (``paged_metadata_bytes``); halving the page count halves this
+       term. It also shrinks the allocator's per-step event list and the
+       single block-table splice.
+
+    2. **Tile shrink** (favors LARGE pages, saturating at ``TILE_T``). The
+       paged decode kernel tiles the compressed stream at
+       ``min(page_tokens, TILE_T)`` tokens — a page cannot span two tiles —
+       so small pages multiply the grid steps per row and each step pays a
+       fixed DMA-issue + index-translation cost (``TILE_OVERHEAD_BYTES``
+       byte-equivalents). Past ``TILE_T`` (128) larger pages buy nothing
+       here.
+
+    Pulling the other way, **fragmentation** (favors SMALL pages): a live
+    request strands ``~(page_tokens - 1) / 2`` compressed-token rows in its
+    partially-filled last page, and copy-on-write of a shared boundary page
+    copies a whole page. This is capacity, not steady-state traffic, so it
+    enters as a tiebreak: the smallest candidate within 2% of the best
+    modeled per-step cost wins.
+
+    Candidates are multiples of ``mustafar.tile_tokens`` (the pool layout
+    requires ``page_tokens % tile_tokens == 0``) up to
+    ``min(max_total_tokens, 2·TILE_T)``. Typical result: pages of one-to-a
+    few ``TILE_T`` — e.g. 128 for deep caches, smaller only when
+    ``max_total_tokens`` is itself small."""
+    from repro.kernels.sparse_decode import TILE_T
+    tt = cfg.mustafar.tile_tokens
+    n_attn = max(1, len(cfg.attention_layers()))
+    cands = []
+    pt = tt
+    while pt <= max(tt, min(max_total_tokens, 2 * TILE_T)):
+        cands.append(pt)
+        pt *= 2
+    costs = []
+    for pt in cands:
+        meta = paged_metadata_bytes(cfg, n_slots, max_total_tokens, pt)
+        tile_t = min(pt, TILE_T)
+        n_tiles = -(-max_total_tokens // tile_t)
+        tile = n_attn * n_slots * cfg.n_kv_heads * n_tiles * TILE_OVERHEAD_BYTES
+        costs.append(meta + tile)
+    best = min(costs)
+    for pt, c in zip(cands, costs):        # smallest page within 2% of best
+        if c <= 1.02 * best:
+            return pt
+    return cands[-1]
+
+
 def prefix_shared_pool_bytes_saved(cfg: ModelConfig, page_tokens: int,
                                    prefix_tokens: int, n_sharers: int) -> int:
     """Modeled pool-byte saving from prefix sharing (BENCH_prefix term).

@@ -200,6 +200,21 @@ class PageAllocator:
         self.peak_in_use = max(self.peak_in_use, self.in_use)
         return page
 
+    def draw_many(self, n: int) -> List[int]:
+        """Convert ``n`` reserved promises into physical page ids in ONE
+        transaction — the batched-provisioning path: the scheduler predicts
+        every compaction target for the upcoming step on the host, draws
+        all of them here, and applies the block-table updates as a single
+        device splice. Pages come off the free list in exactly the order
+        ``n`` repeated ``draw()`` calls would return them."""
+        assert 0 <= n <= self.n_reserved, (n, self.n_reserved)
+        self.n_reserved -= n
+        pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            self._ref[p] = 1
+        self.peak_in_use = max(self.peak_in_use, self.in_use)
+        return pages
+
     def refcount(self, page: int) -> int:
         assert 0 <= page < self.n_pages, page
         return self._ref[page]
@@ -673,6 +688,54 @@ def compact_layer_paged(cfg: ModelConfig, lc: Dict[str, jax.Array],
     out["k_win"] = jnp.where(wmask, jnp.roll(lc["k_win"], -tt, axis=2),
                              lc["k_win"])
     out["v_win"] = jnp.where(wmask, jnp.roll(lc["v_win"], -tt, axis=2),
+                             lc["v_win"])
+    return out
+
+
+def compact_layer_paged_fused(cfg: ModelConfig, lc: Dict[str, jax.Array],
+                              n_compressed: jax.Array, block_table: jax.Array,
+                              need: jax.Array) -> Dict[str, jax.Array]:
+    """Fused-epilogue tile-group retirement into PAGED pools: the whole
+    PERIOD-STACKED layer cache in one compress-and-scatter dispatch.
+
+    Unlike ``compact_layer_paged`` (per-period under vmap: one compress
+    plus a scan of per-slot dynamic_update_slices), this resolves every
+    slot's destination page once and hands ``kops.compress_scatter`` the
+    period stack FOLDED into the kernel batch — leaf ``[n_periods, n_phys,
+    Hkv, pt, ·]`` reshapes to one pool ``[n_periods·n_phys, ...]`` and row
+    (p, b) targets ``phys[b] + p·n_phys`` — so a layer group's entire
+    retirement is a single dispatch writing straight into the destination
+    pages (each period's scratch page stays its own). Bit-identical to the
+    two-dispatch oracle on every non-scratch page
+    (tests/test_fused_compaction.py)."""
+    m = cfg.mustafar
+    tt = m.tile_tokens
+    P, n_phys, _, pt, _ = lc["ck_vals"].shape
+
+    lp = n_compressed // pt                            # [B] logical page
+    off = n_compressed % pt                            # [B] in-page offset
+    phys = jnp.take_along_axis(block_table, lp[:, None], axis=1)[:, 0]
+    ok = need & (phys >= 0)
+    phys = jnp.where(ok, jnp.clip(phys, 0, n_phys - 1), n_phys - 1)
+    off = jnp.where(ok, off, 0)
+    # fold periods into the batch: row (p, b) -> page phys[b] + p * n_phys
+    phys_pb = (phys[None, :] + n_phys * jnp.arange(P)[:, None]).reshape(-1)
+    off_pb = jnp.tile(off, P)
+
+    k_tile = lc["k_win"][:, :, :, :tt, :]              # [P,B,Hkv,tt,d]
+    v_tile = lc["v_win"][:, :, :, :tt, :]
+    fold = lambda a: a.reshape((-1,) + a.shape[2:])
+    pools = [fold(lc[name]) for name in _POOL_KEYS]
+    new_pools = kops.compress_scatter(
+        fold(k_tile), fold(v_tile), *pools, phys_pb, off_pb)
+
+    out = dict(lc)
+    for name, pool in zip(_POOL_KEYS, new_pools):
+        out[name] = pool.reshape(lc[name].shape)
+    wmask = need.reshape((1, -1, 1, 1, 1))
+    out["k_win"] = jnp.where(wmask, jnp.roll(lc["k_win"], -tt, axis=3),
+                             lc["k_win"])
+    out["v_win"] = jnp.where(wmask, jnp.roll(lc["v_win"], -tt, axis=3),
                              lc["v_win"])
     return out
 

@@ -219,7 +219,8 @@ def _attn_decode(bp, h, cfg: ModelConfig, lc, position, w_len, n_compressed,
 
 
 def decode_step(params, token: jax.Array, cache, cfg: ModelConfig,
-                active: Optional[jax.Array] = None):
+                active: Optional[jax.Array] = None,
+                fused_compaction: bool = False):
     """token [B] -> (logits [B, V], new cache). One step for the batch.
 
     Every slot advances independently: per-sequence [B] counters, per-slot
@@ -227,7 +228,15 @@ def decode_step(params, token: jax.Array, cache, cfg: ModelConfig,
     freezes the counters of empty slots — their rows still flow through the
     network (static shapes) but their cache state does not advance, so a
     scheduler can decode a partially-occupied batch and later reuse the
-    slot via ``prefill_into_slot``."""
+    slot via ``prefill_into_slot``.
+
+    ``fused_compaction`` (static; paged caches only) switches tile-group
+    retirement to the single-dispatch compress-and-scatter path
+    (``cache.compact_layer_paged_fused``): the compressed tiles are
+    emitted straight into their destination pool pages from the same
+    kernel launch instead of a separate compress + scan-of-DUS pair. The
+    two-dispatch path stays the bit-exactness oracle
+    (tests/test_fused_compaction.py)."""
     B = token.shape[0]
     m = cfg.mustafar
     period = structural_period(cfg)
@@ -258,7 +267,13 @@ def decode_step(params, token: jax.Array, cache, cfg: ModelConfig,
             for j in range(period):
                 lc = blocks[j]
                 if cfg.layer_kind(j) == "attn":
-                    if block_table is not None:
+                    if block_table is not None and fused_compaction:
+                        # one fused dispatch covers the WHOLE period stack:
+                        # periods fold into the kernel batch instead of
+                        # vmapping the two-dispatch pair per period
+                        lc = cache_mod.compact_layer_paged_fused(
+                            cfg, lc, n_comp, block_table, need)
+                    elif block_table is not None:
                         lc = jax.vmap(lambda one: cache_mod.compact_layer_paged(
                             cfg, one, n_comp, block_table, need))(lc)
                     else:
@@ -349,25 +364,33 @@ def prefill_chunk_supported(cfg: ModelConfig) -> bool:
             and all(cfg.layer_kind(j) == "attn" for j in range(period)))
 
 
-def init_chunk_carry(cfg: ModelConfig, T_buf: int):
-    """Zeroed per-layer dense K/V carry for one chunked prefill: a tuple
-    over period positions of {"k","v"} leaves [n_periods, 1, T_buf, Hkv, d]
-    (qkv_proj layout — batch 1, the admission is always solo). The buffer is
-    TRANSIENT: it lives only until the prefill's last chunk, then the usual
-    prune+compress splice runs and the buffer is dropped — it never counts
-    against the compressed pool budget."""
+def init_chunk_carry(cfg: ModelConfig, T_buf: int, batch: int = 1):
+    """Zeroed per-layer dense K/V carry for chunked prefill: a tuple over
+    period positions of {"k","v"} leaves [n_periods, batch, T_buf, Hkv, d]
+    (qkv_proj layout — batch 1 for a solo admission, ``n_slots`` lanes for
+    the packed multi-admission path). The buffer is TRANSIENT: it lives
+    only until the prefill's last chunk, then the usual prune+compress
+    splice runs and the buffer is dropped — it never counts against the
+    compressed pool budget."""
     period = structural_period(cfg)
     n_periods = cfg.n_layers // period
     dt = cdtype(cfg)
-    shp = (n_periods, 1, T_buf, cfg.n_kv_heads, cfg.d_head)
+    shp = (n_periods, batch, T_buf, cfg.n_kv_heads, cfg.d_head)
     return tuple({"k": jnp.zeros(shp, dt), "v": jnp.zeros(shp, dt)}
                  for _ in range(period))
 
 
 def prefill_chunk_step(params, chunk_tokens: jax.Array, kv_carry,
                        offset: jax.Array, cfg: ModelConfig):
-    """One prefill chunk: tokens [1, C] at absolute positions
-    ``offset + arange(C)`` -> (logits [1, C, V], updated kv_carry).
+    """One prefill chunk: tokens [B, C] at absolute positions
+    ``offset + arange(C)`` -> (logits [B, C, V], updated kv_carry).
+
+    ``offset`` is a scalar (solo admission, B == 1) or a [B] vector of
+    PER-ROW offsets: the packed multi-admission path runs one chunk from
+    each of several in-flight prefills as independent batch lanes of a
+    single call (Sarathi-style packing — every op below is row-independent,
+    so each lane's math is bit-identical to its solo-chunked run; asserted
+    in tests/test_packed_prefill.py).
 
     Identical per-position math to ``prefill`` (same projections, RoPE at
     the same absolute offsets, same fp32 softmax) with the chunk's K/V
@@ -377,7 +400,11 @@ def prefill_chunk_step(params, chunk_tokens: jax.Array, kv_carry,
     B, C = chunk_tokens.shape
     x = embed_tokens(params["embed"], chunk_tokens, cfg)
     x = shard_activation(x, DP, None, None)
-    positions = offset + jnp.arange(C)[None, :]
+    packed = getattr(offset, "ndim", 0) == 1       # per-lane offsets [B]
+    if packed:
+        positions = offset[:, None] + jnp.arange(C)[None, :]
+    else:
+        positions = offset + jnp.arange(C)[None, :]
     period = structural_period(cfg)
 
     def body(carry, xs):
@@ -388,10 +415,18 @@ def prefill_chunk_step(params, chunk_tokens: jax.Array, kv_carry,
             bp, kc = bp_period[j], kc_period[j]
             h = norm_apply(bp["norm1"], x, cfg.norm)
             q, k, v = attn.qkv_proj(bp["mixer"], h, cfg, positions)
-            k_buf = jax.lax.dynamic_update_slice(
-                kc["k"], k.astype(kc["k"].dtype), (0, offset, 0, 0))
-            v_buf = jax.lax.dynamic_update_slice(
-                kc["v"], v.astype(kc["v"].dtype), (0, offset, 0, 0))
+            if packed:
+                # per-lane DUS: each lane appends its chunk at its own
+                # ragged offset into its own carry rows
+                upd = jax.vmap(lambda buf, kk, off: jax.lax.dynamic_update_slice(
+                    buf, kk, (off, 0, 0)))
+                k_buf = upd(kc["k"], k.astype(kc["k"].dtype), offset)
+                v_buf = upd(kc["v"], v.astype(kc["v"].dtype), offset)
+            else:
+                k_buf = jax.lax.dynamic_update_slice(
+                    kc["k"], k.astype(kc["k"].dtype), (0, offset, 0, 0))
+                v_buf = jax.lax.dynamic_update_slice(
+                    kc["v"], v.astype(kc["v"].dtype), (0, offset, 0, 0))
             core = attn.prefix_causal_attention(q, k_buf, v_buf, positions,
                                                 cfg)
             x = x + attn.o_proj(bp["mixer"], core, cfg)
@@ -538,12 +573,27 @@ class Occupancy(NamedTuple):
     cannot chunk (``prefill_chunk_supported`` False) still reports its
     one-shot whole-prompt stalls here — the stat never claims a bound the
     engine didn't enforce. The per-step maximum is
-    ``Scheduler.max_prefill_step_tokens``."""
+    ``Scheduler.max_prefill_step_tokens``.
+
+    ``ttft_p50``/``ttft_p99`` are percentiles (in engine steps) of
+    time-to-first-token — ``first_token_step - arrival_step`` — over every
+    request that has produced a token so far (finished or still decoding).
+    ``prefill_stall_p50``/``prefill_stall_p99`` are percentiles of the
+    per-step executed prefill tokens over all engine steps, the
+    distribution whose max is ``max_prefill_step_tokens``; both are None
+    until a sample exists (and the stall pair whenever chunking is off).
+    Percentile tails, not just means, are what the packed-prefill path is
+    judged on: packing collapses the TTFT tail under bursts while leaving
+    the stall bound untouched."""
     slots: float
     pages: Optional[float] = None
     pages_owned: Optional[float] = None
     pages_shared: Optional[float] = None
     prefill_tokens_per_step: Optional[float] = None
+    ttft_p50: Optional[float] = None
+    ttft_p99: Optional[float] = None
+    prefill_stall_p50: Optional[float] = None
+    prefill_stall_p99: Optional[float] = None
 
 
 @dataclass
@@ -616,26 +666,44 @@ class Scheduler:
 
     CHUNKED PREFILL (``prefill_chunk=N``): every admission prefill runs as
     fixed-size chunks interleaved with decode steps (a short prompt is one
-    padded chunk) — at most N prefill tokens execute per engine step ACROSS
-    all admissions (the decode-stall budget; observed max in
-    ``max_prefill_step_tokens``, mean in
+    padded chunk) — at most ``prefill_budget`` prefill tokens execute per
+    engine step ACROSS all admissions (the decode-stall budget, defaulting
+    to one chunk; observed max in ``max_prefill_step_tokens``, mean in
     ``occupancy.prefill_tokens_per_step``). Chunks carry the prompt's dense
     per-layer K/V (transient — dropped at the splice) and are bit-identical
     to the one-shot prefill; see ``prefill_chunk_step``.
+
+    PACKED PREFILL (``pack_prefill=True``, requires chunking): instead of
+    advancing one admission per step, chunks from up to
+    ``prefill_budget // prefill_chunk`` in-flight admissions run as batch
+    lanes of ONE ``prefill_chunk_step`` call per step (Sarathi-style
+    packing over a shared [n_slots, T_buf] K/V carry — lane = slot). The
+    per-step executed-token bound is unchanged in budget terms, but the
+    admissions drain concurrently instead of serially, collapsing TTFT
+    under bursts. Admissions are packed fewest-remaining-chunks first
+    (ties FIFO) so short prompts — the TTFT-critical ones — finish
+    earliest. Every lane's math is row-independent, so packed prefills
+    stay bit-identical to solo-chunked ones.
     """
 
     def __init__(self, cfg: ModelConfig, params, n_slots: int,
                  max_total_tokens: int, seed: int = 0,
                  collect_logits: bool = False,
-                 page_tokens: Optional[int] = None,
+                 page_tokens=None,
                  n_pages: Optional[int] = None,
                  share_prefix: bool = False,
                  prefill_chunk: Optional[int] = None,
+                 prefill_budget: Optional[int] = None,
+                 pack_prefill: bool = False,
+                 fused_compaction: bool = False,
                  debug_invariants: bool = False):
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
         self.max_total = max_total_tokens
+        if page_tokens == "auto":
+            from repro.roofline import auto_page_tokens
+            page_tokens = auto_page_tokens(cfg, n_slots, max_total_tokens)
         self.page_tokens = page_tokens
         self.paged = page_tokens is not None
         if share_prefix and not self.paged:
@@ -643,6 +711,15 @@ class Scheduler:
                              "(pass page_tokens=...)")
         if prefill_chunk is not None and prefill_chunk <= 0:
             raise ValueError(f"prefill_chunk={prefill_chunk} must be positive")
+        if prefill_budget is not None:
+            if prefill_chunk is None:
+                raise ValueError("prefill_budget requires prefill_chunk")
+            if prefill_budget < prefill_chunk:
+                raise ValueError(
+                    f"prefill_budget={prefill_budget} below one chunk "
+                    f"({prefill_chunk}) — no admission could ever advance")
+        if pack_prefill and prefill_chunk is None:
+            raise ValueError("pack_prefill=True requires prefill_chunk")
         self.share_prefix = share_prefix
         self.debug_invariants = debug_invariants
         if self.paged:
@@ -664,13 +741,25 @@ class Scheduler:
                                                   # at least one prefix page
         self.cow_count = 0                        # copy-on-write events
         self.prefill_chunk = prefill_chunk
+        self.prefill_budget = (prefill_budget if prefill_budget is not None
+                               else prefill_chunk)
+        self.pack_prefill = pack_prefill
+        self.fused_compaction = fused_compaction
         self._can_chunk = (prefill_chunk is not None
                            and prefill_chunk_supported(cfg))
         self._pending: "collections.OrderedDict[int, _PendingPrefill]" = \
             collections.OrderedDict()
+        # packed-prefill lane carry (lane = slot), allocated on first use:
+        # one fixed [n_slots, T_buf] buffer keeps every packing step on a
+        # single jit executable regardless of which lanes are live
+        self._packed_carry = None
+        self._packed_T_buf = (-(-max_total_tokens // prefill_chunk)
+                              * prefill_chunk if self._can_chunk else 0)
         self.prefill_token_total = 0              # prefill tokens executed
         self.max_prefill_step_tokens = 0          # worst per-step stall seen
         self._step_prefill_tokens = 0             # running count, this step
+        self._stall_history: List[int] = []       # per-step executed prefill
+                                                  # tokens (percentile source)
         self.cache = cache_mod.init_cache(cfg, n_slots, max_total_tokens,
                                           page_tokens=page_tokens,
                                           n_pages=n_pages)
@@ -684,7 +773,8 @@ class Scheduler:
         self.decode_steps = 0
         self.busy_slot_steps = 0
         self._uid = 0
-        self._decode = jax.jit(partial(decode_step, cfg=cfg))
+        self._decode = jax.jit(partial(decode_step, cfg=cfg,
+                                       fused_compaction=fused_compaction))
         self._prefill = jax.jit(partial(prefill, cfg=cfg,
                                         max_total_tokens=max_total_tokens,
                                         plan_batch=n_slots),
@@ -749,7 +839,21 @@ class Scheduler:
         stall = None
         if self.prefill_chunk is not None:
             stall = self.prefill_token_total / max(1, self.step_count)
-        return Occupancy(slots, pages, owned, shared, stall)
+        import numpy as np
+        ttfts = [r.first_token_step - r.arrival_step
+                 for r in self.finished if r.first_token_step >= 0]
+        ttfts += [r.first_token_step - r.arrival_step
+                  for r in self.slots
+                  if r is not None and r.first_token_step >= 0]
+        t50 = t99 = s50 = s99 = None
+        if ttfts:
+            t50 = float(np.percentile(ttfts, 50))
+            t99 = float(np.percentile(ttfts, 99))
+        if self.prefill_chunk is not None and self._stall_history:
+            s50 = float(np.percentile(self._stall_history, 50))
+            s99 = float(np.percentile(self._stall_history, 99))
+        return Occupancy(slots, pages, owned, shared, stall,
+                         t50, t99, s50, s99)
 
     # ------------------------------------------------------------------
     def _sample_one(self, logits: jax.Array, req: Request) -> int:
@@ -808,12 +912,13 @@ class Scheduler:
             cache_mod.PAGE_UNMAPPED)
 
     def _provision_pages(self, active_flags: List[bool]) -> None:
-        """Host mirror of ``decode_step``'s per-slot counter logic: if the
-        upcoming step will compact a slot into a not-yet-mapped logical
-        page, draw one (from the reservation made at admission) and write
-        the block-table entry BEFORE the jitted decode fires.
+        """Host mirror of ``decode_step``'s per-slot counter logic: predict
+        every compaction the upcoming step will run, draw ALL the pages it
+        needs in one allocator transaction (``draw_many``), and write the
+        block-table entries as ONE device splice BEFORE the jitted decode
+        fires — the decode loop never round-trips per slot.
 
-        COPY-ON-WRITE: when the compaction target is already mapped but
+        COPY-ON-WRITE: when a compaction target is already mapped but
         SHARED (refcount > 1 — a prefix boundary page, or the slot's own
         boundary page the prefix index also caches), the page is immutable:
         a fresh page is drawn from the slot's own budget (the admission
@@ -832,6 +937,7 @@ class Scheduler:
         wbuf = m.local_window + tt
         will = [False] * len(active_flags)
         nc_pre = [0] * len(active_flags)       # pre-compaction depths: the
+        events = []                            # (is_cow, slot, lp, old_page)
         for slot, act in enumerate(active_flags):   # write target is
             if not act:                             # nc_pre // page_tokens
                 continue
@@ -842,26 +948,36 @@ class Scheduler:
                 if lp >= len(self._slot_pages[slot]):
                     assert self._slot_reserved[slot] > 0, \
                         "page budget exhausted mid-request (planner bug)"
-                    page = self.allocator.draw()
-                    self._slot_reserved[slot] -= 1
-                    self._slot_pages[slot].append(page)
-                    self.cache["block_table"] = \
-                        self.cache["block_table"].at[slot, lp].set(page)
+                    events.append((False, slot, lp, -1))
                 elif self.allocator.refcount(self._slot_pages[slot][lp]) > 1:
                     assert self._slot_reserved[slot] > 0, \
                         "no budget left for copy-on-write (planner bug)"
-                    old = self._slot_pages[slot][lp]
-                    new = self.allocator.draw()
-                    self._slot_reserved[slot] -= 1
-                    self.cache = cache_mod.copy_page(self.cache, old, new)
-                    self.allocator.release(old)
-                    self._slot_pages[slot][lp] = new
-                    self.cache["block_table"] = \
-                        self.cache["block_table"].at[slot, lp].set(new)
-                    self.cow_count += 1
+                    events.append((True, slot, lp,
+                                   self._slot_pages[slot][lp]))
                 self._n_comp[slot] += tt
                 self._w_len[slot] -= tt
             self._w_len[slot] += 1
+        if events:
+            # one free-list transaction for the whole step (page ids match
+            # what per-slot draw() calls would have assigned), then one
+            # block-table scatter. CoW events have refcount > 1, so the
+            # released old pages can never re-enter this step's free pops.
+            pages = self.allocator.draw_many(len(events))
+            rows, cols = [], []
+            for (is_cow, slot, lp, old), page in zip(events, pages):
+                self._slot_reserved[slot] -= 1
+                if is_cow:
+                    self.cache = cache_mod.copy_page(self.cache, old, page)
+                    self.allocator.release(old)
+                    self._slot_pages[slot][lp] = page
+                    self.cow_count += 1
+                else:
+                    self._slot_pages[slot].append(page)
+                rows.append(slot)
+                cols.append(lp)
+            self.cache["block_table"] = self.cache["block_table"].at[
+                jnp.asarray(rows, jnp.int32), jnp.asarray(cols, jnp.int32)
+            ].set(jnp.asarray(pages, jnp.int32))
         if self.debug_invariants:
             import numpy as np
 
@@ -1016,7 +1132,8 @@ class Scheduler:
                 self._pending[slot] = _PendingPrefill(
                     req=req, tokens=[int(t) for t in req.prompt], chunk=C,
                     T_buf=-(-T // C) * C,
-                    carry=init_chunk_carry(self.cfg, -(-T // C) * C),
+                    carry=(None if self.pack_prefill
+                           else init_chunk_carry(self.cfg, -(-T // C) * C)),
                     shared_pages=shared, shared_tokens=shared_tokens)
                 if self.paged:
                     self._slot_pages[slot] = list(shared)
@@ -1048,16 +1165,24 @@ class Scheduler:
 
     # ------------------------------------------------------------------
     def _run_prefill_chunks(self) -> None:
-        """Advance pending chunked prefills by at most ``prefill_chunk``
+        """Advance pending chunked prefills by at most ``prefill_budget``
         prefill tokens of EXECUTED COMPUTE this engine step (the
-        decode-stall budget), oldest admission first; completed prefills
-        splice in and go active for the decode that follows.
+        decode-stall budget); completed prefills splice in and go active
+        for the decode that follows.
 
         The budget charges the full padded chunk each jitted step actually
         executes — a ragged final chunk of 3 real tokens still runs a
         ``prefill_chunk``-token forward — so the bound holds in wall-clock
-        terms, not just in prompt-token bookkeeping."""
-        budget = self.prefill_chunk
+        terms, not just in prompt-token bookkeeping.
+
+        Unpacked (default): admissions advance oldest-first, one chunk per
+        jitted call, until the budget is spent. Packed
+        (``pack_prefill=True``): the chunks selected this step run as batch
+        lanes of ONE call — see ``_run_prefill_chunks_packed``."""
+        if self.pack_prefill and self._can_chunk:
+            self._run_prefill_chunks_packed()
+            return
+        budget = self.prefill_budget
         while self._pending and budget > 0:
             slot, pend = next(iter(self._pending.items()))
             T = len(pend.tokens)
@@ -1077,6 +1202,67 @@ class Scheduler:
             if pend.done >= T:
                 del self._pending[slot]
                 self._complete_prefill(slot, pend)
+
+    def _run_prefill_chunks_packed(self) -> None:
+        """Greedy budget fill: packed ``prefill_chunk_step`` calls until
+        the step's ``prefill_budget`` is spent or no admission is pending.
+        Each call advances up to ``budget_remaining // prefill_chunk``
+        in-flight admissions by one chunk as batch lanes; when FEWER
+        admissions are pending than the budget covers, the loop issues
+        further calls so the same admissions advance additional chunks —
+        a lone 64-token prompt under a 32-token budget prefills in 2
+        steps, not 8. Lane = slot into a persistent [n_slots, T_buf] K/V
+        carry, so every packing call reuses one jit executable.
+
+        TTFT-aware order: admissions with the fewest remaining chunks pack
+        first (ties FIFO by arrival then uid) — finishing short prompts
+        early minimizes mean time-to-first-token without starving long
+        ones (a long prompt keeps its lane and packs whenever fewer than
+        ``k_max`` shorter admissions are in flight).
+
+        Unselected lanes (idle, or pending-but-over-budget) run a dummy
+        zero-token chunk aimed at the carry TAIL rows: any row at or above
+        a pending admission's ``done`` watermark is rewritten by the chunk
+        that owns it before any query ever attends to it, and a pending
+        admission always has ``done <= T_buf - C``, so tail writes can
+        never corrupt the packed prefix a live lane has already computed.
+        The per-step token budget charges only REAL lanes — the dummy rows
+        ride along inside the same fixed-shape call."""
+        C = self.prefill_chunk
+        budget = self.prefill_budget
+        while budget >= C and self._pending:
+            k_max = budget // C
+            order = sorted(
+                self._pending.items(),
+                key=lambda kv: (-(-(len(kv[1].tokens) - kv[1].done) // C),
+                                kv[1].req.arrival_step, kv[1].req.uid))
+            batch = order[:k_max]
+            if self._packed_carry is None:
+                self._packed_carry = init_chunk_carry(
+                    self.cfg, self._packed_T_buf, batch=self.n_slots)
+            toks = [[0] * C for _ in range(self.n_slots)]
+            offs = [self._packed_T_buf - C] * self.n_slots  # dummy-lane tail
+            for slot, pend in batch:
+                off = pend.done
+                n = min(C, len(pend.tokens) - off)
+                toks[slot] = pend.tokens[off:off + n] + [0] * (C - n)
+                offs[slot] = off
+            lg, self._packed_carry = self._chunk_step(
+                self.params, jnp.asarray(toks, jnp.int32),
+                self._packed_carry, jnp.asarray(offs, jnp.int32))
+            for slot, pend in batch:
+                off = pend.done
+                n = min(C, len(pend.tokens) - off)
+                pend.last_logits = lg[slot:slot + 1]
+                pend.last_offset = off
+                pend.done += n
+                budget -= C
+                self._step_prefill_tokens += C
+                if pend.done >= len(pend.tokens):
+                    del self._pending[slot]
+                    pend.carry = jax.tree_util.tree_map(
+                        lambda a: a[:, slot:slot + 1], self._packed_carry)
+                    self._complete_prefill(slot, pend)
 
     def _complete_prefill(self, slot: int, pend: _PendingPrefill) -> None:
         """Last chunk done: prune+compress the carried K/V (minus the shared
@@ -1109,6 +1295,7 @@ class Scheduler:
             self.prefill_token_total += self._step_prefill_tokens
             self.max_prefill_step_tokens = max(self.max_prefill_step_tokens,
                                                self._step_prefill_tokens)
+            self._stall_history.append(self._step_prefill_tokens)
         active_flags = [s is not None for s in self.slots]
         if any(active_flags):
             if self.paged:
@@ -1124,6 +1311,7 @@ class Scheduler:
                 self.busy_owned_page_steps += owned
                 self.busy_shared_page_steps += shared
             batch_toks = self._sample_batch(logits)
+            upd_slots, upd_toks = [], []
             for slot, req in enumerate(self.slots):
                 if req is None:
                     continue
@@ -1133,7 +1321,12 @@ class Scheduler:
                     self.slots[slot] = None          # released for reuse
                     self._release_pages(slot)
                 else:
-                    self.next_tokens = self.next_tokens.at[slot].set(tok)
+                    upd_slots.append(slot)
+                    upd_toks.append(tok)
+            if upd_slots:                            # one splice per step,
+                self.next_tokens = self.next_tokens.at[   # not per slot
+                    jnp.asarray(upd_slots, jnp.int32)].set(
+                    jnp.asarray(upd_toks, jnp.int32))
         self.step_count += 1
 
     def run(self, max_steps: int = 1 << 20) -> List[Request]:

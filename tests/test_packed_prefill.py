@@ -1,0 +1,158 @@
+"""Packed multi-admission chunked prefill (PR 6): chunks from several
+in-flight admissions run as batch lanes of ONE ``prefill_chunk_step`` call.
+
+The bit-exactness contract: every op in the chunk step is row-independent
+(batched einsums + per-lane dynamic_update_slice + exact-zero masking in
+``prefix_causal_attention``), so a lane's logits and K/V carry are
+bit-identical to the same chunk run solo — and therefore to the one-shot
+prefill, via the already-tested solo-chunk == one-shot equivalence. The
+tests here pin BOTH links of that chain across ragged segment boundaries
+(prompt lengths that are not chunk multiples, lanes at different offsets,
+dummy lanes riding along) and at the scheduler level.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serving.engine import (Request, Scheduler, init_chunk_carry,
+                                  prefill, prefill_chunk_step)
+
+KEY = jax.random.PRNGKey(0)
+CFG = get_config("starcoder2-3b").reduced().with_sparsity(0.5, 0.5)
+PARAMS = init_params(KEY, CFG)
+MAX_TOTAL = 96
+TT = CFG.mustafar.tile_tokens
+C = 8                                    # chunk size used throughout
+
+
+def _chunks(T):
+    return -(-T // C)
+
+
+def _solo_chunked(prompt):
+    """Solo-chunked reference: batch-1 carry, scalar offsets. Returns the
+    per-chunk logits list and the final carry sliced to the true T."""
+    T = len(prompt)
+    T_buf = _chunks(T) * C
+    carry = init_chunk_carry(CFG, T_buf)
+    step = jax.jit(lambda p, t, c, o: prefill_chunk_step(p, t, c, o, CFG))
+    logits = []
+    for i in range(_chunks(T)):
+        off = i * C
+        tok = prompt[off:off + C] + [0] * max(0, off + C - T)
+        lg, carry = step(PARAMS, jnp.asarray([tok], jnp.int32), carry,
+                         jnp.asarray(off, jnp.int32))
+        logits.append(lg[0])
+    sliced = jax.tree_util.tree_map(lambda a: a[:, 0, :T], carry)
+    return logits, sliced
+
+
+def test_packed_lanes_bit_exact_vs_solo_chunks():
+    """Three live lanes at DIFFERENT ragged offsets plus one dummy lane in
+    every packed call: each lane's per-chunk logits and final carry must be
+    bit-identical to its solo-chunked run."""
+    rng = np.random.default_rng(0)
+    prompts = [[int(t) for t in rng.integers(0, CFG.vocab_size, size=T)]
+               for T in (20, 13, 29)]           # none a chunk multiple
+    n_lanes = 4                                  # lane 3 is always dummy
+    T_buf = _chunks(MAX_TOTAL) * C
+    carry = init_chunk_carry(CFG, T_buf, batch=n_lanes)
+    step = jax.jit(lambda p, t, c, o: prefill_chunk_step(p, t, c, o, CFG))
+
+    solo = [_solo_chunked(p) for p in prompts]
+    done = [0] * len(prompts)
+    for _ in range(max(_chunks(len(p)) for p in prompts)):
+        toks = [[0] * C for _ in range(n_lanes)]
+        offs = [T_buf - C] * n_lanes             # dummy lanes park at tail
+        live = []
+        for lane, p in enumerate(prompts):
+            if done[lane] >= len(p):
+                continue
+            off = done[lane]
+            tok = p[off:off + C] + [0] * max(0, off + C - len(p))
+            toks[lane], offs[lane] = tok, off
+            live.append(lane)
+        lg, carry = step(PARAMS, jnp.asarray(toks, jnp.int32), carry,
+                         jnp.asarray(offs, jnp.int32))
+        for lane in live:
+            i = done[lane] // C
+            want = solo[lane][0][i]
+            assert np.array_equal(np.asarray(lg[lane]), np.asarray(want)), \
+                f"lane {lane} chunk {i} logits diverged from solo"
+            done[lane] += C
+    for lane, p in enumerate(prompts):
+        got = jax.tree_util.tree_map(lambda a: a[:, lane, :len(p)], carry)
+        flat_g, _ = jax.tree_util.tree_flatten(got)
+        flat_w, _ = jax.tree_util.tree_flatten(solo[lane][1])
+        for g, w in zip(flat_g, flat_w):
+            assert np.array_equal(np.asarray(g), np.asarray(w)), \
+                f"lane {lane} carry diverged from solo"
+
+
+def test_packed_lanes_bit_exact_vs_one_shot_prefill():
+    """Lane logits at the prompt's last position must equal the one-shot
+    ``prefill`` logits bit-for-bit (the first sampled token comes from
+    there), including for a prompt whose last chunk is ragged."""
+    rng = np.random.default_rng(1)
+    prompts = [[int(t) for t in rng.integers(0, CFG.vocab_size, size=T)]
+               for T in (11, 24)]
+    T_buf = _chunks(MAX_TOTAL) * C
+    carry = init_chunk_carry(CFG, T_buf, batch=len(prompts))
+    step = jax.jit(lambda p, t, c, o: prefill_chunk_step(p, t, c, o, CFG))
+    last = {}
+    done = [0] * len(prompts)
+    for _ in range(max(_chunks(len(p)) for p in prompts)):
+        toks = [[0] * C for _ in prompts]
+        offs = [T_buf - C] * len(prompts)
+        for lane, p in enumerate(prompts):
+            if done[lane] >= len(p):
+                continue
+            off = done[lane]
+            toks[lane] = p[off:off + C] + [0] * max(0, off + C - len(p))
+            offs[lane] = off
+        lg, carry = step(PARAMS, jnp.asarray(toks, jnp.int32), carry,
+                         jnp.asarray(offs, jnp.int32))
+        for lane, p in enumerate(prompts):
+            if done[lane] < len(p):
+                if done[lane] + C >= len(p):     # this was the last chunk
+                    last[lane] = lg[lane, (len(p) - 1) - done[lane]]
+                done[lane] += C
+    for lane, p in enumerate(prompts):
+        want, _ = prefill(PARAMS, jnp.asarray([p], jnp.int32), CFG,
+                          max_total_tokens=MAX_TOTAL)
+        assert np.array_equal(np.asarray(last[lane]), np.asarray(want[0])), \
+            f"lane {lane} last-position logits != one-shot prefill"
+
+
+def test_scheduler_packed_matches_solo_and_oneshot():
+    """End-to-end: the same burst trace served three ways — one-shot
+    prefill, serial chunking, packed chunking — must emit identical
+    tokens, and packing must strictly reduce drain time on the burst."""
+    rng = np.random.default_rng(2)
+    prompts = [[int(t) for t in rng.integers(0, CFG.vocab_size, size=T)]
+               for T in (20, 13, 29, 17)]
+
+    def serve(prefill_chunk=None, prefill_budget=None, pack=False):
+        sched = Scheduler(CFG, PARAMS, n_slots=4, max_total_tokens=MAX_TOTAL,
+                          page_tokens=TT, prefill_chunk=prefill_chunk,
+                          prefill_budget=prefill_budget, pack_prefill=pack,
+                          debug_invariants=True)
+        for i, p in enumerate(prompts):          # burst arrival at step 0
+            sched.submit(Request(prompt=np.asarray(p), max_new_tokens=6,
+                                 uid=i))
+        sched.run()
+        return ({r.uid: r.output_tokens for r in sched.finished},
+                sched.step_count, sched.max_prefill_step_tokens)
+
+    oneshot, _, _ = serve()
+    solo, steps_solo, stall_solo = serve(prefill_chunk=C)
+    packed, steps_packed, stall_packed = serve(prefill_chunk=C,
+                                               prefill_budget=4 * C,
+                                               pack=True)
+    assert oneshot == solo == packed
+    assert stall_solo <= C
+    assert stall_packed <= 4 * C
+    assert steps_packed < steps_solo, \
+        "packing did not shorten the burst drain"

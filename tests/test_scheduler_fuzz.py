@@ -131,12 +131,15 @@ def _assert_no_aliasing(sched):
 
 
 def _run_trace(seed, n_requests, page_tokens, n_slots=2, n_pages=None,
-               share_prefix=False, prefill_chunk=None, prefix_len=0):
+               share_prefix=False, prefill_chunk=None, prefix_len=0,
+               prefill_budget=None, pack_prefill=False):
     arrivals, reqs = _make_trace(seed, n_requests, prefix_len=prefix_len)
     sched = Scheduler(CFG, PARAMS, n_slots=n_slots,
                       max_total_tokens=MAX_TOTAL,
                       page_tokens=page_tokens, n_pages=n_pages,
                       share_prefix=share_prefix, prefill_chunk=prefill_chunk,
+                      prefill_budget=prefill_budget,
+                      pack_prefill=pack_prefill,
                       debug_invariants=True)
     i = 0
     guard = 0
@@ -221,6 +224,32 @@ def test_fuzz_chunked_prefill_trace():
                              prefill_chunk=8)
     _check_drained(sched, reqs)
     assert 0 < sched.max_prefill_step_tokens <= 8
+
+
+def test_fuzz_packed_prefill_trace():
+    """Packed multi-admission chunks: same invariants and solo-equivalent
+    outputs, and the per-step executed-prefill-token bound still holds —
+    now against the aggregate ``prefill_budget``, not one chunk."""
+    budget = 24
+    sched, reqs = _run_trace(seed=9, n_requests=6, page_tokens=TT,
+                             n_slots=3, prefill_chunk=8,
+                             prefill_budget=budget, pack_prefill=True)
+    _check_drained(sched, reqs)
+    assert 0 < sched.max_prefill_step_tokens <= budget
+    # the trace's burst phase actually packed >1 admission into one step
+    assert sched.max_prefill_step_tokens > 8, \
+        "no step ever packed more than one chunk — trace too sparse"
+
+
+def test_fuzz_packed_shared_prefix_trace():
+    """Packing composed with prefix sharing on a common-prefix trace."""
+    sched, reqs = _run_trace(seed=10, n_requests=5, page_tokens=TT,
+                             n_slots=3, share_prefix=True, prefix_len=40,
+                             prefill_chunk=8, prefill_budget=16,
+                             pack_prefill=True)
+    _check_drained(sched, reqs)
+    assert sched.prefix.hits > 0
+    assert 0 < sched.max_prefill_step_tokens <= 16
 
 
 def test_fuzz_shared_and_chunked_trace():
