@@ -368,6 +368,92 @@ def prefix_main(rng=None) -> dict:
     return {"reduction": saving, "ttft_mean_packed": ttft}
 
 
+def sharding_main(rng=None, smoke: bool = False) -> dict:
+    """BENCH_sharding: KV-head-sharded decode + the multi-engine router
+    (the PR-7 tentpole), measured on an 8-virtual-device CPU mesh.
+
+    The measurement runs in a SUBPROCESS (``benchmarks/sharding_worker.py``)
+    because the virtual topology is an ``XLA_FLAGS`` setting that must be
+    in place before jax first initializes its backend — this process is
+    long past that point. The worker serves one seeded trace through a
+    single-device Scheduler, a ``model=1`` mesh and a ``model=8`` mesh,
+    then races a 4x4-slot Router against a 16-slot engine, and prints a
+    ``SHARDING_JSON`` line this wrapper parses, emits and gates:
+
+      * per-device peak pool bytes at model=8 <= single-device bytes / 8
+        + replicated metadata (the layout contract — KV-head pool shards,
+        block tables and counters replicate);
+      * model=1 tok/s >= 0.95x single-device (shard_map wrapper overhead
+        must be noise — the CI smoke gate);
+      * router aggregate tok/s >= 1.5x the single engine at EQUAL total
+        slots (static-shape waste reclaimed: idle replicas skip steps);
+      * zero resharding collectives in the compiled decode (all-gather /
+        all-to-all / collective-permute), only the logit all-reduces;
+      * modeled fleet scale: per-device residency for 4096 slots on an
+        8-way mesh (the thousands-of-slots regime no CPU host serves
+        live)."""
+    import json
+    import os
+    import subprocess
+    import sys
+
+    worker = os.path.join(os.path.dirname(__file__), "sharding_worker.py")
+    cmd = [sys.executable, worker] + (["--smoke"] if smoke else [])
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(cmd, capture_output=True, text=True, timeout=3000,
+                          env=env, cwd=os.path.dirname(os.path.dirname(
+                              os.path.abspath(worker))))
+    line = next((ln for ln in proc.stdout.splitlines()
+                 if ln.startswith("SHARDING_JSON ")), None)
+    assert line is not None, (
+        f"sharding worker died:\n{proc.stdout[-2000:]}\n{proc.stderr[-2000:]}")
+    r = json.loads(line[len("SHARDING_JSON "):])
+
+    emit("sharding/decode_model8", 0.0,
+         f"tokens_per_s={r['tokens_per_s_model8']:.1f} "
+         f"per_device_bytes={r['per_device_bytes_model8']} "
+         f"(bound {r['per_device_bound']:.0f}) "
+         f"max_logit_err={r['model8_max_logit_err']:.1e}",
+         tokens_per_s=r["tokens_per_s_model8"],
+         per_device_bytes=r["per_device_bytes_model8"],
+         single_device_bytes=r["single_device_bytes"],
+         replicated_meta_bytes=r["replicated_meta_bytes"],
+         collectives=r["decode_collectives"])
+    emit("sharding/decode_model1", 0.0,
+         f"tokens_per_s={r['tokens_per_s_model1']:.1f} "
+         f"({r['speed_ratio_model1']:.2f}x single-device; gate 0.95x)",
+         tokens_per_s=r["tokens_per_s_model1"],
+         speed_ratio=r["speed_ratio_model1"])
+    emit("sharding/router_4x4_vs_16", 0.0,
+         f"tokens_per_s={r['tokens_per_s_router4x4']:.1f} vs "
+         f"{r['tokens_per_s_single16']:.1f} single "
+         f"({r['speed_ratio_router']:.2f}x; gate 1.5x) "
+         f"per_engine={r['router_finished_per_engine']}",
+         tokens_per_s_router=r["tokens_per_s_router4x4"],
+         tokens_per_s_single=r["tokens_per_s_single16"],
+         speed_ratio=r["speed_ratio_router"],
+         router_occupancy=r["router_occupancy_slots"],
+         single_occupancy=r["single_occupancy_slots"])
+    emit("sharding/fleet_4096_slots", 0.0,
+         f"per_device={r['fleet_per_device_bytes']/2**30:.1f}GiB of "
+         f"{r['fleet_paged_bytes']/2**30:.1f}GiB total on 8 devices",
+         fleet_slots=r["fleet_slots"], mesh_model=r["fleet_mesh_model"],
+         paged_bytes=r["fleet_paged_bytes"],
+         per_device_bytes=r["fleet_per_device_bytes"])
+
+    assert r["per_device_bytes_model8"] <= r["per_device_bound"], \
+        "sharded pool exceeds single/8 + replicated metadata"
+    assert r["speed_ratio_model1"] >= 0.95, \
+        f"model=1 mesh at {r['speed_ratio_model1']:.2f}x single (< 0.95x)"
+    assert r["speed_ratio_router"] >= 1.5, \
+        f"router at {r['speed_ratio_router']:.2f}x single engine (< 1.5x)"
+    c = r["decode_collectives"]
+    assert c["all-gather"] == c["all-to-all"] == c["collective-permute"] == 0
+    assert c["all-reduce"] > 0
+    return r
+
+
 if __name__ == "__main__":
     import argparse
 

@@ -24,6 +24,7 @@ SUITES = {
     "throughput": bench_throughput.main,  # Fig 7
     "paging": bench_throughput.paging_main,  # paged vs contiguous pools
     "prefix": bench_throughput.prefix_main,  # shared-prefix CoW + chunked
+    "sharding": bench_throughput.sharding_main,  # KV-head shards + router
 }
 _ALIASES = {"kernel": "kernels"}          # pre-PR-2 suite name
 

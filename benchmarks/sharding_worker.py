@@ -1,0 +1,231 @@
+"""Subprocess body for BENCH_sharding (see bench_throughput.sharding_main).
+
+Runs in its own interpreter because the 8-virtual-device CPU topology must
+be configured through XLA_FLAGS BEFORE jax first imports; the parent
+benchmark process has long since initialized its backend. Three sections:
+
+* **sharded decode** — the SAME seeded Poisson trace served by a
+  single-device Scheduler, a ``model=1`` mesh (shard_map wrapper overhead
+  only — the 0.95x CI gate), and a ``model=8`` mesh (KV heads split across
+  all 8 virtual devices). Outputs must agree token-for-token, and the
+  measured per-device peak pool bytes on the 8-way mesh must land at
+  ``single/8 + replicated metadata`` — the layout contract of
+  ``sharding.specs.cache_partition_spec``.
+* **router** — a 4x4-slot Router vs one 16-slot Scheduler on an identical
+  moderate-concurrency trace (equal total slots). The router's win is
+  static-shape waste: the single engine pays all 16 slot-rows every decode
+  step while the router packs load onto one replica and lets idle siblings
+  skip their steps outright. Gate: aggregate tok/s >= 1.5x.
+* **fleet model** — ``cache_hbm_bytes`` at a 4096-slot fleet (the
+  thousands-of-slots regime no single host serves live) with
+  ``mesh_model=8``, reporting the per-device pool residency the sharded
+  layout needs.
+
+Timing is STEADY-STATE: every engine first drains a warmup trace covering
+each prefill shape (jit compiles land there) before the seeded trace is
+timed. Emits one ``SHARDING_JSON {...}`` line on stdout for the parent to
+parse; gates are asserted by the parent so the failure shows up in the
+benchmark run, not a silent subprocess death.
+
+    PYTHONPATH=src python benchmarks/sharding_worker.py [--smoke]
+"""
+import argparse
+import json
+import os
+import time
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=8")
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax                                                  # noqa: E402
+import jax.numpy as jnp                                     # noqa: E402
+import numpy as np                                          # noqa: E402
+from dataclasses import replace                             # noqa: E402
+
+from repro.configs import get_config                        # noqa: E402
+from repro.models import init_params                        # noqa: E402
+from repro.serving import sharded                           # noqa: E402
+from repro.serving.cache import cache_hbm_bytes             # noqa: E402
+from repro.serving.engine import Request, Scheduler         # noqa: E402
+from repro.serving.router import Router                     # noqa: E402
+
+PROMPT_BUCKETS = (16, 32)
+
+
+# warmup requests carry uids >= WARM_UID so the timed trace (uids 0..n-1)
+# filters cleanly out of any engine's aggregated ``finished`` list
+WARM_UID = 9000
+
+
+def make_trace(cfg, n, gens, mean_gap, seed=0):
+    r = np.random.default_rng(seed)
+    arrivals = np.cumsum(r.exponential(mean_gap, size=n)).astype(int)
+    reqs = [Request(prompt=r.integers(0, cfg.vocab_size,
+                                      size=int(r.choice(PROMPT_BUCKETS))),
+                    max_new_tokens=int(r.choice(gens)), uid=i)
+            for i in range(n)]
+    return arrivals, reqs
+
+
+def warmup(engine, cfg, submit_to=None):
+    """Drain one tiny request per prefill bucket so compiles precede the
+    clock. ``submit_to`` bypasses the router so EVERY replica compiles."""
+    r = np.random.default_rng(99)
+    uid = WARM_UID
+    for tgt in (submit_to or [engine]):
+        for L in PROMPT_BUCKETS:
+            tgt.submit(Request(prompt=r.integers(0, cfg.vocab_size, size=L),
+                               max_new_tokens=2, uid=uid))
+            uid += 1
+    while engine.has_work:
+        engine.step()
+    return engine.step_count
+
+
+def serve(engine, arrivals, reqs, base_step=0):
+    t0 = time.perf_counter()
+    i = 0
+    while i < len(reqs) or engine.has_work:
+        while i < len(reqs) and arrivals[i] + base_step <= engine.step_count:
+            engine.submit(reqs[i])
+            i += 1
+        engine.step()
+    dt = time.perf_counter() - t0
+    return dt
+
+
+def timed_tokens(engine, reqs):
+    timed = [r for r in engine.finished if r.uid < WARM_UID]
+    assert len(timed) == len(reqs), (len(timed), len(reqs))
+    return sum(r.num_generated for r in timed), \
+        [r.output_tokens for r in sorted(timed, key=lambda r: r.uid)]
+
+
+def sharded_section(smoke):
+    """Single-device vs model=1 vs model=8 on one trace."""
+    cfg = replace(get_config("starcoder2-3b").reduced()
+                  .with_sparsity(0.5, 0.5), n_heads=8, n_kv_heads=8)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    n = 6 if smoke else 12
+    arrivals, reqs = make_trace(cfg, n, gens=(8, 16), mean_gap=3)
+
+    out = {}
+    runs = {}
+    for tag, model in (("single", 0), ("model1", 1), ("model8", 8)):
+        mesh = sharded.make_serving_mesh(model) if model else None
+        s = Scheduler(cfg, params, n_slots=4, max_total_tokens=96,
+                      page_tokens=16, collect_logits=True, mesh=mesh)
+        base = warmup(s, cfg)
+        dt = serve(s, arrivals, [fresh(r) for r in reqs], base)
+        toks, _ = timed_tokens(s, reqs)
+        logits = {r.uid: r.logits for r in s.finished if r.uid < WARM_UID}
+        toks_by_uid = {r.uid: r.output_tokens for r in s.finished
+                       if r.uid < WARM_UID}
+        runs[tag] = (s, toks_by_uid, logits)
+        out[f"tokens_per_s_{tag}"] = toks / dt
+        assert s.allocator.in_use == 0, f"{tag}: page leak"
+
+    # model=1 shard_map runs the identical single-device program (the psum
+    # over one device is an identity) -> bit-exact tokens. model=8 sums
+    # head-shard partials in a different order -> fp32 tolerance on logits
+    # (greedy argmax over a random-init model's near-flat logits can flip
+    # on ties, so token equality is NOT the right check there).
+    assert runs["model1"][1] == runs["single"][1], \
+        "model1 outputs diverged from single-device"
+    max_err = 0.0
+    for uid, ref in runs["single"][2].items():
+        toks_a = runs["model8"][1][uid]
+        toks_b = runs["single"][1][uid]
+        # a tie-flip at step k forks the context, so logits are only
+        # comparable through step k (whose inputs are still identical)
+        k = next((i for i, (x, y) in enumerate(zip(toks_a, toks_b))
+                  if x != y), len(toks_b) - 1)
+        for a, b in zip(runs["model8"][2][uid][:k + 1], ref[:k + 1]):
+            max_err = max(max_err, float(np.max(np.abs(a - b))))
+            np.testing.assert_allclose(a, b, rtol=5e-2, atol=5e-2)
+    out["model8_max_logit_err"] = max_err
+
+    s8 = runs["model8"][0]
+    sharded.assert_cache_shardings(s8)
+    pdb = sharded.per_device_cache_bytes(s8.cache)
+    full = sum(leaf.nbytes for leaf in jax.tree.leaves(runs["single"][0].cache))
+    # replicated metadata = every cache leaf whose spec carries no "model"
+    from jax.sharding import PartitionSpec as P
+    specs = jax.tree.leaves(s8._sharded.cache_specs,
+                            is_leaf=lambda x: isinstance(x, P))
+    meta = sum(leaf.nbytes
+               for leaf, spec in zip(jax.tree.leaves(s8.cache), specs)
+               if "model" not in spec)
+    out.update(per_device_bytes_model8=pdb, single_device_bytes=full,
+               replicated_meta_bytes=meta,
+               per_device_bound=full / 8 + meta,
+               speed_ratio_model1=(out["tokens_per_s_model1"]
+                                   / out["tokens_per_s_single"]))
+    counts = sharded.collective_audit(
+        s8._decode, s8.params, s8.next_tokens, s8.cache,
+        active=jnp.ones((4,), bool))
+    sharded.assert_no_resharding(counts)
+    out["decode_collectives"] = counts
+    return out
+
+
+def router_section(smoke):
+    """4x4-slot router vs one 16-slot engine, equal total slots."""
+    cfg = get_config("starcoder2-3b").reduced().with_sparsity(0.5, 0.5)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    n = 12 if smoke else 28
+    gens = (12, 24) if smoke else (16, 32)
+    arrivals, reqs = make_trace(cfg, n, gens=gens, mean_gap=6, seed=1)
+    kw = dict(max_total_tokens=96, page_tokens=16)
+
+    single = Scheduler(cfg, params, n_slots=16, **kw)
+    base = warmup(single, cfg)
+    dt_s = serve(single, arrivals, [fresh(r) for r in reqs], base)
+    toks_s, _ = timed_tokens(single, reqs)
+
+    router = Router(cfg, params, n_engines=4, n_slots=16, **kw)
+    base = warmup(router, cfg, submit_to=router.engines)
+    dt_r = serve(router, arrivals, [fresh(r) for r in reqs], base)
+    toks_r, _ = timed_tokens(router, reqs)
+
+    assert router.page_leaks == 0, "router leaked pages after drain"
+    assert toks_r == toks_s, (toks_r, toks_s)
+    per_engine = [len(e.finished) for e in router.engines]
+    return {"tokens_per_s_single16": toks_s / dt_s,
+            "tokens_per_s_router4x4": toks_r / dt_r,
+            "speed_ratio_router": (toks_r / dt_r) / (toks_s / dt_s),
+            "router_finished_per_engine": per_engine,
+            "router_occupancy_slots": router.occupancy.slots,
+            "single_occupancy_slots": single.occupancy.slots}
+
+
+def fresh(r):
+    """Fresh Request per serve (per-request progress state is mutable)."""
+    return Request(prompt=r.prompt, max_new_tokens=r.max_new_tokens,
+                   temperature=r.temperature, uid=r.uid)
+
+
+def fleet_section():
+    """Per-device residency at fleet scale: 4096 slots, 8-way mesh."""
+    cfg = get_config("llama2-7b").with_sparsity(0.7, 0.7)
+    acct = cache_hbm_bytes(cfg, 4096, 4096, page_tokens=64, mesh_model=8)
+    return {"fleet_slots": 4096, "fleet_mesh_model": 8,
+            "fleet_paged_bytes": acct["paged"],
+            "fleet_per_device_bytes": acct["paged_per_device"]}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    assert len(jax.devices()) >= 8, "virtual device topology missing"
+    result = {}
+    result.update(sharded_section(args.smoke))
+    result.update(router_section(args.smoke))
+    result.update(fleet_section())
+    print("SHARDING_JSON " + json.dumps(result))
+
+
+if __name__ == "__main__":
+    main()

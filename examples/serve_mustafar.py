@@ -59,18 +59,35 @@ def main():
                     help="per-step prefill-token budget across ALL "
                          "admissions (0 = one chunk; requires "
                          "--prefill-chunk)")
-    ap.add_argument("--pack-prefill", action="store_true",
-                    help="pack chunks from multiple waiting admissions "
-                         "into one batched prefill call per step "
-                         "(Sarathi-style; requires --prefill-chunk — "
-                         "collapses TTFT under bursts at the same "
-                         "per-step stall budget)")
-    ap.add_argument("--fused-compaction", action="store_true",
-                    help="compress-as-you-evict: retire window tile "
-                         "groups into their destination page in the "
-                         "decode dispatch's epilogue instead of a "
-                         "separate compaction launch (requires "
-                         "--page-tokens)")
+    ap.add_argument("--no-pack-prefill", action="store_true",
+                    help="opt OUT of packed prefill (the default whenever "
+                         "--prefill-chunk is set packs chunks from "
+                         "multiple waiting admissions into one batched "
+                         "prefill call per step, Sarathi-style)")
+    ap.add_argument("--no-fused-compaction", action="store_true",
+                    help="opt OUT of compress-as-you-evict (the default "
+                         "for paged pools retires window tile groups "
+                         "into their destination page in the decode "
+                         "dispatch's epilogue; this flag restores the "
+                         "separate two-dispatch compaction)")
+    ap.add_argument("--prefill-lanes", type=int, default=0,
+                    help="cap the packed-prefill carry's lane count (0 = "
+                         "one lane per slot; small caps keep the "
+                         "persistent K/V carry from scaling with --slots)")
+    ap.add_argument("--tile-overhead-bytes", type=int, default=0,
+                    help="re-fit --page-tokens auto from a measured "
+                         "per-tile dispatch cost in HBM-byte equivalents "
+                         "(0 = roofline.TILE_OVERHEAD_BYTES or the "
+                         "REPRO_TILE_OVERHEAD_BYTES env var)")
+    ap.add_argument("--mesh-model", type=int, default=0,
+                    help="shard the engine over N devices (KV heads on "
+                         "the \"model\" axis, shard_map decode; 0 = "
+                         "single-device). Needs N visible devices and "
+                         "head counts divisible by N.")
+    ap.add_argument("--engines", type=int, default=1,
+                    help="data-parallel engine replicas behind one "
+                         "router (--slots and --n-pages partition across "
+                         "them; idle replicas skip steps entirely)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.page_tokens != "auto":
@@ -93,22 +110,40 @@ def main():
         ap.error("--n-pages only bounds PAGED pools; pass --page-tokens too")
     if args.share_prefix and not args.page_tokens:
         ap.error("--share-prefix aliases PAGED pools; pass --page-tokens too")
-    if args.fused_compaction and not args.page_tokens:
-        ap.error("--fused-compaction scatters into PAGED pools; pass "
-                 "--page-tokens too")
-    if (args.pack_prefill or args.prefill_budget) and not args.prefill_chunk:
-        ap.error("--pack-prefill/--prefill-budget require --prefill-chunk")
-    sched = Scheduler(cfg, params, n_slots=args.slots,
-                      max_total_tokens=max_total,
-                      page_tokens=args.page_tokens or None,
-                      n_pages=args.n_pages or None,
-                      share_prefix=args.share_prefix,
-                      prefill_chunk=args.prefill_chunk or None,
-                      prefill_budget=args.prefill_budget or None,
-                      pack_prefill=args.pack_prefill,
-                      fused_compaction=args.fused_compaction)
+    if args.prefill_budget and not args.prefill_chunk:
+        ap.error("--prefill-budget requires --prefill-chunk")
+    if args.engines < 1:
+        ap.error("--engines must be >= 1")
+    mesh = None
+    if args.mesh_model:
+        from repro.serving.sharded import make_serving_mesh
+        mesh = make_serving_mesh(args.mesh_model)
+    sched_kw = dict(
+        max_total_tokens=max_total,
+        page_tokens=args.page_tokens or None,
+        n_pages=args.n_pages or None,
+        share_prefix=args.share_prefix,
+        prefill_chunk=args.prefill_chunk or None,
+        prefill_budget=args.prefill_budget or None,
+        pack_prefill=False if args.no_pack_prefill else None,
+        fused_compaction=False if args.no_fused_compaction else None,
+        prefill_lanes=args.prefill_lanes or None,
+        tile_overhead_bytes=args.tile_overhead_bytes or None,
+        mesh=mesh)
+    if args.engines > 1:
+        from repro.serving.router import Router
+        sched = Router(cfg, params, n_engines=args.engines,
+                       n_slots=args.slots,
+                       meshes=[mesh] * args.engines if mesh else None,
+                       **{k: v for k, v in sched_kw.items() if k != "mesh"})
+        print(f"# router: {args.engines} engine replicas x "
+              f"{sched.engines[0].n_slots} slots")
+        page_tokens_used = sched.engines[0].page_tokens
+    else:
+        sched = Scheduler(cfg, params, n_slots=args.slots, **sched_kw)
+        page_tokens_used = sched.page_tokens
     if args.page_tokens == "auto":
-        print(f"# page_tokens=auto -> {sched.page_tokens} "
+        print(f"# page_tokens=auto -> {page_tokens_used} "
               f"(roofline-tuned for {args.slots} slots x "
               f"{max_total} tokens)")
 
@@ -147,32 +182,41 @@ def main():
           f"(CPU reference path, incl. compiles)")
     occ = sched.occupancy
     print(f"  batch occupancy:   {occ.slots*100:.1f}% of {args.slots} slots")
-    if occ.pages is not None:
-        print(f"  page occupancy:    {occ.pages*100:.1f}% of "
-              f"{sched.n_pages} pages "
-              f"(peak {sched.allocator.peak_in_use} drawn)")
-    if args.share_prefix:
-        print(f"  prefix sharing:    {sched.shared_admissions}/"
-              f"{args.requests} admissions aliased pages "
-              f"({sched.prefix.hits} page hits, {sched.cow_count} "
-              f"copy-on-writes; occupancy owned={occ.pages_owned*100:.1f}% "
-              f"shared={occ.pages_shared*100:.1f}%)")
-    if args.prefill_chunk:
-        mode_note = ", packed" if args.pack_prefill else ""
-        print(f"  chunked prefill:   <= {sched.max_prefill_step_tokens} "
-              f"prefill tokens/step (budget {sched.prefill_budget}"
-              f"{mode_note}); "
-              f"mean {occ.prefill_tokens_per_step:.1f} tok/step, "
-              f"stall p50={occ.prefill_stall_p50:.0f} "
-              f"p99={occ.prefill_stall_p99:.0f}")
-    if occ.ttft_p50 is not None:
-        print(f"  ttft (steps):      p50={occ.ttft_p50:.0f} "
-              f"p99={occ.ttft_p99:.0f}")
+    if args.engines > 1:
+        loads = [len(e.finished) for e in sched.engines]
+        print(f"  router:            finished per engine {loads}; "
+              f"{sched.pages_in_use} pages still held "
+              f"({sched.page_leaks} leaked)")
+    else:
+        if occ.pages is not None:
+            print(f"  page occupancy:    {occ.pages*100:.1f}% of "
+                  f"{sched.n_pages} pages "
+                  f"(peak {sched.allocator.peak_in_use} drawn)")
+        if args.share_prefix:
+            print(f"  prefix sharing:    {sched.shared_admissions}/"
+                  f"{args.requests} admissions aliased pages "
+                  f"({sched.prefix.hits} page hits, {sched.cow_count} "
+                  f"copy-on-writes; occupancy "
+                  f"owned={occ.pages_owned*100:.1f}% "
+                  f"shared={occ.pages_shared*100:.1f}%)")
+        if args.prefill_chunk:
+            mode_note = ", packed" if sched.pack_prefill else ""
+            print(f"  chunked prefill:   <= "
+                  f"{sched.max_prefill_step_tokens} "
+                  f"prefill tokens/step (budget {sched.prefill_budget}"
+                  f"{mode_note}); "
+                  f"mean {occ.prefill_tokens_per_step:.1f} tok/step, "
+                  f"stall p50={occ.prefill_stall_p50:.0f} "
+                  f"p99={occ.prefill_stall_p99:.0f}")
+        if occ.ttft_p50 is not None:
+            print(f"  ttft (steps):      p50={occ.ttft_p50:.0f} "
+                  f"p99={occ.ttft_p99:.0f}")
     print(f"  latency (steps):   p50={int(np.median(lat))} "
           f"max={int(np.max(lat))}")
     acct = cache_hbm_bytes(cfg, args.slots, max_total,
-                           page_tokens=sched.page_tokens,
-                           n_pages=args.n_pages or None)
+                           page_tokens=page_tokens_used,
+                           n_pages=args.n_pages or None,
+                           mesh_model=args.mesh_model or 1)
     print(f"  cache bytes: dense={acct['dense']/2**20:.1f}MiB "
           f"mustafar={acct['mustafar']/2**20:.1f}MiB "
           f"ratio={acct['ratio']*100:.1f}%")
@@ -180,6 +224,11 @@ def main():
         print(f"  paged bytes: pool={acct['paged_pool']/2**20:.2f}MiB "
               f"meta={acct['page_meta']/2**10:.1f}KiB "
               f"total={acct['paged']/2**20:.2f}MiB")
+    if "paged_per_device" in acct:
+        print(f"  per-device bytes:  "
+              f"{acct['paged_per_device']/2**20:.2f}MiB across "
+              f"{args.mesh_model} devices (KV heads sharded, "
+              f"metadata replicated)")
     print("  sample:", sched.finished[0].output_tokens[:12])
 
 

@@ -174,8 +174,23 @@ def paged_metadata_bytes(cfg: ModelConfig, B: int, max_total_tokens: int,
 TILE_OVERHEAD_BYTES = 2048
 
 
+def _tile_overhead_bytes(override: "int | None" = None) -> int:
+    """Resolve the per-tile overhead constant: explicit argument >
+    ``REPRO_TILE_OVERHEAD_BYTES`` env var > module default. The env hook
+    lets a deployment re-fit ``auto_page_tokens`` from a measured
+    dispatch latency (overhead_bytes = latency_s · HBM_GBps · 1e9)
+    without editing source."""
+    if override is not None:
+        return int(override)
+    env = os.environ.get("REPRO_TILE_OVERHEAD_BYTES")
+    if env:
+        return int(env)
+    return TILE_OVERHEAD_BYTES
+
+
 def auto_page_tokens(cfg: ModelConfig, n_slots: int,
-                     max_total_tokens: int) -> int:
+                     max_total_tokens: int,
+                     tile_overhead_bytes: "int | None" = None) -> int:
     """Pick ``page_tokens`` for ``Scheduler(page_tokens="auto")``.
 
     PAGE-SIZE TUNING GUIDE — the two costs that move with ``page_tokens``:
@@ -205,8 +220,15 @@ def auto_page_tokens(cfg: ModelConfig, n_slots: int,
     requires ``page_tokens % tile_tokens == 0``) up to
     ``min(max_total_tokens, 2·TILE_T)``. Typical result: pages of one-to-a
     few ``TILE_T`` — e.g. 128 for deep caches, smaller only when
-    ``max_total_tokens`` is itself small."""
+    ``max_total_tokens`` is itself small.
+
+    ``tile_overhead_bytes`` overrides the ``TILE_OVERHEAD_BYTES``
+    calibration point (falling back to the ``REPRO_TILE_OVERHEAD_BYTES``
+    env var, then the module constant — see ``_tile_overhead_bytes``);
+    ``Scheduler(page_tokens="auto", tile_overhead_bytes=...)`` plumbs it
+    through."""
     from repro.kernels.sparse_decode import TILE_T
+    overhead = _tile_overhead_bytes(tile_overhead_bytes)
     tt = cfg.mustafar.tile_tokens
     n_attn = max(1, len(cfg.attention_layers()))
     cands = []
@@ -219,7 +241,7 @@ def auto_page_tokens(cfg: ModelConfig, n_slots: int,
         meta = paged_metadata_bytes(cfg, n_slots, max_total_tokens, pt)
         tile_t = min(pt, TILE_T)
         n_tiles = -(-max_total_tokens // tile_t)
-        tile = n_attn * n_slots * cfg.n_kv_heads * n_tiles * TILE_OVERHEAD_BYTES
+        tile = n_attn * n_slots * cfg.n_kv_heads * n_tiles * overhead
         costs.append(meta + tile)
     best = min(costs)
     for pt, c in zip(cands, costs):        # smallest page within 2% of best

@@ -911,7 +911,8 @@ def page_bytes(cfg: ModelConfig, page_tokens: int) -> int:
 
 def cache_hbm_bytes(cfg: ModelConfig, B: int, max_total_tokens: int,
                     page_tokens: Optional[int] = None,
-                    n_pages: Optional[int] = None) -> Dict[str, int]:
+                    n_pages: Optional[int] = None,
+                    mesh_model: int = 1) -> Dict[str, int]:
     """Static accounting of cache memory (dense vs Mustafar) — Fig. 6b terms.
 
     Packed values are sized at the bf16 ``POOL_DTYPE`` width (pools never
@@ -926,10 +927,23 @@ def cache_hbm_bytes(cfg: ModelConfig, B: int, max_total_tokens: int,
         paged = (n_pages + 1) · page_bytes(cfg, page_tokens)
               + 4 · B · max_pages                       (block table)
               + n_attn · B · Hkv · 2 · Wbuf · d · itemsize
+
+    ``mesh_model`` > 1 reports PER-DEVICE bytes under the serving
+    shard_map posture (``serving.sharded``): every Hkv-carrying term —
+    pools, windows, dense baseline — divides by the model-axis size, while
+    ``page_meta`` (the replicated int32 block table) does NOT; a
+    ``paged_per_device`` key is added alongside the undivided fleet total:
+
+        paged_per_device = paged_pool / mesh_model
+                         + page_meta                    (replicated)
+                         + win / mesh_model
     """
     itemsize = jnp.dtype(cfg.dtype).itemsize
     pool_itemsize = jnp.dtype(POOL_DTYPE).itemsize
     d, Hkv = cfg.d_head, cfg.n_kv_heads
+    if mesh_model > 1 and Hkv % mesh_model:
+        raise ValueError(f"n_kv_heads={Hkv} not divisible by "
+                         f"mesh_model={mesh_model}")
     n_attn = len(cfg.attention_layers())
     dense = n_attn * B * Hkv * max_total_tokens * d * 2 * itemsize
     m = cfg.mustafar
@@ -951,4 +965,7 @@ def cache_hbm_bytes(cfg: ModelConfig, B: int, max_total_tokens: int,
         out["paged_pool"] = pool
         out["page_meta"] = meta
         out["paged"] = pool + meta + win
+        if mesh_model > 1:
+            out["paged_per_device"] = (pool // mesh_model + meta
+                                       + win // mesh_model)
     return out

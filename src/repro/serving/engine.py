@@ -73,7 +73,8 @@ def prefill(params, tokens: jax.Array, cfg: ModelConfig,
             max_total_tokens: int,
             extra: Optional[Dict[str, jax.Array]] = None,
             plan_batch: Optional[int] = None,
-            shared_tokens: int = 0):
+            shared_tokens: int = 0,
+            model_axis: Optional[str] = None):
     """tokens [B, T] -> (logits [B, V] at last position, cache).
 
     extra carries the stub modality inputs (frames / patches).
@@ -85,6 +86,13 @@ def prefill(params, tokens: jax.Array, cfg: ModelConfig,
     attention over the dense K/V is what keeps a shared-prefix admission
     bit-identical to a solo run — the compressed pages only ever feed
     DECODE steps, so sharing is a storage-level dedup, not an approximation).
+
+    ``model_axis`` (static) marks this call as the per-device body of a
+    ``shard_map`` over that mesh axis: ``cfg`` then carries the LOCAL head
+    counts (``serving.sharded`` divides them), every attention layer's
+    output projection is partial over the local heads and is all-reduced
+    with ``lax.psum`` — the Megatron-style tensor-parallel cut. Everything
+    outside attention (norms, FFN, embed/lm_head) computes replicated.
     """
     extra = extra or {}
     B, T = tokens.shape
@@ -115,7 +123,10 @@ def prefill(params, tokens: jax.Array, cfg: ModelConfig,
             if kind == "attn":
                 q, k, v = attn.qkv_proj(bp["mixer"], h, cfg, positions)
                 core = attn.causal_attention(q, k, v, cfg)
-                x = x + attn.o_proj(bp["mixer"], core, cfg)
+                y = attn.o_proj(bp["mixer"], core, cfg)
+                if model_axis is not None:
+                    y = jax.lax.psum(y, model_axis)
+                x = x + y
                 cross_kv = None
                 if cfg.family == "audio":
                     hc = norm_apply(bp["norm_cross"], x, cfg.norm)
@@ -167,14 +178,16 @@ def prefill(params, tokens: jax.Array, cfg: ModelConfig,
 # decode
 
 def _attn_decode(bp, h, cfg: ModelConfig, lc, position, w_len, n_compressed,
-                 block_table=None):
+                 block_table=None, model_axis=None):
     """One attention layer, one token. h [B,1,D] -> (out [B,1,D], new lc).
 
     ``position``/``w_len``/``n_compressed`` are per-sequence [B] vectors —
     RoPE rotates each row at its own ragged offset and the validity masks
     differ per row, so slots at different depths coexist in one batch.
     ``block_table`` (paged caches) switches the compressed operands to the
-    paged view; formulation choice still lives in decode_attention_auto."""
+    paged view; formulation choice still lives in decode_attention_auto.
+    ``model_axis``: inside a shard_map body, cfg carries local head counts
+    and the o_proj output (partial over the head shard) is psum-reduced."""
     B = h.shape[0]
     q, k, v = attn.qkv_proj(bp["mixer"], h, cfg, position[:, None])  # [B,1,H,dh]
     m = cfg.mustafar
@@ -215,12 +228,15 @@ def _attn_decode(bp, h, cfg: ModelConfig, lc, position, w_len, n_compressed,
     y = attn.o_proj(bp["mixer"],
                     out[:, None, :, :].reshape(B, 1, cfg.n_heads, cfg.d_head),
                     cfg)
+    if model_axis is not None:
+        y = jax.lax.psum(y, model_axis)
     return y, lc
 
 
 def decode_step(params, token: jax.Array, cache, cfg: ModelConfig,
                 active: Optional[jax.Array] = None,
-                fused_compaction: bool = False):
+                fused_compaction: bool = False,
+                model_axis: Optional[str] = None):
     """token [B] -> (logits [B, V], new cache). One step for the batch.
 
     Every slot advances independently: per-sequence [B] counters, per-slot
@@ -236,7 +252,12 @@ def decode_step(params, token: jax.Array, cache, cfg: ModelConfig,
     emitted straight into their destination pool pages from the same
     kernel launch instead of a separate compress + scan-of-DUS pair. The
     two-dispatch path stays the bit-exactness oracle
-    (tests/test_fused_compaction.py)."""
+    (tests/test_fused_compaction.py).
+
+    ``model_axis`` (static): see ``prefill`` — marks this as the
+    per-device body of a shard_map over that axis (cfg holds LOCAL head
+    counts; each attention o_proj is psum-reduced). Compaction/window ops
+    see only the local Hkv shard and need no collectives."""
     B = token.shape[0]
     m = cfg.mustafar
     period = structural_period(cfg)
@@ -302,7 +323,7 @@ def decode_step(params, token: jax.Array, cache, cfg: ModelConfig,
             h = norm_apply(bp["norm1"], x, cfg.norm)
             if kind == "attn":
                 y, lc = _attn_decode(bp, h, cfg, lc, position, w_len, n_comp,
-                                     block_table)
+                                     block_table, model_axis)
                 x = x + y
                 if cfg.family == "audio":
                     hc = norm_apply(bp["norm_cross"], x, cfg.norm)
@@ -381,7 +402,8 @@ def init_chunk_carry(cfg: ModelConfig, T_buf: int, batch: int = 1):
 
 
 def prefill_chunk_step(params, chunk_tokens: jax.Array, kv_carry,
-                       offset: jax.Array, cfg: ModelConfig):
+                       offset: jax.Array, cfg: ModelConfig,
+                       model_axis: Optional[str] = None):
     """One prefill chunk: tokens [B, C] at absolute positions
     ``offset + arange(C)`` -> (logits [B, C, V], updated kv_carry).
 
@@ -429,7 +451,10 @@ def prefill_chunk_step(params, chunk_tokens: jax.Array, kv_carry,
                     kc["v"], v.astype(kc["v"].dtype), (0, offset, 0, 0))
             core = attn.prefix_causal_attention(q, k_buf, v_buf, positions,
                                                 cfg)
-            x = x + attn.o_proj(bp["mixer"], core, cfg)
+            y = attn.o_proj(bp["mixer"], core, cfg)
+            if model_axis is not None:
+                y = jax.lax.psum(y, model_axis)
+            x = x + y
             h2 = norm_apply(bp["norm2"], x, cfg.norm)
             f, _ = _ffn(bp, h2, cfg, "attn", cfg.ffn_kind(j))
             x = x + f
@@ -673,11 +698,15 @@ class Scheduler:
     per-layer K/V (transient — dropped at the splice) and are bit-identical
     to the one-shot prefill; see ``prefill_chunk_step``.
 
-    PACKED PREFILL (``pack_prefill=True``, requires chunking): instead of
+    PACKED PREFILL (``pack_prefill=True``, requires chunking; the DEFAULT
+    whenever ``prefill_chunk`` is set): instead of
     advancing one admission per step, chunks from up to
     ``prefill_budget // prefill_chunk`` in-flight admissions run as batch
     lanes of ONE ``prefill_chunk_step`` call per step (Sarathi-style
-    packing over a shared [n_slots, T_buf] K/V carry — lane = slot). The
+    packing over a shared [prefill_lanes, T_buf] K/V carry; lanes are
+    leased per admission and returned at the splice, and ``prefill_lanes``
+    caps the carry's lane count — default ``n_slots`` — so the persistent
+    buffer stops scaling with slot count at thousands of slots). The
     per-step executed-token bound is unchanged in budget terms, but the
     admissions drain concurrently instead of serially, collapsing TTFT
     under bursts. Admissions are packed fewest-remaining-chunks first
@@ -694,8 +723,11 @@ class Scheduler:
                  share_prefix: bool = False,
                  prefill_chunk: Optional[int] = None,
                  prefill_budget: Optional[int] = None,
-                 pack_prefill: bool = False,
-                 fused_compaction: bool = False,
+                 pack_prefill: Optional[bool] = None,
+                 fused_compaction: Optional[bool] = None,
+                 prefill_lanes: Optional[int] = None,
+                 tile_overhead_bytes: Optional[int] = None,
+                 mesh=None,
                  debug_invariants: bool = False):
         self.cfg = cfg
         self.params = params
@@ -703,9 +735,17 @@ class Scheduler:
         self.max_total = max_total_tokens
         if page_tokens == "auto":
             from repro.roofline import auto_page_tokens
-            page_tokens = auto_page_tokens(cfg, n_slots, max_total_tokens)
+            page_tokens = auto_page_tokens(
+                cfg, n_slots, max_total_tokens,
+                tile_overhead_bytes=tile_overhead_bytes)
         self.page_tokens = page_tokens
         self.paged = page_tokens is not None
+        # default-ON where applicable (both flags stay explicit opt-outs):
+        # fused compaction needs paged pools; packing needs chunked prefill
+        if fused_compaction is None:
+            fused_compaction = self.paged
+        if pack_prefill is None:
+            pack_prefill = prefill_chunk is not None
         if share_prefix and not self.paged:
             raise ValueError("share_prefix=True requires paged pools "
                              "(pass page_tokens=...)")
@@ -720,6 +760,8 @@ class Scheduler:
                     f"({prefill_chunk}) — no admission could ever advance")
         if pack_prefill and prefill_chunk is None:
             raise ValueError("pack_prefill=True requires prefill_chunk")
+        if prefill_lanes is not None and prefill_lanes < 1:
+            raise ValueError(f"prefill_lanes={prefill_lanes} must be >= 1")
         self.share_prefix = share_prefix
         self.debug_invariants = debug_invariants
         if self.paged:
@@ -749,9 +791,19 @@ class Scheduler:
                            and prefill_chunk_supported(cfg))
         self._pending: "collections.OrderedDict[int, _PendingPrefill]" = \
             collections.OrderedDict()
-        # packed-prefill lane carry (lane = slot), allocated on first use:
-        # one fixed [n_slots, T_buf] buffer keeps every packing step on a
-        # single jit executable regardless of which lanes are live
+        # packed-prefill lane carry, allocated on first use: one fixed
+        # [prefill_lanes, T_buf] buffer keeps every packing step on a
+        # single jit executable regardless of which lanes are live.
+        # ``prefill_lanes`` caps the lane count below n_slots so the
+        # persistent carry stops scaling with slot count at thousands of
+        # slots — admissions beyond the cap simply wait for a free lane
+        # (they'd have waited for packing bandwidth anyway: the per-step
+        # budget admits at most prefill_budget // prefill_chunk lanes)
+        self.prefill_lanes = (n_slots if prefill_lanes is None
+                              else min(prefill_lanes, n_slots))
+        self._free_lanes: Deque[int] = collections.deque(
+            range(self.prefill_lanes))
+        self._lane_of: Dict[int, int] = {}        # slot -> packed-carry lane
         self._packed_carry = None
         self._packed_T_buf = (-(-max_total_tokens // prefill_chunk)
                               * prefill_chunk if self._can_chunk else 0)
@@ -784,6 +836,17 @@ class Scheduler:
                                          max_total_tokens=max_total_tokens,
                                          plan_batch=n_slots),
                                  static_argnames=("T", "shared_tokens"))
+        # identity hook: the sharded install replaces it with a device_put
+        # that lays fresh chunk carries out over the mesh (Hkv sharded)
+        self._shard_carry = lambda c: c
+        self.mesh = mesh
+        if mesh is not None:
+            # KV-head tensor parallelism over the mesh's "model" axis:
+            # replaces params/cache with sharded copies and swaps the four
+            # jitted step functions for shard_map-wrapped ones. See
+            # serving.sharded for the layout contract.
+            from repro.serving.sharded import install_sharded_ops
+            install_sharded_ops(self, mesh)
 
     # ------------------------------------------------------------------
     def _check_admissible(self, req: Request) -> int:
@@ -1077,6 +1140,10 @@ class Scheduler:
         free = [i for i, s in enumerate(self.slots)
                 if s is None and i not in self._pending]
         while free and self.waiting:
+            if (self._can_chunk and self.pack_prefill
+                    and not self._free_lanes):
+                break        # all packed-prefill lanes busy: the admission
+                             # would have no carry rows; wait for a lane
             req = self.waiting[0]
             # re-validate at admission: requests can reach the queue without
             # submit() (or be mutated after it), and an inadmissible head
@@ -1133,8 +1200,11 @@ class Scheduler:
                     req=req, tokens=[int(t) for t in req.prompt], chunk=C,
                     T_buf=-(-T // C) * C,
                     carry=(None if self.pack_prefill
-                           else init_chunk_carry(self.cfg, -(-T // C) * C)),
+                           else self._shard_carry(
+                               init_chunk_carry(self.cfg, -(-T // C) * C))),
                     shared_pages=shared, shared_tokens=shared_tokens)
+                if self.pack_prefill:
+                    self._lane_of[slot] = self._free_lanes.popleft()
                 if self.paged:
                     self._slot_pages[slot] = list(shared)
                     self._slot_reserved[slot] = pages_needed
@@ -1218,7 +1288,10 @@ class Scheduler:
         first (ties FIFO by arrival then uid) — finishing short prompts
         early minimizes mean time-to-first-token without starving long
         ones (a long prompt keeps its lane and packs whenever fewer than
-        ``k_max`` shorter admissions are in flight).
+        ``k_max`` shorter admissions are in flight). Lanes come from a
+        free-lane lease pool of size ``prefill_lanes`` (assigned at
+        admission, returned at the splice) into a persistent
+        [prefill_lanes, T_buf] K/V carry.
 
         Unselected lanes (idle, or pending-but-over-budget) run a dummy
         zero-token chunk aimed at the carry TAIL rows: any row at or above
@@ -1238,22 +1311,24 @@ class Scheduler:
                                 kv[1].req.arrival_step, kv[1].req.uid))
             batch = order[:k_max]
             if self._packed_carry is None:
-                self._packed_carry = init_chunk_carry(
-                    self.cfg, self._packed_T_buf, batch=self.n_slots)
-            toks = [[0] * C for _ in range(self.n_slots)]
-            offs = [self._packed_T_buf - C] * self.n_slots  # dummy-lane tail
+                self._packed_carry = self._shard_carry(init_chunk_carry(
+                    self.cfg, self._packed_T_buf, batch=self.prefill_lanes))
+            toks = [[0] * C for _ in range(self.prefill_lanes)]
+            offs = [self._packed_T_buf - C] * self.prefill_lanes  # dummy tail
             for slot, pend in batch:
+                lane = self._lane_of[slot]
                 off = pend.done
                 n = min(C, len(pend.tokens) - off)
-                toks[slot] = pend.tokens[off:off + n] + [0] * (C - n)
-                offs[slot] = off
+                toks[lane] = pend.tokens[off:off + n] + [0] * (C - n)
+                offs[lane] = off
             lg, self._packed_carry = self._chunk_step(
                 self.params, jnp.asarray(toks, jnp.int32),
                 self._packed_carry, jnp.asarray(offs, jnp.int32))
             for slot, pend in batch:
+                lane = self._lane_of[slot]
                 off = pend.done
                 n = min(C, len(pend.tokens) - off)
-                pend.last_logits = lg[slot:slot + 1]
+                pend.last_logits = lg[lane:lane + 1]
                 pend.last_offset = off
                 pend.done += n
                 budget -= C
@@ -1261,7 +1336,8 @@ class Scheduler:
                 if pend.done >= len(pend.tokens):
                     del self._pending[slot]
                     pend.carry = jax.tree_util.tree_map(
-                        lambda a: a[:, slot:slot + 1], self._packed_carry)
+                        lambda a: a[:, lane:lane + 1], self._packed_carry)
+                    self._free_lanes.append(self._lane_of.pop(slot))
                     self._complete_prefill(slot, pend)
 
     def _complete_prefill(self, slot: int, pend: _PendingPrefill) -> None:

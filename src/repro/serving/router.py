@@ -1,0 +1,220 @@
+"""Data-parallel multi-engine router: N Scheduler replicas behind one
+``submit()``/``step()`` API.
+
+Tensor parallelism (``serving.sharded``) splits each step's work across
+devices; the router is the orthogonal axis — it splits the REQUEST STREAM
+across engine replicas, each with its own slot budget, page pool and
+(optionally) mesh. One router step steps only the engines that currently
+have work, which is where the throughput comes from: a continuous-batching
+engine pays for ALL its slots every decode step (inactive rows ride along —
+static shapes), so one 4-slot replica serving 3 requests costs ~4 slot-rows
+per step while a single 16-slot engine serving the same 3 costs ~16. At
+moderate concurrency the idle replicas simply don't step.
+
+ROUTING. Three signals, in priority order:
+
+1. **Prefix affinity** — each engine keeps its own ``PrefixIndex`` (page
+   ids are engine-local, so the index cannot physically be shared), but
+   the router treats the UNION of those indexes as one shared prefix
+   cache: ``submit`` probes every engine's trie (read-only — no LRU
+   touch) and routes to the engine holding the longest matched prefix, so
+   a prompt family concentrates where its pages already live instead of
+   recompressing per replica.
+2. **Pack** (default policy): among engines with a free slot, prefer the
+   BUSIEST — concentrating load keeps sibling replicas idle and therefore
+   free to skip steps entirely (see above; the opposite of classic
+   load-balancing, and the right call for throughput under static-shape
+   batches — ``policy="spread"`` flips it for latency-sensitive traffic).
+3. **Backlog** — when nobody can admit immediately, queue on the engine
+   with the shortest waiting line.
+
+Slot and page budgets partition evenly across replicas (remainders go to
+the earliest engines); per-engine admission gating (slot capacity, page
+budget, CoW headroom) is untouched Scheduler logic.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+from repro.configs.base import ModelConfig
+from repro.serving import cache as cache_mod
+from repro.serving.engine import Occupancy, Request, Scheduler
+
+
+def _split_evenly(total: int, n: int) -> List[int]:
+    base, rem = divmod(total, n)
+    return [base + (1 if i < rem else 0) for i in range(n)]
+
+
+class Router:
+    """N engine replicas behind one submit()/step() API.
+
+    ``n_slots`` / ``n_pages`` are TOTALS, partitioned across the
+    ``n_engines`` replicas; ``meshes`` optionally pins each replica to its
+    own device mesh (e.g. one single-device mesh per replica to spread
+    engines over a host's devices, or a multi-device mesh each for
+    TP-within-replica — router data parallelism composes with shard_map
+    tensor parallelism). Every other keyword is forwarded verbatim to each
+    ``Scheduler``."""
+
+    def __init__(self, cfg: ModelConfig, params, n_engines: int,
+                 n_slots: int, max_total_tokens: int, seed: int = 0,
+                 n_pages: Optional[int] = None,
+                 meshes: Optional[List[Any]] = None,
+                 policy: str = "pack",
+                 **sched_kwargs):
+        if n_engines < 1:
+            raise ValueError(f"n_engines={n_engines} must be >= 1")
+        if n_slots < n_engines:
+            raise ValueError(f"n_slots={n_slots} cannot cover "
+                             f"{n_engines} engines")
+        if policy not in ("pack", "spread"):
+            raise ValueError(f"unknown routing policy {policy!r}")
+        if meshes is not None and len(meshes) != n_engines:
+            raise ValueError("meshes must list one mesh per engine")
+        self.cfg = cfg
+        self.policy = policy
+        self.n_engines = n_engines
+        slot_split = _split_evenly(n_slots, n_engines)
+        page_split = (_split_evenly(n_pages, n_engines)
+                      if n_pages is not None else [None] * n_engines)
+        self.engines: List[Scheduler] = [
+            Scheduler(cfg, params, n_slots=slot_split[i],
+                      max_total_tokens=max_total_tokens, seed=seed + i,
+                      n_pages=page_split[i],
+                      mesh=(meshes[i] if meshes is not None else None),
+                      **sched_kwargs)
+            for i in range(n_engines)]
+        self.step_count = 0
+        self._uid = 0
+        self._owner: Dict[int, int] = {}          # uid -> engine index
+
+    # ------------------------------------------------------------------
+    # routing
+
+    def _load(self, e: Scheduler) -> int:
+        """In-flight work on one engine: queued + mid-prefill + decoding."""
+        return (len(e.waiting) + len(e._pending)
+                + sum(s is not None for s in e.slots))
+
+    def _free_now(self, e: Scheduler) -> bool:
+        """Could the engine admit at its next step (ignoring page gating,
+        which only defers — the per-engine queue handles that)?"""
+        free = sum(1 for i, s in enumerate(e.slots)
+                   if s is None and i not in e._pending)
+        return free > len(e.waiting)
+
+    def _prefix_affinity(self, prompt) -> Optional[int]:
+        """Engine index holding the longest indexed prefix of ``prompt``
+        (read-only probe of every replica's trie — the router-level view
+        of a shared prefix cache), or None when nothing matches."""
+        best, best_tokens = None, 0
+        for i, e in enumerate(self.engines):
+            if not e.share_prefix:
+                continue
+            comp, _ = cache_mod.prefill_split(e.cfg, len(prompt))
+            _, _, shared_tokens = e.prefix.match(prompt, comp)
+            if shared_tokens > best_tokens:
+                best, best_tokens = i, shared_tokens
+        return best
+
+    def _route(self, req: Request) -> int:
+        hit = self._prefix_affinity(req.prompt)
+        if hit is not None:
+            return hit
+        order = list(range(self.n_engines))
+        if self.policy == "pack":
+            # busiest-first among immediately-admissible engines: fills
+            # replicas one at a time so the rest stay idle (skippable)
+            order.sort(key=lambda i: -self._load(self.engines[i]))
+            for i in order:
+                if self._free_now(self.engines[i]):
+                    return i
+            # everyone is saturated: shortest backlog
+            return min(order, key=lambda i: len(self.engines[i].waiting))
+        # spread: least loaded
+        return min(order, key=lambda i: self._load(self.engines[i]))
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> Request:
+        """Validate, pick a replica, enqueue. Router-global uids keep the
+        aggregated ``finished`` list unambiguous."""
+        if req.uid < 0:
+            req.uid = self._uid
+        self._uid = max(self._uid, req.uid) + 1
+        i = self._route(req)
+        self._owner[req.uid] = i
+        self.engines[i].submit(req)
+        return req
+
+    def step(self) -> None:
+        """One router step: step every engine that has work. Idle engines
+        are skipped outright — no admit scan, no frozen decode."""
+        for e in self.engines:
+            if e.has_work:
+                e.step()
+        self.step_count += 1
+
+    @property
+    def has_work(self) -> bool:
+        return any(e.has_work for e in self.engines)
+
+    def run(self, max_steps: int = 1 << 20) -> List[Request]:
+        while self.has_work and self.step_count < max_steps:
+            self.step()
+        return self.finished
+
+    # ------------------------------------------------------------------
+    # aggregation
+
+    @property
+    def finished(self) -> List[Request]:
+        out: List[Request] = []
+        for e in self.engines:
+            out.extend(e.finished)
+        out.sort(key=lambda r: r.uid)
+        return out
+
+    @property
+    def engine_of(self) -> Dict[int, int]:
+        """uid -> engine index (for tests / debugging)."""
+        return dict(self._owner)
+
+    @property
+    def occupancy(self) -> Occupancy:
+        """Fleet-level utilization: busy-slot (and busy-page) fractions
+        over the steps each engine ACTUALLY ran — idle skipped steps cost
+        nothing, so they are not in the denominator."""
+        slot_num = sum(e.busy_slot_steps for e in self.engines)
+        slot_den = sum(e.decode_steps * e.n_slots for e in self.engines)
+        pages = None
+        if all(e.paged for e in self.engines):
+            page_num = sum(e.busy_page_steps for e in self.engines)
+            page_den = sum(e.decode_steps * e.n_pages for e in self.engines)
+            pages = page_num / max(1, page_den)
+        return Occupancy(slot_num / max(1, slot_den), pages)
+
+    @property
+    def pages_in_use(self) -> int:
+        """Fleet-wide drawn pages (includes prefix-index-held cache)."""
+        return sum(e.allocator.in_use for e in self.engines
+                   if e.paged)
+
+    @property
+    def page_leaks(self) -> int:
+        """Drawn pages NOT accounted for by live slots or the prefix
+        index's deliberate cache holds. 0 after a clean drain — the
+        router-level zero-leak invariant the tests assert."""
+        leaks = 0
+        for e in self.engines:
+            if not e.paged:
+                continue
+            held = set()
+            for sp in e._slot_pages:
+                held.update(sp)
+            if e.share_prefix:
+                held.update(e.prefix.held_pages)
+            in_use = {p for p in range(e.n_pages)
+                      if e.allocator.refcount(p) > 0}
+            leaks += len(in_use - held)
+        return leaks

@@ -1,0 +1,320 @@
+"""KV-head-sharded serving: run the paged engine hot path under shard_map.
+
+LAYOUT CONTRACT (one mesh axis, ``"model"``, per engine):
+
+- **params** — Megatron-style tensor parallelism, serving posture
+  (``sharding.specs.serving_param_specs``): wq/wk/wv column-shard their
+  fused head dim (head-major reshape ⇒ contiguous whole heads per
+  device), wo row-shards to match, bq/bk/bv ride with their heads, and
+  ``bo`` is replicated but divided by the axis size at install (it sits
+  before the psum point — see ``_rescale_o_bias``). Norms, FFN, embedding
+  and LM head replicate: every device runs the identical non-attention
+  compute, so logits emerge replicated without a dedicated collective.
+- **cache** — the global page pool ``[n_phys, Hkv, page_tokens, k]``
+  shards Hkv on "model"; physical-page ids stay device-agnostic (the page
+  dim is NOT sharded), so the block table + per-slot counters are
+  replicated int32 metadata the host-side allocator mutates exactly as in
+  the single-device engine. Dense windows and contiguous solo pools shard
+  Hkv the same way (``sharding.specs.cache_specs``).
+- **step functions** — decode / one-shot prefill / packed chunk step /
+  finalize each wrap the EXISTING ``serving.engine`` function in one
+  ``shard_map`` whose body runs with a LOCAL config (head counts divided
+  by the axis size, ``local_config``) and ``model_axis="model"``: every
+  device executes the same kernels on its head shard, and the ONLY
+  cross-device traffic in steady state is one ``lax.psum`` of the [B,1,D]
+  residual per attention layer. ``collective_audit`` proves it from the
+  compiled HLO: all-reduce only, no all-gather / all-to-all /
+  collective-permute (no per-step resharding).
+
+Per-device bytes: ``pool_bytes / model + window_bytes / model +
+replicated_metadata`` — ``serving.cache.cache_hbm_bytes(mesh_model=...)``
+models it, ``per_device_cache_bytes`` measures it from live shards.
+
+``check_rep=False`` everywhere: the replication of psum-produced outputs
+is not verifiable by shard_map's static rep-checker, and the counter
+leaves are replicated by construction (identical compute per device).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.model import structural_period
+from repro.serving import engine as engine_mod
+from repro.sharding import specs as specs_mod
+
+MODEL = specs_mod.MODEL
+
+
+# ----------------------------------------------------------------------
+# eligibility + mesh/config plumbing
+
+def sharding_supported(cfg: ModelConfig, model: int) -> bool:
+    """True iff the serving shard_map posture covers this config at the
+    given model-axis size: a pure-attention decoder stack (the same gate
+    as chunked prefill — recurrent mixers would need their own state
+    sharding story) whose q AND kv head counts divide the axis (whole
+    heads per device is what keeps every existing kernel reusable)."""
+    period = structural_period(cfg)
+    return (model >= 1
+            and cfg.family not in ("audio", "vlm")
+            and all(cfg.layer_kind(j) == "attn" for j in range(period))
+            and cfg.n_heads % model == 0
+            and cfg.n_kv_heads % model == 0)
+
+
+def make_serving_mesh(model: int, devices=None) -> Mesh:
+    """1-D ("model",) mesh over the first ``model`` devices. Data
+    parallelism lives ABOVE the mesh in ``serving.router`` (engine
+    replicas), so a serving mesh never carries a "data" axis — batch
+    leaves replicate automatically under ``specs.data_axes``."""
+    devices = list(jax.devices()) if devices is None else list(devices)
+    if model > len(devices):
+        raise ValueError(
+            f"model={model} exceeds the {len(devices)} visible devices")
+    return Mesh(np.asarray(devices[:model]), (MODEL,))
+
+
+def local_config(cfg: ModelConfig, model: int) -> ModelConfig:
+    """The per-device view of the model: head counts divided by the axis
+    size, everything else (d_head, d_model, GQA ratio) unchanged — the
+    shard_map bodies hand this to the unmodified engine functions."""
+    if model == 1:
+        return cfg
+    return dataclasses.replace(cfg, n_heads=cfg.n_heads // model,
+                               n_kv_heads=cfg.n_kv_heads // model)
+
+
+def _norm_spec(s: P) -> P:
+    # a 1-D model mesh has no data axes, so batch rules resolve to the
+    # empty tuple; normalize to None for shard_map spec matching
+    return P(*(None if e == () else e for e in s))
+
+
+def _norm_tree(tree):
+    return jax.tree.map(_norm_spec, tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _rescale_o_bias(params, model: int):
+    """``o_proj`` adds ``bo`` BEFORE the per-layer psum, so an unscaled
+    replicated bias would be summed ``model`` times. Dividing it once at
+    install keeps the engine code untouched: psum(out_i @ wo_i + bo/M)
+    == (sum_i out_i @ wo_i) + bo."""
+    if model == 1:
+        return params
+
+    def fix(path, leaf):
+        name = str(getattr(path[-1], "key", ""))
+        return (leaf / model).astype(leaf.dtype) if name == "bo" else leaf
+
+    return jax.tree_util.tree_map_with_path(fix, params)
+
+
+# ----------------------------------------------------------------------
+# the four step functions, shard_map-wrapped
+
+class ShardedServingOps:
+    """Sharded placements + step functions for one Scheduler.
+
+    Construction computes every PartitionSpec tree the engine needs
+    (params, shared cache, solo prefill cache, chunk carry) and builds
+    jitted shard_map wrappers with call signatures IDENTICAL to the
+    single-device jits they replace — ``install_sharded_ops`` just swaps
+    them onto the Scheduler."""
+
+    def __init__(self, cfg: ModelConfig, mesh: Mesh, params, cache,
+                 n_slots: int, max_total_tokens: int,
+                 fused_compaction: bool = False):
+        M = int(mesh.shape[MODEL])
+        if not sharding_supported(cfg, M):
+            raise ValueError(
+                f"config not shardable over model={M}: serving TP needs a "
+                f"pure-attention decoder stack with n_heads={cfg.n_heads} "
+                f"and n_kv_heads={cfg.n_kv_heads} divisible by the axis")
+        self.cfg, self.mesh, self.M = cfg, mesh, M
+        self.cfg_local = local_config(cfg, M)
+        self.n_slots, self.max_total = n_slots, max_total_tokens
+        self.pspecs = _norm_tree(
+            specs_mod.serving_param_specs(params, cfg, mesh))
+        self.cache_specs = _norm_tree(specs_mod.cache_specs(cache, cfg, mesh))
+        period = structural_period(cfg)
+        cspec = P(None, None, None, MODEL, None)   # [Pd,B,T_buf,Hkv,d]
+        self.carry_specs = tuple({"k": cspec, "v": cspec}
+                                 for _ in range(period))
+        # the solo (B=1) prefill cache tree: structure is prompt-length
+        # independent, so one eval_shape fixes the out_specs for every T
+        m = cfg.mustafar
+        T0 = (m.local_window + m.tile_tokens) if m.enabled else 8
+        _, solo_shapes = jax.eval_shape(
+            lambda p, t: engine_mod.prefill(p, t, cfg, max_total_tokens,
+                                            plan_batch=n_slots),
+            params, jax.ShapeDtypeStruct((1, T0), jnp.int32))
+        self.solo_specs = _norm_tree(
+            specs_mod.cache_specs(solo_shapes, cfg, mesh, paged=False))
+
+        cfg_l = self.cfg_local
+
+        def decode_body(p, token, cache, active):
+            return engine_mod.decode_step(
+                p, token, cache, cfg_l, active=active,
+                fused_compaction=fused_compaction, model_axis=MODEL)
+
+        dec = shard_map(decode_body, mesh=mesh,
+                        in_specs=(self.pspecs, P(), self.cache_specs, P()),
+                        out_specs=(P(), self.cache_specs),
+                        check_rep=False)
+
+        def _decode(p, token, cache, active=None):
+            if active is None:
+                active = jnp.ones(token.shape, jnp.bool_)
+            return dec(p, token, cache, active)
+
+        self.decode = jax.jit(_decode)
+
+        @partial(jax.jit, static_argnames=("shared_tokens",))
+        def _prefill(p, tokens, shared_tokens=0):
+            def body(pp, tt):
+                return engine_mod.prefill(
+                    pp, tt, cfg_l, max_total_tokens, plan_batch=n_slots,
+                    shared_tokens=shared_tokens, model_axis=MODEL)
+            return shard_map(body, mesh=mesh,
+                             in_specs=(self.pspecs, P()),
+                             out_specs=(P(), self.solo_specs),
+                             check_rep=False)(p, tokens)
+
+        self.prefill = _prefill
+
+        def chunk_body(p, t, c, o):
+            return engine_mod.prefill_chunk_step(p, t, c, o, cfg_l,
+                                                 model_axis=MODEL)
+
+        self.chunk_step = jax.jit(shard_map(
+            chunk_body, mesh=mesh,
+            in_specs=(self.pspecs, P(), self.carry_specs, P()),
+            out_specs=(P(), self.carry_specs), check_rep=False))
+
+        @partial(jax.jit, static_argnames=("T", "shared_tokens"))
+        def _finalize(p, kv_carry, T, shared_tokens=0):
+            def body(pp, cc):
+                # no attention here — prune+compress of the carried K/V is
+                # head-local, so the body needs no psum; counters come out
+                # replicated because every device computes them identically
+                return engine_mod.finalize_chunked_prefill(
+                    pp, cc, cfg_l, T, max_total_tokens, plan_batch=n_slots,
+                    shared_tokens=shared_tokens)
+            return shard_map(body, mesh=mesh,
+                             in_specs=(self.pspecs, self.carry_specs),
+                             out_specs=self.solo_specs,
+                             check_rep=False)(p, kv_carry)
+
+        self.finalize = _finalize
+
+    # ------------------------------------------------------------------
+    def shard_params(self, params):
+        return jax.device_put(_rescale_o_bias(params, self.M),
+                              specs_mod.to_named(self.pspecs, self.mesh))
+
+    def shard_cache(self, cache):
+        return jax.device_put(cache,
+                              specs_mod.to_named(self.cache_specs, self.mesh))
+
+    def shard_carry(self, carry):
+        """Lay a fresh chunk carry out over the mesh (Hkv sharded) so the
+        first packed chunk step never resharding-copies it."""
+        return jax.device_put(carry,
+                              specs_mod.to_named(self.carry_specs, self.mesh))
+
+
+def install_sharded_ops(sched, mesh: Mesh) -> ShardedServingOps:
+    """Switch a freshly-constructed Scheduler onto the mesh: shard its
+    params/cache in place and replace the four jitted step functions with
+    the shard_map wrappers. Called from ``Scheduler.__init__(mesh=...)``;
+    everything else in the scheduler (allocator, block-table splices,
+    packed-lane bookkeeping, sampling) is host-side metadata work that
+    runs unchanged — eager updates on replicated leaves stay replicated
+    and sliced/DUS'd sharded leaves keep their sharding under GSPMD."""
+    ops = ShardedServingOps(sched.cfg, mesh, sched.params, sched.cache,
+                            sched.n_slots, sched.max_total,
+                            fused_compaction=sched.fused_compaction)
+    sched.params = ops.shard_params(sched.params)
+    sched.cache = ops.shard_cache(sched.cache)
+    sched.next_tokens = jax.device_put(sched.next_tokens,
+                                       NamedSharding(mesh, P()))
+    sched._decode = ops.decode
+    sched._prefill = ops.prefill
+    sched._chunk_step = ops.chunk_step
+    sched._finalize = ops.finalize
+    sched._shard_carry = ops.shard_carry
+    sched._sharded = ops
+    return ops
+
+
+# ----------------------------------------------------------------------
+# verification: sharding assertions + compiled-HLO collective audit
+
+_RESHARD_OPS = ("all-gather", "all-to-all", "collective-permute")
+
+
+def collective_audit(jitted_fn, *args, **kwargs):
+    """Compile a wrapped step on the given arguments and count collectives
+    in the optimized HLO. Returns {op_name: count} for all-reduce plus the
+    three resharding ops."""
+    txt = jitted_fn.lower(*args, **kwargs).compile().as_text()
+    return {op: len(re.findall(re.escape(op) + r"[.(\s-]", txt))
+            for op in _RESHARD_OPS + ("all-reduce",)}
+
+
+def assert_no_resharding(counts) -> None:
+    """The steady-state contract: per-layer all-reduce is the ONLY
+    collective; any all-gather / all-to-all / collective-permute means an
+    input's layout disagrees with what the body produces (a per-step
+    reshard that would swamp the psum traffic at scale)."""
+    bad = {k: v for k, v in counts.items() if k in _RESHARD_OPS and v}
+    if bad:
+        raise AssertionError(
+            f"resharding collectives in steady-state HLO: {bad}")
+
+
+def assert_cache_shardings(sched) -> None:
+    """Post-step layout check (the jax.debug-style assertion of the
+    tentpole): every live cache leaf is laid out EXACTLY as cache_specs
+    prescribes — pool/window leaves Hkv-sharded on "model", block table
+    and counters replicated. Catches eager host-side mutations (block-
+    table splices, CoW page copies, slot writes) silently resharding a
+    leaf between steps."""
+    ops = sched._sharded
+    leaves = jax.tree.leaves(sched.cache)
+    specs = jax.tree.leaves(ops.cache_specs,
+                            is_leaf=lambda x: isinstance(x, P))
+    assert len(leaves) == len(specs)
+    for leaf, spec in zip(leaves, specs):
+        want = NamedSharding(ops.mesh, spec)
+        if not leaf.sharding.is_equivalent_to(want, leaf.ndim):
+            raise AssertionError(
+                f"cache leaf {leaf.shape} drifted to {leaf.sharding}, "
+                f"expected {want}")
+
+
+def per_device_cache_bytes(cache) -> int:
+    """Measured per-device bytes of a (possibly sharded) cache: one
+    addressable shard per leaf — replicated leaves charge their full
+    size (every device holds a copy), sharded leaves 1/axis of it."""
+    total = 0
+    for leaf in jax.tree.leaves(cache):
+        shards = getattr(leaf, "addressable_shards", None)
+        if shards:
+            d = shards[0].data
+            total += int(d.size) * d.dtype.itemsize
+        else:
+            total += int(getattr(leaf, "nbytes", 0))
+    return total

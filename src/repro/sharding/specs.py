@@ -149,6 +149,60 @@ def param_specs(params_or_shapes, mesh: Mesh, fsdp: bool = True,
 
 
 # ----------------------------------------------------------------------
+# serving tensor-parallel param rules (shard_map posture)
+
+def serving_param_partition_spec(path_names, shape, cfg: ModelConfig,
+                                 mesh: Mesh) -> P:
+    """Param leaf rule for the SERVING shard_map posture
+    (``serving.sharded``): Megatron-style tensor parallelism over "model"
+    with everything else replicated.
+
+    wq/wk/wv column-shard their fused projection dim — the head-split
+    reshape is head-MAJOR, so a contiguous column block per device IS a
+    contiguous block of whole heads (requires ``n_heads % model == 0``
+    and ``n_kv_heads % model == 0``; enforced by
+    ``serving.sharded.sharding_supported``). wo row-shards to match (each
+    device contracts its own heads' outputs; the per-layer ``psum`` in the
+    engine completes the sum). bq/bk/bv shard with their heads; ``bo``
+    stays REPLICATED — it sits before the psum point, so the shard_map
+    body divides it by the axis size instead (see
+    ``serving.sharded._rescale_o_bias``). Norms, FFN, embeddings and the
+    LM head replicate: their compute is identical on every device, which
+    is what lets the final logits come out replicated with no extra
+    collective."""
+    name = path_names[-1]
+    stacked = any(n in ("blocks", "encoder") for n in path_names)
+    lead = (None,) if stacked else ()
+    core = shape[1:] if stacked else shape
+    rank = len(core)
+
+    def spec(*entries):
+        return P(*(lead + entries))
+
+    heads = cfg.n_heads if name in ("wq", "bq", "wo") else cfg.n_kv_heads
+    tp_ok = _fits(heads, mesh, MODEL)
+    if name in ("wq", "wk", "wv") and rank == 2 and tp_ok:
+        return spec(None, MODEL)                  # [D, H·dh] column shard
+    if name in ("bq", "bk", "bv") and rank == 1 and tp_ok:
+        return spec(MODEL)                        # [H·dh] with its heads
+    if name == "wo" and rank == 2 and tp_ok:
+        return spec(MODEL, None)                  # [H·dh, D] row shard
+    return spec(*([None] * rank))
+
+
+def serving_param_specs(params_or_shapes, cfg: ModelConfig, mesh: Mesh):
+    """Tree of serving-TP PartitionSpecs matching the param tree."""
+    flat = jax.tree_util.tree_flatten_with_path(params_or_shapes)
+    specs = []
+    for path, leaf in flat[0]:
+        names = [str(p.key) if hasattr(p, "key") else str(getattr(p, "idx", p))
+                 for p in path]
+        specs.append(serving_param_partition_spec(names, leaf.shape, cfg,
+                                                  mesh))
+    return jax.tree.unflatten(flat[1], specs)
+
+
+# ----------------------------------------------------------------------
 # batch / activation / state rules
 
 def batch_spec(B: int, mesh: Mesh, extra_dims: int = 1) -> P:
@@ -173,20 +227,41 @@ def opt_state_specs(pspecs, step_like=None):
     return OptState(P(), pspecs, pspecs, pspecs)
 
 
-def cache_partition_spec(path_names, shape, cfg: ModelConfig, mesh: Mesh) -> P:
+def cache_partition_spec(path_names, shape, cfg: ModelConfig, mesh: Mesh,
+                         paged: bool = False) -> P:
     """Serving-cache leaf rule. Leaves under 'blocks' carry a leading
-    period-stack dim (never sharded)."""
+    period-stack dim (never sharded).
+
+    PAGED pools (``paged=True``): the four compressed-pool leaves are a
+    GLOBAL page pool ``[n_phys, Hkv, page_tokens, k]`` under the period
+    stack — no leading batch dim. Hkv shards on "model" (each device holds
+    its KV-head slice of EVERY physical page, so the host-side allocator /
+    block-table arithmetic is device-agnostic) and the physical-page dim
+    stays unsharded: page ids must mean the same thing on every device or
+    the replicated block table would be wrong. The ``block_table`` and
+    ``n_valid``-style metadata leaves are REPLICATED — they are int32 and
+    tiny (``4·B·max_pages``), and every device needs every mapping to
+    translate its own head shard's tiles. Per-device pool bytes are thus
+    ``pool_bytes / mesh.shape["model"] + metadata_bytes`` (see
+    ``serving.cache.cache_hbm_bytes(mesh_model=...)``)."""
     name = path_names[-1]
-    if name in ("position", "w_len", "n_compressed"):
+    if name in ("position", "w_len", "n_compressed", "block_table"):
         return P()
     dp = data_axes(mesh)
     core = shape[1:]                      # strip period stack
-    B = core[0]
-    b_ax = dp if _fits(B, mesh, dp) else (
-        ("data",) if _fits(B, mesh, ("data",)) else None)
 
     def with_lead(*entries):
         return P(None, *entries)
+
+    if paged and name in ("ck_vals", "ck_bm", "cv_vals", "cv_bm"):
+        # paged pool leaf [n_phys, Hkv, page_tokens, k]: heads on "model",
+        # physical pages replicated (ids must be device-agnostic)
+        _, Hkv, _, _ = core
+        return with_lead(None, _maybe(Hkv, mesh, MODEL), None, None)
+
+    B = core[0]
+    b_ax = dp if _fits(B, mesh, dp) else (
+        ("data",) if _fits(B, mesh, ("data",)) else None)
 
     if name in ("ck_vals", "ck_bm", "cv_vals", "cv_bm"):   # [B,Hkv,Tc,k]
         _, Hkv, Tc, _ = core
@@ -217,17 +292,27 @@ def cache_partition_spec(path_names, shape, cfg: ModelConfig, mesh: Mesh) -> P:
     return with_lead(*([None] * len(core)))
 
 
-def cache_specs(cache_shapes, cfg: ModelConfig, mesh: Mesh):
+def cache_specs(cache_shapes, cfg: ModelConfig, mesh: Mesh,
+                paged: Optional[bool] = None):
+    """Tree of PartitionSpecs for a serving cache (or its shapes).
+
+    ``paged`` selects the paged-pool leaf rules; default autodetects from
+    the presence of a ``block_table`` key (paged caches always carry one)."""
     flat = jax.tree_util.tree_flatten_with_path(cache_shapes)
+    if paged is None:
+        paged = any(
+            any(str(getattr(p, "key", "")) == "block_table" for p in path)
+            for path, _ in flat[0])
     specs = []
     for path, leaf in flat[0]:
         names = [str(p.key) if hasattr(p, "key") else str(getattr(p, "idx", p))
                  for p in path]
         shape = leaf.shape
-        if names[-1] in ("position", "w_len", "n_compressed"):
+        if names[-1] in ("position", "w_len", "n_compressed", "block_table"):
             specs.append(P())
         else:
-            specs.append(cache_partition_spec(names, shape, cfg, mesh))
+            specs.append(cache_partition_spec(names, shape, cfg, mesh,
+                                              paged=paged))
     return jax.tree.unflatten(flat[1], specs)
 
 
