@@ -454,6 +454,242 @@ def sharding_main(rng=None, smoke: bool = False) -> dict:
     return r
 
 
+def preemption_main(rng=None, smoke: bool = False) -> dict:
+    """BENCH_preemption: page-aware preemption + the hierarchical cache
+    tier (HBM → host spool → restart persistence), the PR-8 tentpole.
+
+    PHASE 1 — admission policies on an OVERCOMMITTED pool. One seeded
+    Poisson trace mixes a background lane (priority 0, long generations
+    that monopolize the page pool) with an interactive lane (priority 1,
+    short requests). The pool is sized so one background request's
+    worst-case reservation fills it — concurrent work MUST wait, shed, or
+    preempt. The same trace is served three ways:
+
+      * ``wait``    — head-of-line blocking (the pre-PR-8 behavior):
+        everything completes, but interactive requests queue behind
+        background ones for their whole lifetime (the p99 TTFT tail);
+      * ``reject``  — admissions that cannot reserve shed immediately:
+        the tail collapses, but shed requests are GONE (completions drop);
+      * ``preempt`` — a blocked higher-priority admission swaps a
+        lowest-priority victim's pages to the host ``PageSpool``
+        (device_get of the gathered page leaves + window/state + the
+        per-slot counters), admits, and restores the victim later by
+        splicing the spooled bytes back. No recomputation happens, so
+        every preempted request's outputs are BIT-IDENTICAL to the
+        ``wait`` run's (asserted — the core correctness gate), and
+        completions match ``wait`` while the interactive tail matches
+        ``reject``.
+
+    Gates: preempt completes >= 1.2x reject's requests (smoke: >= 1.0x,
+    same direction on the shortened trace), >= 1 actual swap round-trip,
+    bit-exact outputs, and the spool's measured ``bytes_out`` must equal
+    the ``roofline.swap_bytes`` model (pages + window; the model's 12
+    counter bytes/event are host ints the spool doesn't count).
+
+    PHASE 2 — restart persistence. A builder scheduler serves a shared-
+    prefix trace, then ``save_prefix_cache``. A WARM scheduler ``load``s
+    the file (entries arrive spooled; the first admission promotes them
+    onto fresh device pages) and serves new same-prefix requests against
+    a COLD scheduler serving identically. Both are compile-warmed on a
+    disjoint prefix family (including one demote→promote round so the
+    scatter executables are hot) before per-step wall-clock timing.
+    Warm-start mean TTFT must beat cold-start (asserted in the full run;
+    smoke still asserts the warm run actually shared spooled chains and
+    that outputs match cold exactly)."""
+    import os
+    import tempfile
+    import time
+
+    import jax
+
+    from repro import roofline
+    from repro.models import init_params
+    from repro.serving.engine import Request, Scheduler
+
+    arch, seed = "starcoder2-3b", 0
+    cfg = get_config(arch).reduced().with_sparsity(0.7, 0.7)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    page_tokens = cfg.mustafar.tile_tokens
+    max_total = 96
+    n_slots = 4
+    n_pages = 4          # one background request's worst case == the pool
+    n_requests = 10 if smoke else 18
+    bg_gen = 32 if smoke else 56
+
+    def trace():
+        r = np.random.default_rng(seed)
+        arrivals = np.cumsum(r.exponential(2.0,
+                                           size=n_requests)).astype(int)
+        reqs = []
+        for k in range(n_requests):
+            if k % 3 == 1:           # interactive lane
+                L, g, prio = int(r.choice((12, 16))), 16, 1
+            else:                    # background lane
+                L, g, prio = int(r.choice((16, 24))), bg_gen, 0
+            reqs.append(Request(
+                prompt=list(r.integers(0, cfg.vocab_size, size=L)),
+                max_new_tokens=g, priority=prio))
+        return arrivals, reqs
+
+    def serve(policy: str):
+        sched = Scheduler(cfg, params, n_slots=n_slots,
+                          max_total_tokens=max_total,
+                          page_tokens=page_tokens, n_pages=n_pages,
+                          admission_policy=policy)
+        arrivals, reqs = trace()
+        i = 0
+        while i < n_requests or sched.has_work:
+            while i < n_requests and arrivals[i] <= sched.step_count:
+                sched.submit(reqs[i])
+                i += 1
+            sched.step()
+            assert sched.step_count < 20_000, f"{policy} failed to drain"
+        return sched, reqs
+
+    results = {}
+    for policy in ("wait", "reject", "preempt"):
+        sched, reqs = serve(policy)
+        done = [r for r in reqs if r.done]
+        ttft = [r.first_token_step - r.arrival_step for r in done]
+        hi_ttft = [r.first_token_step - r.arrival_step for r in done
+                   if r.priority > 0]
+        swap_out = sched.spool.bytes_out
+        swap_in = sched.spool.bytes_in
+        emit(f"preemption/{policy}", 0.0,
+             f"completed={len(done)}/{n_requests} "
+             f"ttft_p99={float(np.percentile(ttft, 99)):.1f} "
+             f"preempts={sched.preempt_count} swap_out_bytes={swap_out}",
+             completed=len(done), rejected=len(sched.rejected),
+             preempt_count=sched.preempt_count,
+             restore_count=sched.restore_count,
+             ttft_steps_p50=float(np.percentile(ttft, 50)),
+             ttft_steps_p99=float(np.percentile(ttft, 99)),
+             ttft_steps_p99_interactive=float(np.percentile(hi_ttft, 99)),
+             swap_bytes_out=swap_out, swap_bytes_in=swap_in)
+        results[policy] = {"sched": sched, "reqs": reqs,
+                           "completed": len(done)}
+
+    sched_p = results["preempt"]["sched"]
+    # bit-exact victims: wait never swaps, so its per-request outputs ARE
+    # the uninterrupted reference
+    for rw, rp in zip(results["wait"]["reqs"], results["preempt"]["reqs"]):
+        assert rw.output_tokens == rp.output_tokens, \
+            f"uid {rp.uid} diverged after {rp.preempt_count} preemptions"
+    assert sched_p.preempt_count >= 1, "trace never actually preempted"
+    assert sched_p.restore_count == sched_p.preempt_count
+    # swap accounting: measured spool traffic == roofline model (pages +
+    # window per event; the model's 3 int32 counters per event are host
+    # ints the spool stores at zero numpy bytes)
+    # swap_bytes is affine in n_pages; sum it over events as
+    # per_page * total_pages + per_event_fixed * events
+    per_page = (roofline.swap_bytes(cfg, page_tokens, 1)
+                - roofline.swap_bytes(cfg, page_tokens, 0))
+    modeled_out = (per_page * sched_p.swapped_pages
+                   + sched_p.preempt_count
+                   * roofline.swap_bytes(cfg, page_tokens, 0))
+    measured = sched_p.spool.bytes_out + 12 * sched_p.preempt_count
+    assert measured == modeled_out, (measured, modeled_out)
+    emit("preemption/swap_model", 0.0,
+         f"modeled_bytes_per_trace={modeled_out} "
+         f"(measured {sched_p.spool.bytes_out} + counters)",
+         modeled_swap_bytes=modeled_out,
+         measured_swap_bytes=sched_p.spool.bytes_out,
+         swapped_pages=sched_p.swapped_pages)
+    ratio = results["preempt"]["completed"] / max(1, results["reject"]
+                                                  ["completed"])
+    bar = 1.0 if smoke else 1.2
+    emit("preemption/completions", 0.0,
+         f"preempt/reject={ratio:.2f}x (bar: {bar:.1f}x) at bit-exact "
+         f"outputs", completion_ratio=ratio)
+    assert ratio >= bar, \
+        f"preemption completed only {ratio:.2f}x reject's requests"
+
+    # ---------------- phase 2: restart persistence -------------------
+    prefix_len, suffix_len, k_timed = 64, 6, 3 if smoke else 4
+    r = np.random.default_rng(seed + 1)
+    real_prefix = [int(t) for t in r.integers(0, cfg.vocab_size,
+                                              size=prefix_len)]
+    warm_prefix = [int(t) for t in r.integers(0, cfg.vocab_size,
+                                              size=prefix_len)]
+
+    def prefix_req(prefix, rr):
+        suffix = [int(t) for t in rr.integers(0, cfg.vocab_size,
+                                              size=suffix_len)]
+        return Request(prompt=prefix + suffix, max_new_tokens=4)
+
+    def make_sched(s):
+        return Scheduler(cfg, params, n_slots=2,
+                         max_total_tokens=max_total,
+                         page_tokens=page_tokens, share_prefix=True,
+                         seed=s)
+
+    path = os.path.join(tempfile.mkdtemp(prefix="mustafar_bench_"),
+                        "prefix_cache.pkl")
+    builder = make_sched(0)
+    rb = np.random.default_rng(seed + 2)
+    builder.submit(prefix_req(real_prefix, rb))
+    builder.run(max_steps=4000)
+    n_saved = builder.save_prefix_cache(path)
+
+    def warm_compiles(sched):
+        """Drain every executable the timed run needs: both prefill
+        specializations (shared_tokens 0 and the real offset) and one
+        demote→promote round (the gather/scatter page executables)."""
+        rw = np.random.default_rng(seed + 3)
+        for _ in range(2):                 # second run hits the shared path
+            sched.submit(prefix_req(warm_prefix, rw))
+            sched.run(max_steps=4000)
+        sched.prefix.evict_until(sched.allocator, sched.n_pages,
+                                 spool=True, cache=sched.cache)
+        sched.submit(prefix_req(warm_prefix, rw))   # promote path
+        sched.run(max_steps=4000)
+
+    def timed_serve(sched):
+        rt = np.random.default_rng(seed + 4)
+        reqs = [prefix_req(real_prefix, rt) for _ in range(k_timed)]
+        base = sched.step_count          # warmup steps already elapsed
+        for q in reqs:
+            sched.submit(q)
+        step_t = []
+        while sched.has_work:
+            t0 = time.perf_counter()
+            sched.step()
+            step_t.append(time.perf_counter() - t0)
+        cum = np.cumsum([0.0] + step_t)
+        ttft_s = [float(cum[q.first_token_step - base + 1]
+                        - cum[q.arrival_step - base])
+                  for q in reqs]
+        return reqs, ttft_s
+
+    cold = make_sched(1)
+    warm_compiles(cold)
+    cold_reqs, cold_ttft = timed_serve(cold)
+
+    warm = make_sched(1)
+    n_loaded = warm.load_prefix_cache(path)
+    warm_compiles(warm)
+    warm_reqs, warm_ttft = timed_serve(warm)
+
+    assert n_loaded == n_saved
+    warm_shared = sum(q.shared_prefix_tokens for q in warm_reqs)
+    assert warm_shared > 0, "warm start never hit the persisted chains"
+    assert [q.output_tokens for q in warm_reqs] \
+        == [q.output_tokens for q in cold_reqs], "warm start diverged"
+    cold_mean, warm_mean = float(np.mean(cold_ttft)), float(np.mean(warm_ttft))
+    emit("preemption/persisted_restart", 0.0,
+         f"warm_ttft_mean_s={warm_mean:.4f} cold={cold_mean:.4f} "
+         f"({n_loaded} entries, {warm_shared} shared tokens)",
+         warm_ttft_mean_s=warm_mean, cold_ttft_mean_s=cold_mean,
+         entries_persisted=n_saved, warm_shared_tokens=warm_shared)
+    if not smoke:        # CPU wall-clock is too noisy for a CI smoke gate
+        assert warm_mean < cold_mean, \
+            f"warm start TTFT {warm_mean:.4f}s not below cold {cold_mean:.4f}s"
+    return {"completion_ratio": ratio,
+            "preempt_count": sched_p.preempt_count,
+            "swap_bytes": sched_p.spool.bytes_out,
+            "warm_ttft_mean_s": warm_mean, "cold_ttft_mean_s": cold_mean}
+
+
 if __name__ == "__main__":
     import argparse
 

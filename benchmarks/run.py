@@ -25,6 +25,7 @@ SUITES = {
     "paging": bench_throughput.paging_main,  # paged vs contiguous pools
     "prefix": bench_throughput.prefix_main,  # shared-prefix CoW + chunked
     "sharding": bench_throughput.sharding_main,  # KV-head shards + router
+    "preemption": bench_throughput.preemption_main,  # swap-to-host tier
 }
 _ALIASES = {"kernel": "kernels"}          # pre-PR-2 suite name
 

@@ -7,6 +7,7 @@ decode as one batch, and release their slot on completion.
         --arch starcoder2-3b --slots 4 --requests 12 --gen 32 [--dense]
 """
 import argparse
+import os
 import time
 from dataclasses import replace
 
@@ -88,6 +89,19 @@ def main():
                     help="data-parallel engine replicas behind one "
                          "router (--slots and --n-pages partition across "
                          "them; idle replicas skip steps entirely)")
+    ap.add_argument("--admission-policy", default="wait",
+                    choices=("wait", "reject", "preempt"),
+                    help="what a full engine does with new arrivals: "
+                         "queue them (wait), shed them (reject), or swap "
+                         "a lower-priority decoder's pages to the host "
+                         "spool and take its slot (preempt; paged only)")
+    ap.add_argument("--persist-prefix", default="",
+                    help="path for restart persistence of the shared-"
+                         "prefix cache: load it before serving (if the "
+                         "file exists and its config fingerprint "
+                         "matches) and save the surviving chains after "
+                         "the drain. Requires --share-prefix and a "
+                         "single engine.")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.page_tokens != "auto":
@@ -114,6 +128,15 @@ def main():
         ap.error("--prefill-budget requires --prefill-chunk")
     if args.engines < 1:
         ap.error("--engines must be >= 1")
+    if args.admission_policy == "preempt" and not args.page_tokens:
+        ap.error("--admission-policy preempt swaps PAGES to the host "
+                 "spool; pass --page-tokens too")
+    if args.persist_prefix and not args.share_prefix:
+        ap.error("--persist-prefix saves the shared-prefix cache; pass "
+                 "--share-prefix too")
+    if args.persist_prefix and args.engines > 1:
+        ap.error("--persist-prefix needs a single engine (page ids are "
+                 "engine-local)")
     mesh = None
     if args.mesh_model:
         from repro.serving.sharded import make_serving_mesh
@@ -129,6 +152,7 @@ def main():
         fused_compaction=False if args.no_fused_compaction else None,
         prefill_lanes=args.prefill_lanes or None,
         tile_overhead_bytes=args.tile_overhead_bytes or None,
+        admission_policy=args.admission_policy,
         mesh=mesh)
     if args.engines > 1:
         from repro.serving.router import Router
@@ -146,6 +170,15 @@ def main():
         print(f"# page_tokens=auto -> {page_tokens_used} "
               f"(roofline-tuned for {args.slots} slots x "
               f"{max_total} tokens)")
+    if args.persist_prefix and os.path.exists(args.persist_prefix):
+        try:
+            n = sched.load_prefix_cache(args.persist_prefix)
+            print(f"# warm start: {n} prefix entries from "
+                  f"{args.persist_prefix}")
+        except ValueError as err:
+            # config/pruning-mode fingerprint changed since the save —
+            # compressed pages from another config are garbage here
+            print(f"# cold start: stale prefix cache ignored ({err})")
 
     # Poisson arrival trace with ragged prompts (a few length buckets so the
     # per-length prefill executables amortize across requests); with
@@ -172,6 +205,9 @@ def main():
             i += 1
         sched.step()
     dt = time.perf_counter() - t0
+    if args.persist_prefix:
+        n = sched.save_prefix_cache(args.persist_prefix)
+        print(f"# persisted {n} prefix entries -> {args.persist_prefix}")
 
     new_tokens = sum(r.num_generated for r in sched.finished)
     lat = [r.finish_step - r.arrival_step for r in sched.finished]
@@ -211,6 +247,15 @@ def main():
         if occ.ttft_p50 is not None:
             print(f"  ttft (steps):      p50={occ.ttft_p50:.0f} "
                   f"p99={occ.ttft_p99:.0f}")
+        if args.admission_policy == "preempt" and sched.preempt_count:
+            print(f"  preemption:        {sched.preempt_count} swaps out, "
+                  f"{sched.restore_count} restores, "
+                  f"{sched.swapped_pages} pages via host spool "
+                  f"({sched.spool.bytes_out + sched.spool.bytes_in} "
+                  f"bytes moved)")
+        if args.admission_policy == "reject" and sched.rejected:
+            print(f"  rejected:          {len(sched.rejected)} requests "
+                  f"shed at admission")
     print(f"  latency (steps):   p50={int(np.median(lat))} "
           f"max={int(np.max(lat))}")
     acct = cache_hbm_bytes(cfg, args.slots, max_total,

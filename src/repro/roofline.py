@@ -267,6 +267,30 @@ def prefix_shared_pool_bytes_saved(cfg: ModelConfig, page_tokens: int,
     return max(0, n_sharers - 1) * full_pages * page_bytes(cfg, page_tokens)
 
 
+def swap_bytes(cfg: ModelConfig, page_tokens: int, n_pages: int,
+               include_window: bool = True) -> int:
+    """Modeled bytes ONE preemption swap event moves device→host (a
+    restore moves the same bytes back host→device — double it for the
+    round trip). A swap spools the victim's ``n_pages`` drawn compressed
+    pages plus, with ``include_window``, its dense local-window K/V rows
+    and the three per-slot int32 counters — the complete slot state
+    ``Scheduler._preempt_slot`` gathers (``gather_page_arrays`` +
+    ``gather_slot_state``). BENCH_preemption.json reports this model next
+    to the spool's measured ``bytes_out``/``bytes_in`` so the accounting
+    can be cross-checked: measured page traffic quantizes to WHOLE pages
+    and whole window buffers (a half-filled page still ships
+    ``page_bytes``), which is exactly what this model charges."""
+    from repro.serving.cache import page_bytes
+    total = n_pages * page_bytes(cfg, page_tokens)
+    if include_window:
+        m = cfg.mustafar
+        wbuf = m.local_window + m.tile_tokens
+        n_attn = len(cfg.attention_layers())
+        itemsize = np.dtype(cfg.dtype).itemsize
+        total += n_attn * cfg.n_kv_heads * 2 * wbuf * cfg.d_head * itemsize
+    return total + 3 * 4       # position/w_len/n_compressed counters
+
+
 def chunked_prefill_stall_model(prompt_tokens: int, prefill_chunk: int,
                                 t_token_s: float) -> Dict[str, float]:
     """Decode-stall model for chunked admissions: a solo prefill stalls the

@@ -240,6 +240,197 @@ class PageAllocator:
             self.release(p)
 
 
+class PageSpool:
+    """Host-memory tier for compressed KV pages — the middle rung of the
+    HBM → host → disk hierarchy.
+
+    Compressed pages are IMMUTABLE once retired (per-token magnitude
+    pruning is deterministic and position-independent, the same property
+    that makes prefix sharing bit-exact), so a page's bytes can round-trip
+    through host memory and come back byte-identical: ``put()`` stores a
+    host pytree (numpy leaves — typically ``gather_page_arrays`` /
+    ``gather_slot_state`` output) under a fresh integer key, ``take()``
+    pops it for restore, ``peek()`` reads without consuming (persistence),
+    ``drop()`` discards. The spool holds NO allocator references — its
+    entries are plain bytes; whoever spools a page releases the device
+    page separately.
+
+    BYTE ACCOUNTING: ``bytes_out`` accumulates device→host traffic (every
+    ``put``), ``bytes_in`` host→device (every ``take``) — the measured
+    swap-traffic numbers BENCH_preemption.json reports next to the
+    ``roofline.swap_bytes`` model. ``held_bytes`` is the current host
+    footprint (the oversubscription headroom in use)."""
+
+    def __init__(self):
+        self._entries: Dict[int, Any] = {}
+        self._sizes: Dict[int, int] = {}
+        self._next = 0
+        self.bytes_out = 0          # device -> host (spilled)
+        self.bytes_in = 0           # host -> device (restored)
+
+    @property
+    def n_entries(self) -> int:
+        return len(self._entries)
+
+    @property
+    def held_bytes(self) -> int:
+        return sum(self._sizes.values())
+
+    def put(self, data, count: bool = True) -> int:
+        """Store a host pytree, returning its key. ``count=False`` skips
+        the ``bytes_out`` traffic accounting (disk→host loads are not
+        device→host swaps)."""
+        key = self._next
+        self._next += 1
+        size = host_nbytes(data)
+        self._entries[key] = data
+        self._sizes[key] = size
+        if count:
+            self.bytes_out += size
+        return key
+
+    def peek(self, key: int):
+        return self._entries[key]
+
+    def take(self, key: int):
+        """Pop an entry for restore (counts toward ``bytes_in``)."""
+        self.bytes_in += self._sizes.pop(key)
+        return self._entries.pop(key)
+
+    def drop(self, key: int) -> None:
+        """Discard an entry without restoring it (no traffic counted)."""
+        self._entries.pop(key)
+        self._sizes.pop(key)
+
+
+def host_nbytes(tree) -> int:
+    """Total numpy bytes in a host pytree (ints/None/strings cost 0)."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        total += getattr(leaf, "nbytes", 0)
+    return total
+
+
+def gather_page_arrays(cache, pages):
+    """Host copies of physical pages ``pages`` across every pool leaf.
+
+    Returns a list over period positions: attention entries are
+    ``{name: np.ndarray [n_periods, len(pages), Hkv, page_tokens, ·]}``
+    over ``_POOL_KEYS``, non-attention entries are None. One gather +
+    device_get per leaf — the device→host half of a page swap."""
+    import numpy as np
+    idx = np.asarray(list(pages), np.int32)
+    out = []
+    for lc in cache["blocks"]:
+        if all(kn in lc for kn in _POOL_KEYS):
+            out.append({name: np.asarray(lc[name][:, idx])
+                        for name in _POOL_KEYS})
+        else:
+            out.append(None)
+    return out
+
+
+@partial(jax.jit, donate_argnums=0)
+def _write_page_leaf(leaf: jax.Array, data: jax.Array,
+                     dst: jax.Array) -> jax.Array:
+    """Overwrite physical page ``dst`` of one pool leaf with host ``data``
+    ([n_periods, Hkv, page_tokens, ·]). Donated like ``_copy_page_leaf``:
+    in-place at O(page_bytes), one executable per leaf shape."""
+    return leaf.at[:, dst].set(data)
+
+
+def scatter_page_arrays(cache, data, pages):
+    """Splice ``gather_page_arrays`` output back into freshly drawn pages
+    (``pages[i]`` receives column ``i``) — the host→device half of a swap.
+    The compressed content is restored byte-for-byte, so a restored
+    request decodes bit-identically to one that was never swapped. Pool
+    leaves are donated through ``_write_page_leaf``; callers must adopt
+    the returned cache."""
+    new_blocks = []
+    for lc, entry in zip(cache["blocks"], data):
+        if entry is None or not all(kn in lc for kn in _POOL_KEYS):
+            new_blocks.append(lc)
+            continue
+        nl = dict(lc)
+        for name in _POOL_KEYS:
+            leaf = nl[name]
+            host = entry[name]
+            for i, phys in enumerate(pages):
+                leaf = _write_page_leaf(
+                    leaf, jnp.asarray(host[:, i], leaf.dtype),
+                    jnp.int32(phys))
+            nl[name] = leaf
+        new_blocks.append(nl)
+    out = dict(cache)
+    out["blocks"] = tuple(new_blocks)
+    return out
+
+
+@partial(jax.jit, donate_argnums=0)
+def _write_slot_leaf(leaf: jax.Array, data: jax.Array,
+                     slot: jax.Array) -> jax.Array:
+    """Overwrite batch slot ``slot`` of one slot-major leaf with ``data``
+    ([n_periods, ...], no batch dim). Donated, in-place."""
+    return leaf.at[:, slot].set(data)
+
+
+def gather_slot_state(cache, slot: int):
+    """Host copy of ONE slot's non-pool cache state: every slot-major
+    block leaf (dense windows, mamba/rwkv/cross state — pool leaves are
+    page-major and travel via ``gather_page_arrays``) plus the three
+    per-slot counters. Together with the slot's pages and block-table row
+    this is the complete state a preemption must spool for a bit-exact
+    restore (no recomputation)."""
+    import numpy as np
+    blocks = []
+    for lc in cache["blocks"]:
+        blocks.append({name: np.asarray(leaf[:, slot])
+                       for name, leaf in lc.items()
+                       if name not in _POOL_KEYS})
+    return {
+        "blocks": blocks,
+        "position": int(cache["position"][slot]),
+        "w_len": int(cache["w_len"][slot]),
+        "n_compressed": int(cache["n_compressed"][slot]),
+    }
+
+
+def scatter_slot_state(cache, slot: int, state):
+    """Restore ``gather_slot_state`` output into ``slot`` (leaves donated)."""
+    new_blocks = []
+    for lc, entry in zip(cache["blocks"], state["blocks"]):
+        nl = dict(lc)
+        for name, host in entry.items():
+            nl[name] = _write_slot_leaf(
+                nl[name], jnp.asarray(host, nl[name].dtype), jnp.int32(slot))
+        new_blocks.append(nl)
+    out = dict(cache)
+    out["blocks"] = tuple(new_blocks)
+    for key in ("position", "w_len", "n_compressed"):
+        out[key] = cache[key].at[slot].set(jnp.int32(state[key]))
+    return out
+
+
+def prefix_cache_fingerprint(cfg: ModelConfig, page_tokens: int) -> Dict[str, Any]:
+    """Identity of a persisted prefix cache's byte layout. Compressed page
+    content is a pure function of (tokens, pruning config, page geometry);
+    if ANY of these change between save and load the stored bytes are
+    silently wrong for the new deployment, so ``PrefixIndex.load``
+    hard-fails on mismatch — the invalidation rule."""
+    m = cfg.mustafar
+    return {
+        "d_head": cfg.d_head,
+        "n_kv_heads": cfg.n_kv_heads,
+        "n_layers": cfg.n_layers,
+        "tile_tokens": m.tile_tokens,
+        "local_window": m.local_window,
+        "key_sparsity": m.key_sparsity,
+        "value_sparsity": m.value_sparsity,
+        "page_tokens": page_tokens,
+        "pool_dtype": str(jnp.dtype(POOL_DTYPE)),
+    }
+
+
 class PrefixIndex:
     """Token-trie (radix) index from PROMPT prefixes to retired compressed
     pages, for cross-request sharing.
@@ -273,35 +464,74 @@ class PrefixIndex:
     ids, each edge keyed by ONE page's token slice), so a cached L-token
     prefix costs O(L) key storage and match/register do O(L) hashing total
     — not the O(L^2) a flat whole-prefix-keyed map would pay.
+
+    SPILL TIER: an entry's page is either DEVICE-resident (``page`` is a
+    physical id the index holds a reference on) or SPOOLED (``page`` is
+    None and ``spool`` keys its bytes in a host ``PageSpool``). Under pool
+    pressure ``evict_until(spool=...)`` DEMOTES the least-recently-used
+    entry to the spool instead of dropping it; ``promote()`` moves spooled
+    entries on an admission's path back onto freshly drawn pages (the
+    content round-trips byte-for-byte, so promoted hits stay bit-exact).
+    ``match()`` itself never promotes — it walks device-resident chains
+    only and a router may probe it read-only every step. ``save``/``load``
+    persist every chain (token keys + page bytes + fill counts) across a
+    restart; entries load SPOOLED and promote on first use.
+
+    EVICTION is truly LRU across BOTH entry kinds: every full node and
+    partial boundary entry carries a monotonic recency stamp (bumped at
+    admission commit via ``match(touch_lru=True)`` and at ``register``),
+    and ``_evict_one`` compares the oldest full chain against the oldest
+    device-resident partial and takes the older stamp — a just-matched
+    boundary page can no longer be outlived by a cold full chain (or vice
+    versa), which the old two-separate-LRU-lists scheme allowed.
     """
 
     _ROOT = 0                              # virtual root node id
 
-    def __init__(self, page_tokens: int):
+    def __init__(self, page_tokens: int,
+                 spool: Optional[PageSpool] = None):
         self.page_tokens = page_tokens
-        # node id -> {"page": phys, "parent": id, "chunk": edge tokens}
+        # node id -> {"page": phys|None, "spool": key|None, "parent": id,
+        #             "chunk": edge tokens, "used": recency stamp}
         self._nodes: Dict[int, Dict[str, Any]] = {}
         # node id -> {edge chunk -> child node id}
         self._children: Dict[int, Dict[Tuple[int, ...], int]] = {
             self._ROOT: {}}
         self._next_id = self._ROOT + 1
-        # full-page nodes in LRU order (oldest first)
+        # DEVICE-resident full-page nodes in LRU order (oldest first);
+        # spooled nodes leave this dict (they hold no device page)
         self._lru: "collections.OrderedDict[int, None]" = \
             collections.OrderedDict()
-        # base node id -> (partial token tuple, phys page), LRU order
-        self._partials: "collections.OrderedDict[int, Tuple[Tuple[int, ...], int]]" = \
+        # base node id -> {"toks": partial tuple, "page": phys|None,
+        #                  "spool": key|None, "used": stamp}, LRU order
+        self._partials: "collections.OrderedDict[int, Dict[str, Any]]" = \
             collections.OrderedDict()
+        self.spool = spool if spool is not None else PageSpool()
+        self._clock = 0                    # monotonic recency source
         # sharing stats, bumped by the SCHEDULER at admission commit (not
         # in match() — a blocked head-of-queue admission re-matches every
         # engine step and would inflate them arbitrarily)
         self.hits = 0      # pages mapped from the index, admitted matches
         self.misses = 0    # committed admissions that matched nothing
 
+    def _bump(self) -> int:
+        self._clock += 1
+        return self._clock
+
     @property
     def held_pages(self) -> List[int]:
-        """Pages the index itself holds a reference on (one per entry)."""
-        return [n["page"] for n in self._nodes.values()] \
-            + [p for _, p in self._partials.values()]
+        """DEVICE pages the index holds a reference on (one per resident
+        entry; spooled entries hold host bytes, not pages)."""
+        return [n["page"] for n in self._nodes.values()
+                if n["page"] is not None] \
+            + [e["page"] for e in self._partials.values()
+               if e["page"] is not None]
+
+    @property
+    def spooled_entries(self) -> int:
+        """Entries currently demoted to the host spool."""
+        return sum(1 for n in self._nodes.values() if n["page"] is None) \
+            + sum(1 for e in self._partials.values() if e["page"] is None)
 
     def match(self, prompt, comp: int, touch_lru: bool = False):
         """Longest shared prefix for ``prompt`` with compressed fill ``comp``.
@@ -318,7 +548,11 @@ class PrefixIndex:
         at ADMISSION COMMIT, like the hit/miss stats: a blocked
         head-of-queue admission probes every engine step, and letting
         probes refresh recency would pin the never-admitted request's
-        chain while chains that live requests re-use get evicted."""
+        chain while chains that live requests re-use get evicted.
+
+        SPOOLED entries stop the walk: only device-resident pages can be
+        mapped into a block table. Call ``promote()`` first to lift a
+        spooled continuation back onto device pages."""
         pt = self.page_tokens
         toks = tuple(int(t) for t in prompt)
         full: List[int] = []
@@ -326,10 +560,11 @@ class PrefixIndex:
         for lp in range(comp // pt):
             child = self._children.get(node, {}).get(
                 toks[lp * pt:(lp + 1) * pt])
-            if child is None:
+            if child is None or self._nodes[child]["page"] is None:
                 break
             if touch_lru:
                 self._lru.move_to_end(child)
+                self._nodes[child]["used"] = self._bump()
             full.append(self._nodes[child]["page"])
             node = child
         boundary = None
@@ -337,15 +572,96 @@ class PrefixIndex:
         fill = comp % pt
         if fill and len(full) == comp // pt:
             ent = self._partials.get(node)
-            if ent is not None:
-                donor_toks, page = ent
+            if ent is not None and ent["page"] is not None:
+                donor_toks = ent["toks"]
                 if (len(donor_toks) >= fill
                         and donor_toks[:fill] == toks[comp - fill:comp]):
                     if touch_lru:
                         self._partials.move_to_end(node)
-                    boundary = page
+                        ent["used"] = self._bump()
+                    boundary = ent["page"]
                     shared_tokens = comp
         return full, boundary, shared_tokens
+
+    def probe(self, prompt, comp: int) -> int:
+        """POTENTIAL shared tokens for ``prompt``, counting spooled entries
+        the walk could promote back — what a router's affinity probe wants
+        (a replica holding the chain in its host spool is still the cheap
+        destination), where ``match()`` reports only immediately mappable
+        device pages. Read-only: no LRU movement, no promotion."""
+        pt = self.page_tokens
+        toks = tuple(int(t) for t in prompt)
+        node = self._ROOT
+        depth = 0
+        for lp in range(comp // pt):
+            child = self._children.get(node, {}).get(
+                toks[lp * pt:(lp + 1) * pt])
+            if child is None:
+                break
+            depth += 1
+            node = child
+        shared = depth * pt
+        fill = comp % pt
+        if fill and depth == comp // pt:
+            ent = self._partials.get(node)
+            if ent is not None and len(ent["toks"]) >= fill \
+                    and ent["toks"][:fill] == toks[comp - fill:comp]:
+                shared = comp
+        return shared
+
+    def promote(self, prompt, comp: int, allocator: PageAllocator,
+                cache) -> Tuple[Any, int]:
+        """Lift spooled entries on ``prompt``'s path back onto device pages
+        so the following ``match()`` can map them. Each promoted entry
+        reserves + draws one page and scatters its host bytes back
+        (byte-exact — compressed pages are immutable, so the round-trip
+        through the spool preserves them bit-for-bit). Stops as soon as the
+        pool cannot reserve another page; promoted entries get FRESH
+        recency stamps so an immediately following eviction pass does not
+        demote them right back (churn guard). Returns ``(cache,
+        n_promoted)`` — pool leaves are donated through the scatter."""
+        pt = self.page_tokens
+        toks = tuple(int(t) for t in prompt)
+        node = self._ROOT
+        n_promoted = 0
+        depth = 0
+        for lp in range(comp // pt):
+            child = self._children.get(node, {}).get(
+                toks[lp * pt:(lp + 1) * pt])
+            if child is None:
+                break
+            ent = self._nodes[child]
+            if ent["page"] is None:
+                if not allocator.can_reserve(1):
+                    return cache, n_promoted
+                allocator.reserve(1)
+                page = allocator.draw_many(1)[0]
+                cache = scatter_page_arrays(
+                    cache, self.spool.take(ent["spool"]), [page])
+                ent["page"], ent["spool"] = page, None
+                self._lru[child] = None
+                self._lru.move_to_end(child)
+                ent["used"] = self._bump()
+                n_promoted += 1
+            depth += 1
+            node = child
+        fill = comp % pt
+        if fill and depth == comp // pt:
+            ent = self._partials.get(node)
+            if ent is not None and ent["page"] is None \
+                    and len(ent["toks"]) >= fill \
+                    and ent["toks"][:fill] == toks[comp - fill:comp]:
+                if not allocator.can_reserve(1):
+                    return cache, n_promoted
+                allocator.reserve(1)
+                page = allocator.draw_many(1)[0]
+                cache = scatter_page_arrays(
+                    cache, self.spool.take(ent["spool"]), [page])
+                ent["page"], ent["spool"] = page, None
+                self._partials.move_to_end(node)
+                ent["used"] = self._bump()
+                n_promoted += 1
+        return cache, n_promoted
 
     def register(self, prompt, comp: int, slot_pages: List[int],
                  allocator: PageAllocator) -> None:
@@ -355,7 +671,10 @@ class PrefixIndex:
         (shared or owned — already-indexed prefixes are skipped). The index
         takes its own reference on every entry it adds; a boundary entry is
         replaced only by a strict extension of itself (longer fill, same
-        leading tokens), releasing the superseded page."""
+        leading tokens), releasing the superseded page. Registering over a
+        SPOOLED entry re-adopts the slot's device page (and drops the
+        spooled bytes) — the slot just recompressed the identical content,
+        so adoption is a free promotion."""
         pt = self.page_tokens
         toks = tuple(int(t) for t in prompt)
         node = self._ROOT
@@ -368,28 +687,58 @@ class PrefixIndex:
                 self._next_id += 1
                 self._nodes[child] = {
                     "page": allocator.share(slot_pages[lp]),
-                    "parent": node, "chunk": chunk}
+                    "spool": None,
+                    "parent": node, "chunk": chunk,
+                    "used": self._bump()}
                 ch[chunk] = child
                 self._lru[child] = None
+            else:
+                ent = self._nodes[child]
+                if ent["page"] is None:
+                    ent["page"] = allocator.share(slot_pages[lp])
+                    self.spool.drop(ent["spool"])
+                    ent["spool"] = None
+                    self._lru[child] = None
+                self._lru.move_to_end(child)
+                ent["used"] = self._bump()
             node = child
         fill = comp % pt
         if fill:
             part = toks[comp - fill:comp]
             ent = self._partials.get(node)
             if ent is None:
-                self._partials[node] = (part, allocator.share(
-                    slot_pages[comp // pt]))
+                self._partials[node] = {
+                    "toks": part,
+                    "page": allocator.share(slot_pages[comp // pt]),
+                    "spool": None, "used": self._bump()}
             else:
-                donor_toks, old_page = ent
-                if len(part) > len(donor_toks) \
-                        and part[: len(donor_toks)] == donor_toks:
-                    self._partials[node] = (part, allocator.share(
-                        slot_pages[comp // pt]))
-                    allocator.release(old_page)
+                donor_toks = ent["toks"]
+                extends = (len(part) > len(donor_toks)
+                           and part[:len(donor_toks)] == donor_toks)
+                adoptable = (ent["page"] is None
+                             and len(part) >= len(donor_toks)
+                             and part[:len(donor_toks)] == donor_toks)
+                if extends or adoptable:
+                    if ent["page"] is not None:
+                        allocator.release(ent["page"])
+                    elif ent["spool"] is not None:
+                        self.spool.drop(ent["spool"])
+                    ent["toks"] = part
+                    ent["page"] = allocator.share(slot_pages[comp // pt])
+                    ent["spool"] = None
+                    self._partials.move_to_end(node)
+                    ent["used"] = self._bump()
+
+    def _release_entry_storage(self, ent: Dict[str, Any],
+                               allocator: PageAllocator) -> None:
+        if ent["page"] is not None:
+            allocator.release(ent["page"])
+        elif ent["spool"] is not None:
+            self.spool.drop(ent["spool"])
 
     def _drop_subtree(self, root: int, allocator: PageAllocator) -> None:
-        """Release the trie subtree rooted at ``root`` (its pages, partials
-        and the edge from its parent)."""
+        """Release the trie subtree rooted at ``root`` (its pages — device
+        or spooled — partials, and the edge from its parent)."""
         parent = self._nodes[root]
         self._children.get(parent["parent"], {}).pop(parent["chunk"], None)
         stack = [root]
@@ -397,40 +746,167 @@ class PrefixIndex:
             nid = stack.pop()
             stack.extend(self._children.pop(nid, {}).values())
             node = self._nodes.pop(nid)
-            del self._lru[nid]
-            allocator.release(node["page"])
+            self._lru.pop(nid, None)
+            self._release_entry_storage(node, allocator)
             ent = self._partials.pop(nid, None)
             if ent is not None:
-                allocator.release(ent[1])
+                self._release_entry_storage(ent, allocator)
 
-    def _evict_one(self, allocator: PageAllocator) -> bool:
-        """Drop the least-recently-used entry (and, for a full page, every
-        descendant that extends it — an orphaned descendant can never match)."""
-        oldest = next(iter(self._lru), None)
-        if oldest is None:
-            if not self._partials:
-                return False
-            _, (_, page) = self._partials.popitem(last=False)
-            allocator.release(page)
+    def _oldest_device_entries(self) -> Tuple[Optional[int], Optional[int]]:
+        """(oldest full node id, oldest device-resident partial base id)."""
+        full = next(iter(self._lru), None)
+        part = None
+        for nid, ent in self._partials.items():
+            if ent["page"] is not None:
+                part = nid
+                break
+        return full, part
+
+    def _demote_full(self, nid: int, allocator: PageAllocator,
+                     cache) -> None:
+        """Move one full node's page to the host spool and release it."""
+        node = self._nodes[nid]
+        node["spool"] = self.spool.put(
+            gather_page_arrays(cache, [node["page"]]))
+        allocator.release(node["page"])
+        node["page"] = None
+        self._lru.pop(nid, None)
+
+    def _evict_one(self, allocator: PageAllocator, spool: bool = False,
+                   cache=None) -> bool:
+        """Evict the truly least-recently-used DEVICE entry, comparing the
+        oldest full chain against the oldest resident partial by recency
+        stamp (a just-matched boundary page must outlive a cold full
+        chain, and vice versa). ``spool=True`` DEMOTES the entry — page
+        bytes move to the host spool and the trie keeps the (now spooled)
+        entry for later ``promote()`` — instead of dropping it. Dropping a
+        full node also drops every descendant (an orphaned descendant can
+        never match); demotion keeps descendants — a spooled ancestor
+        shadows them from ``match()`` until promoted back."""
+        full, part = self._oldest_device_entries()
+        take_part = part is not None and (
+            full is None
+            or self._partials[part]["used"] < self._nodes[full]["used"])
+        if take_part:
+            ent = self._partials[part]
+            if spool:
+                ent["spool"] = self.spool.put(
+                    gather_page_arrays(cache, [ent["page"]]))
+                allocator.release(ent["page"])
+                ent["page"] = None
+            else:
+                allocator.release(ent["page"])
+                del self._partials[part]
             return True
-        self._drop_subtree(oldest, allocator)
+        if full is None:
+            return False
+        if spool:
+            self._demote_full(full, allocator, cache)
+        else:
+            self._drop_subtree(full, allocator)
         return True
 
-    def evict_until(self, allocator: PageAllocator, n_pages: int) -> None:
-        """LRU-evict entries until ``n_pages`` can be reserved (or the index
-        is empty). Pages still mapped by live slots stay allocated — only
-        the index's reference drops — so this can legitimately fall short;
-        the caller then waits for retirements like any other admission."""
+    def evict_until(self, allocator: PageAllocator, n_pages: int,
+                    spool: bool = False, cache=None) -> None:
+        """LRU-evict entries until ``n_pages`` can be reserved (or no
+        device-resident entry remains). Pages still mapped by live slots
+        stay allocated — only the index's reference drops — so this can
+        legitimately fall short; the caller then waits for retirements
+        (or preempts) like any other admission.
+
+        CONTRACT of ``spool=True``: entries are demoted to ``self.spool``
+        (host bytes + intact trie keys) rather than forgotten, and
+        ``cache`` must be passed so page bytes can be gathered before the
+        device page is released. Demotion frees exactly as many device
+        pages as dropping would, at host-memory cost ``page_bytes`` per
+        entry; a later ``promote()`` on the same prompt path restores the
+        bytes byte-exactly. Without ``spool`` the behavior is the legacy
+        destructive drop."""
         while not allocator.can_reserve(n_pages):
-            if not self._evict_one(allocator):
+            if not self._evict_one(allocator, spool=spool, cache=cache):
                 return
 
+    def save(self, path: str, cache=None,
+             fingerprint: Optional[Dict[str, Any]] = None) -> int:
+        """Persist every chain (token keys + page bytes + fill counts) so a
+        redeployed scheduler restarts with a warm prefix cache. Device-
+        resident entries are gathered from ``cache``; spooled entries come
+        straight from the spool. ``fingerprint`` (see
+        ``prefix_cache_fingerprint``) is stored and re-checked by
+        ``load`` — a persisted cache is only valid for the exact config /
+        pruning mode / page geometry that produced it. Returns the number
+        of entries written."""
+        import pickle
+        def _bytes_of(ent):
+            if ent["page"] is not None:
+                if cache is None:
+                    raise ValueError(
+                        "save() needs cache= to read device-resident pages")
+                return gather_page_arrays(cache, [ent["page"]])
+            return self.spool.peek(ent["spool"])
+        nodes = [(nid, n["parent"], n["chunk"], _bytes_of(n))
+                 for nid, n in self._nodes.items()]
+        partials = [(base, e["toks"], _bytes_of(e))
+                    for base, e in self._partials.items()]
+        blob = {"version": 1, "fingerprint": fingerprint,
+                "page_tokens": self.page_tokens,
+                "nodes": nodes, "partials": partials}
+        with open(path, "wb") as f:
+            pickle.dump(blob, f)
+        return len(nodes) + len(partials)
+
+    def load(self, path: str,
+             fingerprint: Optional[Dict[str, Any]] = None) -> int:
+        """Load a ``save()`` blob into this (empty) index. Every entry
+        arrives SPOOLED — no device pages are drawn until an admission's
+        ``promote()`` walks its path — so loading costs host memory only.
+        Raises ValueError when the stored fingerprint does not match
+        ``fingerprint`` (config / pruning mode / page geometry changed:
+        compressed bytes would be silently wrong, so the persisted cache
+        must be invalidated, not reinterpreted). Returns entries loaded."""
+        import pickle
+        if self._nodes or self._partials:
+            raise ValueError("load() requires an empty PrefixIndex")
+        with open(path, "rb") as f:
+            blob = pickle.load(f)
+        if blob.get("version") != 1:
+            raise ValueError(f"unknown prefix-cache version "
+                             f"{blob.get('version')!r}")
+        if blob.get("page_tokens") != self.page_tokens:
+            raise ValueError(
+                f"persisted page_tokens={blob.get('page_tokens')} != "
+                f"index page_tokens={self.page_tokens}")
+        if fingerprint is not None and blob.get("fingerprint") != fingerprint:
+            raise ValueError(
+                "persisted prefix cache fingerprint mismatch — config or "
+                "pruning mode changed; discard the persisted file")
+        id_map = {self._ROOT: self._ROOT}
+        # parents precede children in insertion order (register() creates
+        # them top-down and _drop_subtree removes whole subtrees), so a
+        # single pass can remap ids
+        for nid, parent, chunk, data in blob["nodes"]:
+            new = self._next_id
+            self._next_id += 1
+            id_map[nid] = new
+            self._nodes[new] = {
+                "page": None, "spool": self.spool.put(data, count=False),
+                "parent": id_map[parent], "chunk": tuple(chunk),
+                "used": self._bump()}
+            self._children.setdefault(id_map[parent], {})[tuple(chunk)] = new
+        for base, toks, data in blob["partials"]:
+            self._partials[id_map[base]] = {
+                "toks": tuple(toks), "page": None,
+                "spool": self.spool.put(data, count=False),
+                "used": self._bump()}
+        return len(blob["nodes"]) + len(blob["partials"])
+
     def clear(self, allocator: PageAllocator) -> None:
-        """Release every held reference (drain/shutdown path)."""
+        """Release every held reference — device pages AND spooled bytes
+        (drain/shutdown path)."""
         for node in self._nodes.values():
-            allocator.release(node["page"])
-        for _, page in self._partials.values():
-            allocator.release(page)
+            self._release_entry_storage(node, allocator)
+        for ent in self._partials.values():
+            self._release_entry_storage(ent, allocator)
         self._nodes.clear()
         self._children = {self._ROOT: {}}
         self._lru.clear()

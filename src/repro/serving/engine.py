@@ -554,7 +554,13 @@ class Request:
     top_k: int = 0                       # 0 = no top-k truncation
     top_p: float = 1.0                   # 1.0 = no nucleus truncation
     uid: int = -1
+    priority: int = 0                    # higher preempts lower (see
+                                         # Scheduler admission_policy)
     # filled in by the scheduler:
+    preempt_count: int = 0               # times swapped out to the spool
+    rejected: bool = False               # dropped under admission_policy=
+                                         # "reject" (in Scheduler.rejected,
+                                         # never in finished)
     arrival_step: int = -1               # engine step when submitted
     prefill_step: int = -1               # engine step when admission began
     first_token_step: int = -1           # engine step of the first sampled
@@ -728,6 +734,7 @@ class Scheduler:
                  prefill_lanes: Optional[int] = None,
                  tile_overhead_bytes: Optional[int] = None,
                  mesh=None,
+                 admission_policy: str = "wait",
                  debug_invariants: bool = False):
         self.cfg = cfg
         self.params = params
@@ -762,6 +769,14 @@ class Scheduler:
             raise ValueError("pack_prefill=True requires prefill_chunk")
         if prefill_lanes is not None and prefill_lanes < 1:
             raise ValueError(f"prefill_lanes={prefill_lanes} must be >= 1")
+        if admission_policy not in ("wait", "reject", "preempt"):
+            raise ValueError(f"unknown admission_policy {admission_policy!r}"
+                             " (expected 'wait', 'reject' or 'preempt')")
+        if admission_policy == "preempt" and not self.paged:
+            raise ValueError("admission_policy='preempt' requires paged "
+                             "pools (pass page_tokens=...) — preemption "
+                             "swaps pages, not contiguous slots")
+        self.admission_policy = admission_policy
         self.share_prefix = share_prefix
         self.debug_invariants = debug_invariants
         if self.paged:
@@ -777,8 +792,21 @@ class Scheduler:
             self.busy_page_steps = 0
             self.busy_owned_page_steps = 0
             self.busy_shared_page_steps = 0
+            # host tier shared by preemption swaps AND prefix-index
+            # demotions, so swap-traffic accounting aggregates in one place
+            self.spool = cache_mod.PageSpool()
+        # preempted requests awaiting restore: uid -> spooled entry
+        self._preempted: "collections.OrderedDict[int, Dict[str, Any]]" = \
+            collections.OrderedDict()
+        self.preempt_count = 0                    # swap-out events
+        self.restore_count = 0                    # swap-in events
+        self.swapped_pages = 0                    # pages spooled over all
+                                                  # swap-outs (roofline
+                                                  # swap_bytes cross-check)
+        self.rejected: List[Request] = []         # admission_policy="reject"
         if share_prefix:
-            self.prefix = cache_mod.PrefixIndex(page_tokens)
+            self.prefix = cache_mod.PrefixIndex(page_tokens,
+                                                spool=self.spool)
             self.shared_admissions = 0            # admissions that mapped
                                                   # at least one prefix page
         self.cow_count = 0                        # copy-on-write events
@@ -886,6 +914,7 @@ class Scheduler:
     @property
     def has_work(self) -> bool:
         return (bool(self.waiting) or bool(self._pending)
+                or bool(self._preempted)
                 or any(s is not None for s in self.slots))
 
     @property
@@ -973,6 +1002,168 @@ class Scheduler:
         self._n_comp[slot] = 0
         self.cache["block_table"] = self.cache["block_table"].at[slot].set(
             cache_mod.PAGE_UNMAPPED)
+
+    # ------------------------------------------------------------------
+    # page-aware preemption: swap a decoding slot's pages to the host
+    # spool under pool pressure, splice them back later — NO recompute,
+    # so a preempted request's outputs are bit-identical to an
+    # uninterrupted run (compressed pages are immutable; the round-trip
+    # is byte-exact)
+
+    def _preempt_slot(self, slot: int) -> None:
+        """Swap one DECODING slot out: device_get its drawn pages + dense
+        window/state + counters into the spool, free the device pages,
+        return its unused promises, sever the block-table row. The request
+        parks in ``_preempted`` until ``_restore_preempted`` re-admits it.
+        Mid-prefill (``_pending``) slots are never preempted — their state
+        lives in the chunk carry, not in pages."""
+        req = self.slots[slot]
+        assert req is not None and slot not in self._pending
+        pages = list(self._slot_pages[slot])
+        entry = {
+            "req": req,
+            "n_pages": len(pages),
+            "reserved": self._slot_reserved[slot],
+            "w_len": self._w_len[slot],
+            "n_comp": self._n_comp[slot],
+            "next_token": int(self.next_tokens[slot]),
+            "key": self.spool.put({
+                "pages": cache_mod.gather_page_arrays(self.cache, pages),
+                "state": cache_mod.gather_slot_state(self.cache, slot),
+            }),
+        }
+        self.allocator.free(pages)
+        self.allocator.unreserve(self._slot_reserved[slot])
+        self._slot_pages[slot] = []
+        self._slot_reserved[slot] = 0
+        self._w_len[slot] = 0
+        self._n_comp[slot] = 0
+        self.cache["block_table"] = self.cache["block_table"].at[slot].set(
+            cache_mod.PAGE_UNMAPPED)
+        self.slots[slot] = None
+        req.preempt_count += 1
+        self.preempt_count += 1
+        self.swapped_pages += len(pages)
+        self._preempted[req.uid] = entry
+
+    def _restore_slot(self, slot: int, entry: Dict[str, Any]) -> None:
+        """Splice a preempted request back into a free slot: reserve its
+        full page need (drawn + promised — the original admission proved
+        this fits the pool), draw fresh pages, scatter the spooled bytes
+        back, rebuild the block-table row and host mirrors. Restored pages
+        are refcount-1 (owned), so any CoW demand the original reservation
+        covered can only have shrunk — the promises carried through the
+        swap still suffice."""
+        req = entry["req"]
+        self.allocator.reserve(entry["n_pages"] + entry["reserved"])
+        pages = self.allocator.draw_many(entry["n_pages"])
+        data = self.spool.take(entry["key"])
+        if pages:
+            self.cache = cache_mod.scatter_page_arrays(
+                self.cache, data["pages"], pages)
+        self.cache = cache_mod.scatter_slot_state(
+            self.cache, slot, data["state"])
+        self._slot_pages[slot] = pages
+        self._slot_reserved[slot] = entry["reserved"]
+        self._w_len[slot] = entry["w_len"]
+        self._n_comp[slot] = entry["n_comp"]
+        row = pages + [cache_mod.PAGE_UNMAPPED] * (self.max_pages
+                                                   - len(pages))
+        self.cache["block_table"] = self.cache["block_table"].at[slot].set(
+            jnp.asarray(row, jnp.int32))
+        self.slots[slot] = req
+        self.next_tokens = self.next_tokens.at[slot].set(
+            jnp.int32(entry["next_token"]))
+        self.restore_count += 1
+
+    def _restore_preempted(self, free: List[int]) -> None:
+        """Re-admit preempted requests into free slots, highest priority
+        first (FIFO by uid within a priority). A waiting request of
+        STRICTLY higher priority blocks lower-priority restores — without
+        this guard a restore would grab the pages the pending admission is
+        about to preempt for, thrashing the swap. Falls back to demoting
+        prefix-index entries when the pool is short."""
+        if not self._preempted or not free:
+            return
+        top_wait = max((r.priority for r in self.waiting), default=None)
+        order = sorted(self._preempted,
+                       key=lambda uid: (
+                           -self._preempted[uid]["req"].priority, uid))
+        for uid in order:
+            if not free:
+                return
+            entry = self._preempted[uid]
+            if top_wait is not None \
+                    and top_wait > entry["req"].priority:
+                continue
+            need = entry["n_pages"] + entry["reserved"]
+            if not self.allocator.can_reserve(need):
+                if self.share_prefix:
+                    self.prefix.evict_until(self.allocator, need,
+                                            spool=True, cache=self.cache)
+                if not self.allocator.can_reserve(need):
+                    continue
+            del self._preempted[uid]
+            self._restore_slot(free.pop(0), entry)
+
+    def _pick_victim(self, priority: int) -> Optional[int]:
+        """Victim policy: among decoding slots of STRICTLY lower priority
+        than the blocked admission, pick the lowest priority, then the
+        fewest generated tokens (least sunk decode work), then oldest uid.
+        None when no slot qualifies — equal-priority traffic never
+        preempts itself (no churn under a homogeneous load)."""
+        best = None
+        for s, r in enumerate(self.slots):
+            if r is None or s in self._pending or r.priority >= priority:
+                continue
+            key = (r.priority, r.num_generated, r.uid)
+            if best is None or key < best[0]:
+                best = (key, s)
+        return None if best is None else best[1]
+
+    def reclaimable_pages(self, priority: Optional[int] = None) -> int:
+        """Pages an admission COULD free without waiting for retirements:
+        prefix-index entries with no other holder (evictable/demotable)
+        plus — under ``admission_policy='preempt'`` with a ``priority`` —
+        the sole-held pages and unused promises of strictly-lower-priority
+        victims. The router adds this to ``available`` when judging
+        page-headroom admissibility."""
+        if not self.paged:
+            return 0
+        n = 0
+        if self.share_prefix:
+            n += sum(1 for p in self.prefix.held_pages
+                     if self.allocator.refcount(p) == 1)
+        if priority is not None and self.admission_policy == "preempt":
+            for s, r in enumerate(self.slots):
+                if r is not None and s not in self._pending \
+                        and r.priority < priority:
+                    n += sum(1 for p in self._slot_pages[s]
+                             if self.allocator.refcount(p) == 1)
+                    n += self._slot_reserved[s]
+        return n
+
+    def save_prefix_cache(self, path: str) -> int:
+        """Persist the prefix index (device + spooled chains) for a warm
+        restart; see ``PrefixIndex.save``. Returns entries written."""
+        if not self.share_prefix:
+            raise ValueError("save_prefix_cache requires share_prefix=True")
+        return self.prefix.save(
+            path, cache=self.cache,
+            fingerprint=cache_mod.prefix_cache_fingerprint(
+                self.cfg, self.page_tokens))
+
+    def load_prefix_cache(self, path: str) -> int:
+        """Warm-start the (empty) prefix index from ``save_prefix_cache``
+        output; entries arrive spooled and promote on first use. Raises
+        ValueError when the persisted fingerprint mismatches this
+        scheduler's config/pruning mode/page geometry."""
+        if not self.share_prefix:
+            raise ValueError("load_prefix_cache requires share_prefix=True")
+        return self.prefix.load(
+            path,
+            fingerprint=cache_mod.prefix_cache_fingerprint(
+                self.cfg, self.page_tokens))
 
     def _provision_pages(self, active_flags: List[bool]) -> None:
         """Host mirror of ``decode_step``'s per-slot counter logic: predict
@@ -1139,6 +1330,8 @@ class Scheduler:
     def _admit(self) -> None:
         free = [i for i, s in enumerate(self.slots)
                 if s is None and i not in self._pending]
+        if self._preempted:
+            self._restore_preempted(free)
         while free and self.waiting:
             if (self._can_chunk and self.pack_prefill
                     and not self._free_lanes):
@@ -1153,22 +1346,53 @@ class Scheduler:
             shared_tokens = 0
             pages_needed = 0
             if self.paged:
+                if self.share_prefix and self.prefix.spooled_entries:
+                    # lift spooled chains on this prompt's path back onto
+                    # device pages first, so _match_prefix can map them —
+                    # the spool hit that makes demotion (and a persisted
+                    # warm start) pay off. Partial promotion is fine: the
+                    # admission shares whatever became resident
+                    comp, _ = cache_mod.prefill_split(self.cfg,
+                                                      len(req.prompt))
+                    self.cache, _ = self.prefix.promote(
+                        req.prompt, comp, self.allocator, self.cache)
                 shared, shared_tokens, pages_needed = \
                     self._match_prefix(req, total)
                 if not self.allocator.can_reserve(pages_needed):
                     # index-cached pages are reclaimable cache, not demand:
-                    # LRU-evict until the reservation fits (pages still
-                    # mapped by live slots only drop the index's ref).
-                    # Evict against the UNDISCOUNTED worst case (incl. CoW
-                    # headroom) and re-match: eviction may have dropped the
+                    # LRU-DEMOTE to the spool until the reservation fits
+                    # (pages still mapped by live slots only drop the
+                    # index's ref; the chain stays promotable). Evict
+                    # against the UNDISCOUNTED worst case (incl. CoW
+                    # headroom) and re-match: demotion may have taken the
                     # very pages just matched
                     if self.share_prefix:
                         self.prefix.evict_until(
                             self.allocator,
-                            self._worst_case_pages(len(req.prompt), total))
+                            self._worst_case_pages(len(req.prompt), total),
+                            spool=True, cache=self.cache)
                         shared, shared_tokens, pages_needed = \
                             self._match_prefix(req, total)
+                    if not self.allocator.can_reserve(pages_needed) \
+                            and self.admission_policy == "preempt":
+                        # swap out strictly-lower-priority decoders until
+                        # the reservation fits (victims park in the spool
+                        # and restore bit-exactly once pressure clears)
+                        while not self.allocator.can_reserve(pages_needed):
+                            victim = self._pick_victim(req.priority)
+                            if victim is None:
+                                break
+                            self._preempt_slot(victim)
+                            free.append(victim)
                     if not self.allocator.can_reserve(pages_needed):
+                        if self.admission_policy == "reject":
+                            # shed load instead of queueing: the caller
+                            # sees the drop immediately (reject-mode
+                            # baseline in BENCH_preemption.json)
+                            self.waiting.popleft()
+                            req.rejected = True
+                            self.rejected.append(req)
+                            continue
                         break        # wait for a retirement to free pages
             self.waiting.popleft()
             slot = free.pop(0)

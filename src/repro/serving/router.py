@@ -93,34 +93,58 @@ class Router:
     # routing
 
     def _load(self, e: Scheduler) -> int:
-        """In-flight work on one engine: queued + mid-prefill + decoding."""
-        return (len(e.waiting) + len(e._pending)
+        """In-flight work on one engine: queued + mid-prefill + decoding
+        + swapped-out (a preempted request still owes decode steps)."""
+        return (len(e.waiting) + len(e._pending) + len(e._preempted)
                 + sum(s is not None for s in e.slots))
 
-    def _free_now(self, e: Scheduler) -> bool:
-        """Could the engine admit at its next step (ignoring page gating,
-        which only defers — the per-engine queue handles that)?"""
+    def _free_now(self, e: Scheduler, req: Optional[Request] = None) -> bool:
+        """Could the engine admit at its next step? Requires a free slot
+        beyond the queued backlog AND — when ``req`` is given and the
+        engine is paged — worst-case page headroom for it, counting
+        reclaimable pages (idle prefix-index holds, and preemptible
+        lower-priority victims under ``admission_policy='preempt'``).
+        Ignoring pages here routed requests at engines whose pool was
+        pinned by live decoders while a sibling had free pages — the
+        request then sat in that engine's queue (or thrashed its swap)
+        for no reason."""
         free = sum(1 for i, s in enumerate(e.slots)
                    if s is None and i not in e._pending)
-        return free > len(e.waiting)
+        if free <= len(e.waiting) + len(e._preempted):
+            return False
+        if req is not None and e.paged:
+            total = len(req.prompt) + max(req.max_new_tokens, 1)
+            need = e._worst_case_pages(len(req.prompt), total)
+            if e.allocator.available \
+                    + e.reclaimable_pages(req.priority) < need:
+                return False
+        return True
 
     def _prefix_affinity(self, prompt) -> Optional[int]:
         """Engine index holding the longest indexed prefix of ``prompt``
         (read-only probe of every replica's trie — the router-level view
-        of a shared prefix cache), or None when nothing matches."""
+        of a shared prefix cache), or None when nothing matches. Probes
+        POTENTIAL coverage: a chain demoted to an engine's host spool
+        still counts — promotion is far cheaper than recompressing on a
+        sibling."""
         best, best_tokens = None, 0
         for i, e in enumerate(self.engines):
             if not e.share_prefix:
                 continue
             comp, _ = cache_mod.prefill_split(e.cfg, len(prompt))
-            _, _, shared_tokens = e.prefix.match(prompt, comp)
+            shared_tokens = e.prefix.probe(prompt, comp)
             if shared_tokens > best_tokens:
                 best, best_tokens = i, shared_tokens
         return best
 
     def _route(self, req: Request) -> int:
         hit = self._prefix_affinity(req.prompt)
-        if hit is not None:
+        if hit is not None and self._free_now(self.engines[hit], req):
+            # affinity only wins when the holder can actually admit —
+            # honoring it unconditionally let a saturated replica with a
+            # stale hit absorb the flood while its siblings sat idle
+            # (recompressing a prefix elsewhere beats queueing behind a
+            # full pool)
             return hit
         order = list(range(self.n_engines))
         if self.policy == "pack":
@@ -128,7 +152,7 @@ class Router:
             # replicas one at a time so the rest stay idle (skippable)
             order.sort(key=lambda i: -self._load(self.engines[i]))
             for i in order:
-                if self._free_now(self.engines[i]):
+                if self._free_now(self.engines[i], req):
                     return i
             # everyone is saturated: shortest backlog
             return min(order, key=lambda i: len(self.engines[i].waiting))
@@ -172,6 +196,15 @@ class Router:
         out: List[Request] = []
         for e in self.engines:
             out.extend(e.finished)
+        out.sort(key=lambda r: r.uid)
+        return out
+
+    @property
+    def rejected(self) -> List[Request]:
+        """Requests shed under ``admission_policy='reject'``, fleet-wide."""
+        out: List[Request] = []
+        for e in self.engines:
+            out.extend(e.rejected)
         out.sort(key=lambda r: r.uid)
         return out
 

@@ -323,6 +323,69 @@ def test_stall_budget_bounds_concurrent_admissions():
         assert r.output_tokens == want
 
 
+def _indexed_chain(idx, alloc, prompt, comp):
+    """Register ``prompt`` into ``idx`` as a retired slot would: draw the
+    backing pages, register (index takes its own refs), release the slot
+    refs. Returns the drawn pages."""
+    pt = idx.page_tokens
+    n = comp // pt + (1 if comp % pt else 0)
+    alloc.reserve(n)
+    pages = alloc.draw_many(n)
+    idx.register(prompt, comp, pages, alloc)
+    for p in pages:
+        alloc.release(p)
+    return pages
+
+
+def test_partial_lru_just_matched_partial_survives():
+    """Regression: partial boundary entries used to live on a separate
+    LRU list that was never recency-compared against full chains, so a
+    JUST-MATCHED boundary page could be evicted while a stone-cold full
+    chain survived. Eviction must take the truly-LRU entry across both
+    kinds."""
+    rng = np.random.default_rng(0)
+    alloc = cache_mod.PageAllocator(4)
+    idx = cache_mod.PrefixIndex(TT)
+    prompt_a = tuple(int(t) for t in rng.integers(0, 500, size=2 * TT))
+    prompt_b = tuple(int(t) for t in rng.integers(500, 999, size=2 * TT))
+    _indexed_chain(idx, alloc, prompt_a, 2 * TT)      # cold: 2 full pages
+    _indexed_chain(idx, alloc, prompt_b, TT + 8)      # full page + partial
+    # touch B's chain INCLUDING the boundary page (comp ends mid-page)
+    full, boundary, shared = idx.match(prompt_b, TT + 8, touch_lru=True)
+    assert boundary is not None and shared == TT + 8
+    idx.evict_until(alloc, 1)
+    # the cold A chain went (both its pages — descendants drop with the
+    # root); the just-matched partial and its base page survived
+    assert idx.match(prompt_a, 2 * TT)[0] == []
+    full, boundary, shared = idx.match(prompt_b, TT + 8)
+    assert len(full) == 1 and boundary is not None and shared == TT + 8
+    idx.clear(alloc)
+    assert alloc.in_use == 0
+
+
+def test_partial_lru_cold_partial_evicts_first():
+    """The mirror case: when the boundary page IS the least-recently-used
+    entry, eviction must take it — not reflexively drop the oldest full
+    chain."""
+    rng = np.random.default_rng(1)
+    alloc = cache_mod.PageAllocator(4)
+    idx = cache_mod.PrefixIndex(TT)
+    prompt_b = tuple(int(t) for t in rng.integers(500, 999, size=2 * TT))
+    prompt_a = tuple(int(t) for t in rng.integers(0, 500, size=2 * TT))
+    _indexed_chain(idx, alloc, prompt_b, TT + 8)      # partial is oldest...
+    _indexed_chain(idx, alloc, prompt_a, 2 * TT)
+    # ...because only B's FULL page gets re-touched (comp=TT stops the
+    # walk before the boundary)
+    idx.match(prompt_b, TT, touch_lru=True)
+    idx.evict_until(alloc, 1)
+    # the stale partial went alone; both chains' full pages survived
+    assert idx.match(prompt_b, TT + 8)[1] is None     # boundary gone
+    assert len(idx.match(prompt_b, TT)[0]) == 1
+    assert len(idx.match(prompt_a, 2 * TT)[0]) == 2
+    idx.clear(alloc)
+    assert alloc.in_use == 0
+
+
 # ----------------------------------------------------------------------
 # satellites: occupancy split, sampler plumbing, aliased-view reads
 

@@ -24,6 +24,8 @@ hypothesis, in CI it is a hard requirement (CI_REQUIRE_HYPOTHESIS=1 — see
 conftest.import_hypothesis). The numpy-seeded traces below always run.
 """
 import collections
+import os
+import tempfile
 
 import jax
 import jax.numpy as jnp
@@ -34,6 +36,7 @@ from conftest import import_hypothesis
 from repro.configs import get_config
 from repro.kernels.sparse_decode import validate_block_table
 from repro.models import init_params
+from repro.serving import cache as cache_mod
 from repro.serving.engine import Request, Scheduler, decode_step, prefill
 
 KEY = jax.random.PRNGKey(0)
@@ -285,6 +288,79 @@ def test_fuzz_hypothesis_variant():
             assert sched.max_prefill_step_tokens <= chunk
 
     prop()
+
+
+@pytest.mark.parametrize("seed", [31, 33])
+def test_fuzz_preemption_trace(seed):
+    """Random preempt/restore cycles: mixed-priority arrivals on an
+    overcommitted pool under ``admission_policy='preempt'``. Every
+    preempted request must still match its solo lockstep run bit-exactly
+    (the swap round-trip through the host spool is byte-preserving), every
+    preemption must be matched by a restore, and after the drain NOTHING
+    leaks — pages, reservations, or spool entries."""
+    rng = np.random.default_rng(seed)
+    n_requests = 5
+    arrivals = np.cumsum(rng.poisson(4.0, size=n_requests)).astype(int)
+    eos = CFG.vocab_size - 1
+    reqs = []
+    for i in range(n_requests):
+        # totals of 54/61 tokens -> 2-3 page worst cases, so a 4-page pool
+        # cannot hold two concurrent decoders: every higher-priority
+        # arrival against a busy pool must preempt
+        plen = PROMPT_LENS[-1] if i == 0 else int(rng.choice((14, 21)))
+        gen = 40
+        prompt = rng.integers(0, CFG.vocab_size, size=plen)
+        reqs.append(Request(prompt=np.asarray(prompt, np.int64),
+                            max_new_tokens=gen, eos_token_id=eos,
+                            priority=i % 2))
+    sched = Scheduler(CFG, PARAMS, n_slots=2, max_total_tokens=MAX_TOTAL,
+                      page_tokens=TT, n_pages=4,
+                      admission_policy="preempt", debug_invariants=True)
+    i = 0
+    guard = 0
+    while i < n_requests or sched.has_work:
+        while i < n_requests and arrivals[i] <= sched.step_count:
+            sched.submit(reqs[i])
+            i += 1
+        sched.step()
+        _assert_no_aliasing(sched)
+        guard += 1
+        assert guard < 2000, "preemption trace did not drain (thrash?)"
+    assert all(r.done for r in reqs)
+    assert sched.preempt_count >= 1, "trace never preempted — resize it"
+    assert sched.restore_count == sched.preempt_count
+    assert sched.spool.n_entries == 0, "host spool leaked swap entries"
+    assert sched.allocator.n_reserved == 0
+    assert sched.allocator.in_use == 0
+    assert sorted(sched.allocator._free) == list(range(sched.n_pages))
+    for r in reqs:
+        want = _solo_tokens(tuple(int(t) for t in r.prompt),
+                            r.max_new_tokens, r.eos_token_id)
+        assert r.output_tokens == want, (r.uid, r.preempt_count)
+
+
+def test_fuzz_prefix_save_load_round_trip():
+    """After a shared-prefix fuzz trace, ``save()``/``load()`` must round-
+    trip the whole index: a freshly loaded index reports IDENTICAL
+    potential prefix coverage for every prompt in the trace, and loading
+    under the wrong fingerprint raises."""
+    sched, reqs = _run_trace(seed=12, n_requests=4, page_tokens=TT,
+                             share_prefix=True, prefix_len=40, n_pages=6)
+    path = os.path.join(tempfile.mkdtemp(), "prefix_cache.pkl")
+    n_saved = sched.save_prefix_cache(path)
+    assert n_saved >= 1
+    fp = cache_mod.prefix_cache_fingerprint(CFG, sched.page_tokens)
+    loaded = cache_mod.PrefixIndex(sched.page_tokens)
+    assert loaded.load(path, fp) == n_saved
+    for r in reqs:
+        comp, _ = cache_mod.prefill_split(CFG, len(r.prompt))
+        assert loaded.probe(r.prompt, comp) \
+            == sched.prefix.probe(r.prompt, comp)
+    with pytest.raises(ValueError, match="fingerprint"):
+        cache_mod.PrefixIndex(sched.page_tokens).load(
+            path, dict(fp, key_sparsity=0.123))
+    _check_drained(sched, reqs)
+    assert sched.spool.n_entries == 0    # clear() dropped spooled bytes too
 
 
 def test_zero_max_new_tokens_budget_covers_prefill():
