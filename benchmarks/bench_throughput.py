@@ -99,9 +99,11 @@ def scheduler_main(arch: str = "starcoder2-3b", n_slots: int = 4,
     dt = time.perf_counter() - t0
     new_tokens = sum(r.num_generated for r in sched.finished)
     tps = new_tokens / dt
-    occ = sched.occupancy.slots
+    st = sched.stats()
+    occ = st["occupancy"]["slots"]
     emit(f"fig7/scheduler/{arch}/slots{n_slots}", dt * 1e6 / max(1, new_tokens),
-         f"tokens_per_s={tps:.1f} occupancy={occ*100:.1f}%")
+         f"tokens_per_s={tps:.1f} occupancy={occ*100:.1f}%",
+         metrics=st)
     return {"tokens_per_s": tps, "occupancy": occ,
             "steps": sched.step_count, "requests": len(sched.finished)}
 
@@ -194,12 +196,14 @@ def paging_main(rng=None, smoke: bool = False) -> dict:
         * pb
 
     sched_c, dt_c, toks_c, ttft_c = serve(paged=False)
+    st_c = sched_c.stats()
     emit("paging/contiguous", dt_c * 1e6 / max(1, toks_c),
          f"tokens_per_s={toks_c/dt_c:.1f} "
-         f"occupancy={sched_c.occupancy.slots*100:.1f}%",
+         f"occupancy={st_c['occupancy']['slots']*100:.1f}%",
          peak_pool_bytes=contig_bytes, tokens_per_s=toks_c / dt_c,
          ttft_steps_p50=float(np.percentile(ttft_c, 50)),
-         ttft_steps_p99=float(np.percentile(ttft_c, 99)))
+         ttft_steps_p99=float(np.percentile(ttft_c, 99)),
+         metrics=st_c)
 
     sched_p, dt_p, toks_p, ttft_p = serve(paged=True)
     peak = sched_p.allocator.peak_in_use
@@ -215,7 +219,8 @@ def paging_main(rng=None, smoke: bool = False) -> dict:
          peak_pages=peak, page_tokens=page_tokens,
          pool_bytes_saving=saving, speed_ratio_vs_contiguous=speed_ratio,
          ttft_steps_p50=float(np.percentile(ttft_p, 50)),
-         ttft_steps_p99=float(np.percentile(ttft_p, 99)))
+         ttft_steps_p99=float(np.percentile(ttft_p, 99)),
+         metrics=sched_p.stats())
     assert toks_p == toks_c, (toks_p, toks_c)   # same trace, same tokens
     assert saving >= 0.2, f"paging saved only {saving*100:.1f}% (<20%)"
     assert speed_ratio >= 0.95, \
@@ -322,32 +327,34 @@ def prefix_main(rng=None) -> dict:
              ("shared+packed", True, chunk, budget, True))
     for tag, share, pchunk, pbudget, pack in modes:
         sched, reqs, dt, toks, ttft = serve(share, pchunk, pbudget, pack)
-        peak_bytes = sched.allocator.peak_in_use * pb + meta
-        occ = sched.occupancy
+        st = sched.stats()
+        occ = st["occupancy"]
+        peak_bytes = st["gauges"]["pool.pages_peak"] * pb + meta
         derived = (f"tokens_per_s={toks/dt:.1f} "
-                   f"peak_pages={sched.allocator.peak_in_use} "
+                   f"peak_pages={st['gauges']['pool.pages_peak']} "
                    f"ttft_steps_mean={np.mean(ttft):.1f}")
         extra = {}
         if share:
             extra["shared_admissions"] = sched.shared_admissions
-            extra["prefix_hits"] = sched.prefix.hits
-            extra["pages_shared_occupancy"] = occ.pages_shared
+            extra["prefix_hits"] = st["counters"]["prefix.hits"]
+            extra["pages_shared_occupancy"] = occ["pages_shared"]
         if pchunk is not None:
             bound = pbudget if pbudget is not None else pchunk
             derived += (f" stall_max={sched.max_prefill_step_tokens}"
                         f"<=budget={bound}")
             extra["max_prefill_step_tokens"] = sched.max_prefill_step_tokens
-            extra["prefill_tokens_per_step"] = occ.prefill_tokens_per_step
-            extra["prefill_stall_p50"] = occ.prefill_stall_p50
-            extra["prefill_stall_p99"] = occ.prefill_stall_p99
+            extra["prefill_tokens_per_step"] = occ["prefill_tokens_per_step"]
+            extra["prefill_stall_p50"] = occ["prefill_stall_p50"]
+            extra["prefill_stall_p99"] = occ["prefill_stall_p99"]
             assert sched.max_prefill_step_tokens <= bound
         emit(f"prefix/{tag}", dt * 1e6 / max(1, toks), derived,
              peak_pool_bytes=peak_bytes,
-             peak_pages=sched.allocator.peak_in_use,
+             peak_pages=st["gauges"]["pool.pages_peak"],
              ttft_steps_mean=float(np.mean(ttft)),
              ttft_steps_max=int(np.max(ttft)),
-             ttft_steps_p50=occ.ttft_p50, ttft_steps_p99=occ.ttft_p99,
-             tokens_per_s=toks / dt, page_tokens=page_tokens, **extra)
+             ttft_steps_p50=occ["ttft_p50"], ttft_steps_p99=occ["ttft_p99"],
+             tokens_per_s=toks / dt, page_tokens=page_tokens,
+             metrics=st, **extra)
         results[tag] = peak_bytes
         outputs[tag] = [r.output_tokens for r in reqs]
         ttft_means[tag] = float(np.mean(ttft))
@@ -565,7 +572,8 @@ def preemption_main(rng=None, smoke: bool = False) -> dict:
              ttft_steps_p50=float(np.percentile(ttft, 50)),
              ttft_steps_p99=float(np.percentile(ttft, 99)),
              ttft_steps_p99_interactive=float(np.percentile(hi_ttft, 99)),
-             swap_bytes_out=swap_out, swap_bytes_in=swap_in)
+             swap_bytes_out=swap_out, swap_bytes_in=swap_in,
+             metrics=sched.stats())
         results[policy] = {"sched": sched, "reqs": reqs,
                            "completed": len(done)}
 
@@ -589,6 +597,11 @@ def preemption_main(rng=None, smoke: bool = False) -> dict:
                    * roofline.swap_bytes(cfg, page_tokens, 0))
     measured = sched_p.spool.bytes_out + 12 * sched_p.preempt_count
     assert measured == modeled_out, (measured, modeled_out)
+    # the same invariant, as the drift auditor reports it (ratio == 1.0)
+    from repro.obs.drift import roofline_drift
+    dr = roofline_drift(sched_p)
+    assert dr["swap_bytes_out"]["ratio"] == 1.0, dr["swap_bytes_out"]
+    assert dr["swap_bytes_in"]["ratio"] == 1.0, dr["swap_bytes_in"]
     emit("preemption/swap_model", 0.0,
          f"modeled_bytes_per_trace={modeled_out} "
          f"(measured {sched_p.spool.bytes_out} + counters)",

@@ -20,8 +20,51 @@ from repro.serving.cache import cache_hbm_bytes
 from repro.serving.engine import Request, Scheduler
 
 
+OBS_EPILOG = """\
+observability (repro.obs — default-on metrics, opt-in tracing):
+
+  --metrics-json PATH writes the full telemetry snapshot after the drain:
+    {"stats": Scheduler.stats(), "roofline_drift": ...}. Metric names:
+      step/{step,admit,prefill,provision,compaction,decode,sample,
+            preempt_out,restore_in}_s   per-phase wall-time histograms
+                                        (count/sum/p50/p90/p99 + buckets)
+      engine.{steps,decode_steps,submitted,admitted,finished,rejected,
+              tokens_sampled,prefill_tokens,compactions,cow_events,
+              preempts,restores,swapped_pages,restored_pages}   counters
+      pool.pages_{total,in_use,free,reserved,peak,owned,shared}  gauges
+      spool.{bytes_out,bytes_in,held_bytes,entries}   swap-tier traffic
+      prefix.{hits,misses,demotions,promotions,evictions,
+              device_entries,spooled_entries}         prefix-cache tier
+    With --engines N the snapshot is the fleet aggregate (counters sum,
+    histograms merge exactly; per-engine summaries under "per_engine").
+
+  --trace PATH exports a Chrome trace-event JSON: open ui.perfetto.dev
+    and drop the file in. Scheduler phases render as nested B/E spans per
+    step; request lifecycles as async "req" tracks (submit -> admit ->
+    first_token -> finish, with preempt/restore/chunk instants). Engines
+    of a router get separate tid rows. Timers wrap existing host-side
+    boundaries only — without --trace-sync the decode span measures
+    DISPATCH (JAX async dispatch), and device time drains into the next
+    blocking phase; --trace-sync adds one block_until_ready per step for
+    true per-phase device attribution (slower: serializes the pipeline).
+
+  roofline drift (printed + in the metrics JSON): measured/modeled
+    ratios against repro.roofline. swap ratios must be exactly 1.0
+    whenever traffic moved (byte accounting is exact; anything else is a
+    bug). decode drift_ratio ~ 1 on TPU means decode is memory-bound at
+    roofline bandwidth (the paper's claim); >> 1 means overhead-bound —
+    expected by orders of magnitude on this CPU reference path, where
+    its trend across runs is the useful signal.
+
+  Validate artifacts (the CI obs-smoke gate):
+    python -m repro.obs.validate TRACE.json --metrics METRICS.json
+"""
+
+
 def main():
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+        epilog=OBS_EPILOG)
     ap.add_argument("--arch", default="starcoder2-3b")
     ap.add_argument("--slots", type=int, default=4,
                     help="batch slots in the shared cache")
@@ -102,6 +145,21 @@ def main():
                          "matches) and save the surviving chains after "
                          "the drain. Requires --share-prefix and a "
                          "single engine.")
+    ap.add_argument("--metrics-json", default="",
+                    help="write the post-drain telemetry snapshot "
+                         "(Scheduler.stats() + roofline drift report) to "
+                         "this path as JSON")
+    ap.add_argument("--trace", default="",
+                    help="record a structured event timeline and export "
+                         "Chrome trace-event JSON to this path (open in "
+                         "ui.perfetto.dev; see epilog)")
+    ap.add_argument("--trace-sync", action="store_true",
+                    help="block on each decode step's output for accurate "
+                         "per-phase device attribution in the trace "
+                         "(opt-in: serializes JAX's async dispatch)")
+    ap.add_argument("--stats-every", type=int, default=100,
+                    help="print a one-line stats log every N engine steps "
+                         "(0 = off)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.page_tokens != "auto":
@@ -141,7 +199,13 @@ def main():
     if args.mesh_model:
         from repro.serving.sharded import make_serving_mesh
         mesh = make_serving_mesh(args.mesh_model)
+    tracer = None
+    if args.trace:
+        from repro.obs import EventTracer
+        tracer = EventTracer()
     sched_kw = dict(
+        tracer=tracer,
+        trace_sync=args.trace_sync,
         max_total_tokens=max_total,
         page_tokens=args.page_tokens or None,
         n_pages=args.n_pages or None,
@@ -197,6 +261,7 @@ def main():
                     temperature=0.7)
             for _ in range(args.requests)]
 
+    from repro.obs import format_stats_line
     t0 = time.perf_counter()
     i = 0
     while i < args.requests or sched.has_work:
@@ -204,6 +269,9 @@ def main():
             sched.submit(reqs[i])
             i += 1
         sched.step()
+        if args.stats_every and sched.step_count % args.stats_every == 0:
+            print(format_stats_line(sched.stats(),
+                                    prefix=f"# [{sched.step_count:>5}]"))
     dt = time.perf_counter() - t0
     if args.persist_prefix:
         n = sched.save_prefix_cache(args.persist_prefix)
@@ -216,42 +284,46 @@ def main():
           f"{sched.step_count} engine steps in {dt:.2f}s")
     print(f"  decode throughput: {new_tokens/dt:.1f} tok/s "
           f"(CPU reference path, incl. compiles)")
-    occ = sched.occupancy
-    print(f"  batch occupancy:   {occ.slots*100:.1f}% of {args.slots} slots")
+    st = sched.stats()          # registry snapshot + occupancy dict
+    occ = st["occupancy"]
+    print(f"  batch occupancy:   {occ['slots']*100:.1f}% of "
+          f"{args.slots} slots")
     if args.engines > 1:
         loads = [len(e.finished) for e in sched.engines]
         print(f"  router:            finished per engine {loads}; "
               f"{sched.pages_in_use} pages still held "
               f"({sched.page_leaks} leaked)")
     else:
-        if occ.pages is not None:
-            print(f"  page occupancy:    {occ.pages*100:.1f}% of "
+        if occ["pages"] is not None:
+            print(f"  page occupancy:    {occ['pages']*100:.1f}% of "
                   f"{sched.n_pages} pages "
-                  f"(peak {sched.allocator.peak_in_use} drawn)")
+                  f"(peak {st['gauges']['pool.pages_peak']} drawn)")
         if args.share_prefix:
             print(f"  prefix sharing:    {sched.shared_admissions}/"
                   f"{args.requests} admissions aliased pages "
-                  f"({sched.prefix.hits} page hits, {sched.cow_count} "
+                  f"({st['counters']['prefix.hits']} page hits, "
+                  f"{st['counters']['engine.cow_events']} "
                   f"copy-on-writes; occupancy "
-                  f"owned={occ.pages_owned*100:.1f}% "
-                  f"shared={occ.pages_shared*100:.1f}%)")
+                  f"owned={occ['pages_owned']*100:.1f}% "
+                  f"shared={occ['pages_shared']*100:.1f}%)")
         if args.prefill_chunk:
             mode_note = ", packed" if sched.pack_prefill else ""
             print(f"  chunked prefill:   <= "
                   f"{sched.max_prefill_step_tokens} "
                   f"prefill tokens/step (budget {sched.prefill_budget}"
                   f"{mode_note}); "
-                  f"mean {occ.prefill_tokens_per_step:.1f} tok/step, "
-                  f"stall p50={occ.prefill_stall_p50:.0f} "
-                  f"p99={occ.prefill_stall_p99:.0f}")
-        if occ.ttft_p50 is not None:
-            print(f"  ttft (steps):      p50={occ.ttft_p50:.0f} "
-                  f"p99={occ.ttft_p99:.0f}")
+                  f"mean {occ['prefill_tokens_per_step']:.1f} tok/step, "
+                  f"stall p50={occ['prefill_stall_p50']:.0f} "
+                  f"p99={occ['prefill_stall_p99']:.0f}")
+        if occ["ttft_p50"] is not None:
+            print(f"  ttft (steps):      p50={occ['ttft_p50']:.0f} "
+                  f"p99={occ['ttft_p99']:.0f}")
         if args.admission_policy == "preempt" and sched.preempt_count:
-            print(f"  preemption:        {sched.preempt_count} swaps out, "
-                  f"{sched.restore_count} restores, "
-                  f"{sched.swapped_pages} pages via host spool "
-                  f"({sched.spool.bytes_out + sched.spool.bytes_in} "
+            c = st["counters"]
+            print(f"  preemption:        {c['engine.preempts']} swaps out, "
+                  f"{c['engine.restores']} restores, "
+                  f"{c['engine.swapped_pages']} pages via host spool "
+                  f"({c['spool.bytes_out'] + c['spool.bytes_in']} "
                   f"bytes moved)")
         if args.admission_policy == "reject" and sched.rejected:
             print(f"  rejected:          {len(sched.rejected)} requests "
@@ -275,6 +347,41 @@ def main():
               f"{args.mesh_model} devices (KV heads sharded, "
               f"metadata replicated)")
     print("  sample:", sched.finished[0].output_tokens[:12])
+
+    # --- telemetry artifacts: roofline drift report, metrics JSON, trace
+    from repro.obs.drift import roofline_drift
+    if args.engines > 1:
+        drift = {"per_engine": [roofline_drift(e) for e in sched.engines]}
+        decs = [d["decode_step"] for d in drift["per_engine"]]
+        ratios = [d["drift_ratio"] for d in decs if d["decode_steps"]]
+        if ratios:
+            print(f"  roofline drift:    decode measured/modeled = "
+                  f"{min(ratios):.3g}..{max(ratios):.3g} across "
+                  f"{args.engines} engines (CPU reference path: >> 1 "
+                  f"expected; trend is the signal)")
+    else:
+        drift = roofline_drift(sched)
+        dec = drift["decode_step"]
+        print(f"  roofline drift:    decode measured/modeled = "
+              f"{dec['drift_ratio']:.3g} "
+              f"(p50 {dec['measured_p50_s']*1e3:.3f}ms vs modeled "
+              f"{dec['modeled_s']*1e6:.2f}us over {dec['decode_steps']} "
+              f"steps; CPU reference path: >> 1 expected)")
+        for key, label in (("swap_bytes_out", "swap out"),
+                           ("swap_bytes_in", "swap in")):
+            if key in drift:
+                sec = drift[key]
+                print(f"  roofline drift:    {label} measured/modeled = "
+                      f"{sec['ratio']:.6f} ({sec['measured']} vs "
+                      f"{sec['modeled']} bytes)")
+    if args.metrics_json:
+        import json
+        with open(args.metrics_json, "w") as f:
+            json.dump({"stats": st, "roofline_drift": drift}, f, indent=1)
+        print(f"# metrics -> {args.metrics_json}")
+    if tracer is not None:
+        tracer.export(args.trace)
+        print(f"# trace   -> {args.trace}  (open in ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

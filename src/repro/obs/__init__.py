@@ -1,0 +1,28 @@
+"""repro.obs — dependency-free serving telemetry.
+
+Three pieces, stdlib-only so the serving stack can depend on them
+unconditionally:
+
+- ``metrics``: Prometheus-flavoured :class:`Counter` / :class:`Gauge` /
+  :class:`Histogram` primitives behind a :class:`MetricsRegistry`
+  (plus :class:`NullRegistry` for the instrumentation-off A/B in the
+  fuzz suite). Histograms use fixed log-spaced buckets so per-replica
+  instances merge exactly in ``Router.stats()``.
+- ``trace``: :class:`EventTracer`, a low-overhead structured event
+  recorder that exports Chrome trace-event JSON loadable in Perfetto
+  (https://ui.perfetto.dev) — scoped B/E spans for scheduler phases,
+  instant events for request lifecycle, async b/e spans per request.
+- ``drift`` (import the submodule explicitly): the ``roofline_drift``
+  auditor comparing measured step timings / spool byte counters against
+  the ``repro.roofline`` cost models.
+
+``python -m repro.obs.validate`` checks an exported trace against the
+Chrome trace-event schema and a metrics snapshot for sane drift ratios
+(the CI ``obs-smoke`` job).
+"""
+
+from repro.obs.metrics import (          # noqa: F401
+    Counter, Gauge, Histogram, MetricsRegistry, NullRegistry,
+    TIME_BUCKETS_S, format_stats_line,
+)
+from repro.obs.trace import EventTracer, validate_chrome_trace  # noqa: F401

@@ -1,0 +1,146 @@
+"""Roofline drift auditing: measured telemetry vs. the analytic cost models.
+
+The ``repro.roofline`` module models what serving *should* cost; the
+``repro.obs`` registry measures what it *did* cost. ``roofline_drift``
+divides the two so a cost-model-vs-reality gap is a number in every
+metrics snapshot instead of a benchmark surprise. Two audits:
+
+**Swap traffic (exact).** Spool byte counters are host-side accounting of
+whole-page/whole-window transfers, and ``roofline.swap_bytes`` charges
+exactly those quanta — so ``ratio`` must be **1.0 whenever any traffic
+moved** (the BENCH_preemption gate, generalized here to also cover prefix
+demote/promote traffic). Any other value means the byte accounting broke.
+
+**Decode step time (approximate).** Measured decode-phase wall time
+(p50 of the ``step/decode_s`` histogram) vs. the memory-bound model:
+``(param bytes + MUSTAFAR compressed-cache bytes + paged block-table
+metadata) / HBM_BW``. Interpretation of ``drift_ratio`` =
+measured / modeled:
+
+- ≈ 1 on TPU: decode is memory-bound at roofline bandwidth, as the paper
+  claims (PAPER.md §5) — the bitmap kernel is paying for pruning.
+- ≫ 1: dispatch/host overhead or kernel inefficiency dominates; on the
+  CPU interpret-mode reference path this is expected to be orders of
+  magnitude (the number quantifies the reference-path gap, and its TREND
+  across PRs is the regression signal CI's sanity band watches).
+- The model charges worst-case fill (``max_compressed_tokens`` at
+  ``max_total_tokens``), so early-trace ratios read low.
+
+Without ``--trace-sync`` the decode timer measures *dispatch* (JAX async
+dispatch returns before the device finishes); the device time then drains
+into whichever later phase blocks. Sync mode gives per-phase device
+attribution at the cost of one ``block_until_ready`` per step.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional
+
+from repro.roofline import HBM_BW, paged_metadata_bytes, swap_bytes
+
+
+def _ratio(measured: float, modeled: float) -> float:
+    """measured/modeled with 0/0 defined as exact agreement (1.0)."""
+    if modeled:
+        return measured / modeled
+    return 1.0 if not measured else math.inf
+
+
+def decode_step_model(cfg, n_slots: int, max_total_tokens: int,
+                      page_tokens: Optional[int] = None) -> Dict[str, Any]:
+    """Modeled HBM bytes (and roofline seconds) for ONE batched decode step
+    at worst-case cache fill: parameter reads + per-row MUSTAFAR cache
+    traffic (``core.attention.hbm_bytes_mustafar`` — dense model when
+    pruning is disabled) + paged block-table metadata."""
+    import numpy as np
+    from repro.core.attention import hbm_bytes_dense, hbm_bytes_mustafar
+    from repro.serving.cache import max_compressed_tokens
+
+    m = cfg.mustafar
+    d = cfg.d_head
+    itemsize = int(np.dtype(cfg.dtype).itemsize)
+    n_attn = len(cfg.attention_layers())
+    if m.enabled:
+        k_k = m.keep_k(d, m.key_sparsity)
+        k_v = m.keep_k(d, m.value_sparsity)
+        tc = max_compressed_tokens(cfg, max_total_tokens)
+        per_row = hbm_bytes_mustafar(tc, m.local_window + m.tile_tokens,
+                                     d, k_k, k_v, itemsize=itemsize)
+    else:
+        per_row = hbm_bytes_dense(max_total_tokens, d, itemsize=itemsize)
+    cache_bytes = n_attn * n_slots * cfg.n_kv_heads * per_row
+    param_bytes = cfg.active_param_count() * itemsize
+    meta_bytes = (paged_metadata_bytes(cfg, n_slots, max_total_tokens,
+                                       page_tokens)
+                  if page_tokens else 0)
+    total = param_bytes + cache_bytes + meta_bytes
+    return {
+        "param_bytes": int(param_bytes),
+        "cache_bytes": int(cache_bytes),
+        "metadata_bytes": int(meta_bytes),
+        "bytes": int(total),
+        "seconds": total / HBM_BW,
+    }
+
+
+def roofline_drift(sched) -> Dict[str, Any]:
+    """Drift report for one :class:`~repro.serving.engine.Scheduler`.
+
+    Returns ``{"decode_step": {...}, "swap_bytes_out": {...},
+    "swap_bytes_in": {...}}`` (swap sections only for paged schedulers).
+    Ratios are measured/modeled; see module docstring for interpretation.
+    """
+    cfg = sched.cfg
+    report: Dict[str, Any] = {}
+
+    h = sched.obs.histogram("step/decode_s")
+    model = decode_step_model(cfg, sched.n_slots, sched.max_total,
+                              sched.page_tokens if sched.paged else None)
+    p50 = h.percentile(50)
+    report["decode_step"] = {
+        "measured_p50_s": p50,
+        "measured_mean_s": h.mean,
+        "decode_steps": int(h.count),
+        "modeled_s": model["seconds"],
+        "modeled_bytes": model["bytes"],
+        "modeled_metadata_bytes": model["metadata_bytes"],
+        "drift_ratio": (p50 / model["seconds"]
+                        if p50 is not None and model["seconds"] > 0
+                        else None),
+    }
+
+    if sched.paged:
+        pt = sched.page_tokens
+        per_page = swap_bytes(cfg, pt, 1) - swap_bytes(cfg, pt, 0)
+        per_event = swap_bytes(cfg, pt, 0)     # window rows + 12 counter B
+        demoted = promoted = 0
+        if sched.share_prefix:
+            demoted = sched.prefix.demotions
+            promoted = sched.prefix.promotions
+        # spool byte counters exclude the 3 int32 per-slot counters (host
+        # ints are 0 numpy bytes) that swap_bytes charges — add them back
+        # per event, exactly as the BENCH_preemption gate does.
+        measured_out = sched.spool.bytes_out + 12 * sched.preempt_count
+        # a demotion spools ONE page with no window/counters: it is charged
+        # page_bytes (== per_page) per demoted entry, nothing else
+        modeled_out = (per_page * (sched.swapped_pages + demoted)
+                       + per_event * sched.preempt_count)
+        measured_in = sched.spool.bytes_in + 12 * sched.restore_count
+        modeled_in = (per_page * (sched.restored_pages + promoted)
+                      + per_event * sched.restore_count)
+        report["swap_bytes_out"] = {
+            "measured": int(measured_out),
+            "modeled": int(modeled_out),
+            "events": int(sched.preempt_count),
+            "demotions": int(demoted),
+            "ratio": _ratio(measured_out, modeled_out),
+        }
+        report["swap_bytes_in"] = {
+            "measured": int(measured_in),
+            "modeled": int(modeled_in),
+            "events": int(sched.restore_count),
+            "promotions": int(promoted),
+            "ratio": _ratio(measured_in, modeled_in),
+        }
+    return report

@@ -1,0 +1,326 @@
+"""Dependency-free metrics primitives for the serving stack.
+
+Design constraints (ISSUE 9):
+
+- ZERO hot-path cost beyond a dict append / int add: ``Histogram.observe``
+  is one ``bisect`` + two adds; counters are one add. No locks (the
+  scheduler is single-threaded per engine), no background threads, no
+  wall-clock reads here — timestamps belong to the tracer.
+- Existing engine statistics (``preempt_count``, ``cow_count``, prefix
+  ``hits``/``misses``, ...) stay authoritative as plain ints so none of
+  the code that mutates them changes; the registry mirrors them through
+  LAZY counters/gauges (a ``fn`` callback read at snapshot time). That is
+  what makes the fuzz "instrumentation changes nothing" property trivially
+  true for those paths.
+- Histograms use FIXED log-spaced bucket bounds so two histograms of the
+  same metric always merge exactly — ``Router.stats()`` merges per-replica
+  registries into fleet totals with no resampling error beyond the shared
+  bucket resolution.
+"""
+
+from __future__ import annotations
+
+import math
+from bisect import bisect_left
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+# Default bounds for time-valued histograms: 1 µs .. 100 s in quarter-decade
+# steps (4 buckets per decade => ~78% worst-case relative bucket error,
+# tightened by the [min, max] clamp in percentile()). 33 finite upper bounds
+# + 1 overflow bucket.
+TIME_BUCKETS_S: Tuple[float, ...] = tuple(
+    10.0 ** (e / 4.0) * 1e-6 for e in range(33))
+
+# Bounds for count-valued histograms (tokens, pages): powers of two.
+COUNT_BUCKETS: Tuple[float, ...] = tuple(float(2 ** e) for e in range(21))
+
+
+class Counter:
+    """Monotonic counter. Either incremented directly (``inc``) or LAZY —
+    constructed with ``fn`` reading an existing plain-int statistic at
+    snapshot time, so legacy bookkeeping stays the single source of truth."""
+
+    __slots__ = ("name", "_value", "_fn")
+
+    def __init__(self, name: str, fn: Optional[Callable[[], float]] = None):
+        self.name = name
+        self._value = 0
+        self._fn = fn
+
+    @property
+    def value(self):
+        return self._fn() if self._fn is not None else self._value
+
+    def inc(self, n=1) -> None:
+        if self._fn is not None:
+            raise RuntimeError(
+                f"counter {self.name!r} is lazy (callback-backed); "
+                f"mutate the underlying statistic instead")
+        self._value += n
+
+
+class Gauge:
+    """Point-in-time value. ``set()`` for pushed values, or ``fn`` for
+    callback gauges evaluated at snapshot time (pool occupancy etc.)."""
+
+    __slots__ = ("name", "_value", "_fn")
+
+    def __init__(self, name: str, fn: Optional[Callable[[], float]] = None):
+        self.name = name
+        self._value = 0.0
+        self._fn = fn
+
+    @property
+    def value(self):
+        return self._fn() if self._fn is not None else self._value
+
+    def set(self, v) -> None:
+        if self._fn is not None:
+            raise RuntimeError(f"gauge {self.name!r} is callback-backed")
+        self._value = v
+
+
+class Histogram:
+    """Fixed-bucket histogram with percentile estimation.
+
+    ``bounds`` are ascending finite upper bounds; samples above the last
+    bound land in an implicit overflow bucket. ``percentile(q)`` walks the
+    cumulative counts to the bucket containing rank ``ceil(q/100 * count)``
+    and returns that bucket's upper bound CLAMPED to the observed
+    ``[min, max]`` — so an empty histogram reports ``None``, a one-sample
+    histogram reports the sample exactly, and estimates never leave the
+    observed range. ``merge`` requires identical bounds (all histograms
+    built through :class:`MetricsRegistry` defaults satisfy this)."""
+
+    __slots__ = ("name", "bounds", "counts", "count", "total", "_min", "_max")
+
+    def __init__(self, name: str,
+                 bounds: Optional[Sequence[float]] = None):
+        self.name = name
+        b = tuple(float(x) for x in (bounds if bounds is not None
+                                     else TIME_BUCKETS_S))
+        if len(b) < 1 or any(b[i] >= b[i + 1] for i in range(len(b) - 1)):
+            raise ValueError(f"bounds must be strictly ascending: {b!r}")
+        self.bounds = b
+        self.counts = [0] * (len(b) + 1)       # +1 overflow bucket
+        self.count = 0
+        self.total = 0.0
+        self._min = math.inf
+        self._max = -math.inf
+
+    def observe(self, v) -> None:
+        v = float(v)
+        self.counts[bisect_left(self.bounds, v)] += 1
+        self.count += 1
+        self.total += v
+        if v < self._min:
+            self._min = v
+        if v > self._max:
+            self._max = v
+
+    @property
+    def min(self) -> Optional[float]:
+        return self._min if self.count else None
+
+    @property
+    def max(self) -> Optional[float]:
+        return self._max if self.count else None
+
+    @property
+    def mean(self) -> Optional[float]:
+        return self.total / self.count if self.count else None
+
+    def percentile(self, q) -> Optional[float]:
+        if self.count == 0:
+            return None
+        if not 0.0 <= q <= 100.0:
+            raise ValueError(f"q={q} outside [0, 100]")
+        rank = max(1, math.ceil(q / 100.0 * self.count))
+        cum = 0
+        est = self._max                        # overflow bucket estimate
+        for i, n in enumerate(self.counts):
+            cum += n
+            if cum >= rank:
+                est = self.bounds[i] if i < len(self.bounds) else self._max
+                break
+        return float(min(max(est, self._min), self._max))
+
+    def merge(self, other: "Histogram") -> None:
+        if self.bounds != other.bounds:
+            raise ValueError(
+                f"cannot merge histogram {self.name!r}: bucket bounds differ "
+                f"({len(self.bounds)} vs {len(other.bounds)} buckets)")
+        for i, n in enumerate(other.counts):
+            self.counts[i] += n
+        self.count += other.count
+        self.total += other.total
+        self._min = min(self._min, other._min)
+        self._max = max(self._max, other._max)
+
+    def summary(self) -> Dict[str, Any]:
+        """Plain-python snapshot (JSON-ready); nonzero buckets only."""
+        return {
+            "count": int(self.count),
+            "sum": float(self.total),
+            "mean": self.mean,
+            "min": self.min,
+            "max": self.max,
+            "p50": self.percentile(50),
+            "p90": self.percentile(90),
+            "p99": self.percentile(99),
+            "buckets": [
+                [self.bounds[i] if i < len(self.bounds) else None, int(n)]
+                for i, n in enumerate(self.counts) if n],
+        }
+
+
+class MetricsRegistry:
+    """Flat namespace of counters/gauges/histograms, get-or-create by name.
+
+    ``snapshot()`` renders everything to plain python (JSON-serializable);
+    ``aggregate()`` folds several registries into one — counters/gauges sum,
+    histograms merge — which is how ``Router.stats()`` builds fleet totals
+    from per-replica registries (replicas must NOT share one registry:
+    callback gauges bind to a single engine's pool)."""
+
+    null = False
+
+    def __init__(self):
+        self._counters: Dict[str, Counter] = {}
+        self._gauges: Dict[str, Gauge] = {}
+        self._histograms: Dict[str, Histogram] = {}
+
+    def counter(self, name: str,
+                fn: Optional[Callable[[], float]] = None) -> Counter:
+        c = self._counters.get(name)
+        if c is None:
+            c = self._counters[name] = Counter(name, fn)
+        return c
+
+    def gauge(self, name: str,
+              fn: Optional[Callable[[], float]] = None) -> Gauge:
+        g = self._gauges.get(name)
+        if g is None:
+            g = self._gauges[name] = Gauge(name, fn)
+        return g
+
+    def histogram(self, name: str,
+                  bounds: Optional[Sequence[float]] = None) -> Histogram:
+        h = self._histograms.get(name)
+        if h is None:
+            h = self._histograms[name] = Histogram(name, bounds)
+        return h
+
+    def snapshot(self) -> Dict[str, Any]:
+        def _num(v):
+            v = v.item() if hasattr(v, "item") else v
+            return float(v) if isinstance(v, float) else int(v) \
+                if isinstance(v, int) else v
+        return {
+            "counters": {n: _num(c.value)
+                         for n, c in sorted(self._counters.items())},
+            "gauges": {n: _num(g.value)
+                       for n, g in sorted(self._gauges.items())},
+            "histograms": {n: h.summary()
+                           for n, h in sorted(self._histograms.items())},
+        }
+
+    @classmethod
+    def aggregate(cls, registries: Iterable["MetricsRegistry"]
+                  ) -> "MetricsRegistry":
+        out = cls()
+        for reg in registries:
+            if getattr(reg, "null", False):
+                continue
+            for name, c in reg._counters.items():
+                tgt = out.counter(name)
+                tgt._value += c.value
+            for name, g in reg._gauges.items():
+                tgt = out.gauge(name)
+                tgt._value += g.value
+            for name, h in reg._histograms.items():
+                out.histogram(name, h.bounds).merge(h)
+        return out
+
+
+class _NullMetric:
+    """Accepts every metric operation and records nothing."""
+
+    __slots__ = ()
+    name = "null"
+    value = 0
+    count = 0
+    total = 0.0
+    bounds: Tuple[float, ...] = ()
+    min = None
+    max = None
+    mean = None
+
+    def inc(self, n=1):
+        pass
+
+    def set(self, v):
+        pass
+
+    def observe(self, v):
+        pass
+
+    def percentile(self, q):
+        return None
+
+    def merge(self, other):
+        pass
+
+    def summary(self):
+        return {}
+
+
+_NULL_METRIC = _NullMetric()
+
+
+class NullRegistry:
+    """Instrumentation OFF: every metric is a shared no-op. Used by the
+    fuzz A/B test proving metrics collection never changes tokens or page
+    accounting, and available to callers who want the last few ns back."""
+
+    null = True
+
+    def counter(self, name, fn=None):
+        return _NULL_METRIC
+
+    def gauge(self, name, fn=None):
+        return _NULL_METRIC
+
+    def histogram(self, name, bounds=None):
+        return _NULL_METRIC
+
+    def snapshot(self) -> Dict[str, Any]:
+        return {"counters": {}, "gauges": {}, "histograms": {}}
+
+
+def format_stats_line(snap: Dict[str, Any], prefix: str = "stats") -> str:
+    """One-line periodic log from a ``Scheduler.stats()`` snapshot."""
+    c = snap.get("counters", {})
+    g = snap.get("gauges", {})
+    h = snap.get("histograms", {})
+    parts: List[str] = [prefix]
+    if "engine.steps" in c:
+        parts.append(f"step={c['engine.steps']}")
+    if "engine.tokens_sampled" in c:
+        parts.append(f"tok={c['engine.tokens_sampled']}")
+    if "engine.slots_active" in g:
+        parts.append(f"active={g['engine.slots_active']:g}")
+    if "pool.pages_in_use" in g:
+        parts.append(f"pages={g['pool.pages_in_use']:g}")
+    if "spool.held_bytes" in g and g["spool.held_bytes"]:
+        parts.append(f"spool={g['spool.held_bytes'] / 1e6:.1f}MB")
+    if "prefix.hits" in c or "prefix.misses" in c:
+        parts.append(f"prefix={c.get('prefix.hits', 0)}h/"
+                     f"{c.get('prefix.misses', 0)}m")
+    step_h = h.get("step/step_s") or {}
+    if step_h.get("p50") is not None:
+        parts.append(f"step_p50={step_h['p50'] * 1e3:.2f}ms")
+    dec_h = h.get("step/decode_s") or {}
+    if dec_h.get("p50") is not None:
+        parts.append(f"decode_p50={dec_h['p50'] * 1e3:.2f}ms")
+    return " ".join(parts)

@@ -1,0 +1,171 @@
+"""Structured event tracer exporting Chrome trace-event JSON.
+
+The exported file loads directly in Perfetto (https://ui.perfetto.dev) or
+``chrome://tracing``. Event vocabulary (trace-event ``ph`` codes):
+
+- ``B``/``E`` duration spans — scheduler phases (``step``, ``admit``,
+  ``prefill``, ``provision``, ``compaction``, ``decode``, ``sample``,
+  ``preempt_out``, ``restore_in``). Strict stack discipline per
+  (pid, tid): every ``E`` closes the most recent open ``B``.
+- ``i`` instant events — request lifecycle markers (``submit``,
+  ``admit``, ``first_token``, ``finish``, ``reject``, ``preempt``,
+  ``restore``) and prefill ``chunk`` boundaries, each carrying the
+  request uid in ``args``.
+- ``b``/``e`` async spans (cat ``request``, id = request uid) — the
+  submit→finish lifetime of each request, rendered by Perfetto as one
+  horizontal track segment per request.
+
+Timestamps are ``time.perf_counter`` microseconds relative to tracer
+construction — monotonic by construction. Recording an event is one dict
+append; there is deliberately no flushing, file IO, or locking on the hot
+path (export happens once, after the run). Engines in a multi-engine
+``Router`` share one tracer with distinct ``tid``s so their timelines
+render as separate rows.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from contextlib import contextmanager
+from typing import Any, Dict, List
+
+
+class EventTracer:
+    """Append-only trace-event recorder (see module docstring)."""
+
+    def __init__(self):
+        self._t0 = time.perf_counter()
+        self.events: List[Dict[str, Any]] = []
+
+    def _ts(self) -> float:
+        return (time.perf_counter() - self._t0) * 1e6   # µs
+
+    def begin(self, name: str, tid: int = 0, **args) -> None:
+        ev = {"name": name, "ph": "B", "ts": self._ts(), "pid": 0, "tid": tid}
+        if args:
+            ev["args"] = args
+        self.events.append(ev)
+
+    def end(self, name: str, tid: int = 0) -> None:
+        self.events.append(
+            {"name": name, "ph": "E", "ts": self._ts(), "pid": 0, "tid": tid})
+
+    def instant(self, name: str, tid: int = 0, **args) -> None:
+        ev = {"name": name, "ph": "i", "s": "t", "ts": self._ts(),
+              "pid": 0, "tid": tid}
+        if args:
+            ev["args"] = args
+        self.events.append(ev)
+
+    def async_begin(self, name: str, id: int, tid: int = 0, **args) -> None:
+        ev = {"name": name, "ph": "b", "cat": "request", "id": int(id),
+              "ts": self._ts(), "pid": 0, "tid": tid}
+        if args:
+            ev["args"] = args
+        self.events.append(ev)
+
+    def async_end(self, name: str, id: int, tid: int = 0) -> None:
+        self.events.append(
+            {"name": name, "ph": "e", "cat": "request", "id": int(id),
+             "ts": self._ts(), "pid": 0, "tid": tid})
+
+    @contextmanager
+    def span(self, name: str, tid: int = 0, **args):
+        self.begin(name, tid=tid, **args)
+        try:
+            yield
+        finally:
+            self.end(name, tid=tid)
+
+    def export(self, path: str) -> int:
+        """Write ``{"traceEvents": [...]}`` JSON; returns event count."""
+        with open(path, "w") as f:
+            json.dump({"traceEvents": self.events,
+                       "displayTimeUnit": "ms"}, f)
+        return len(self.events)
+
+
+def validate_chrome_trace(events: List[Dict[str, Any]]) -> Dict[str, int]:
+    """Assert ``events`` is schema-valid Chrome trace-event JSON content.
+
+    Checks (raising ``ValueError`` with the first violation):
+
+    - every event carries ``name``/``ph``/``ts``/``pid``/``tid`` and a
+      known ``ph`` code; async events also carry ``id``;
+    - timestamps are finite, non-negative, and non-decreasing in record
+      order per (pid, tid) track (the tracer appends in time order);
+    - ``B``/``E`` pairs balance as a stack per (pid, tid), names matching
+      on pop, with nothing left open at the end;
+    - async ``b``/``e`` pairs balance per (cat, id, name).
+
+    Returns summary counts for reporting.
+    """
+    open_spans: Dict[Any, List[str]] = {}
+    open_async: Dict[Any, int] = {}
+    last_ts: Dict[Any, float] = {}
+    counts = {"events": 0, "spans": 0, "instants": 0, "async": 0}
+    for i, ev in enumerate(events):
+        for key in ("name", "ph", "ts", "pid", "tid"):
+            if key not in ev:
+                raise ValueError(f"event {i} missing {key!r}: {ev!r}")
+        ph = ev["ph"]
+        if ph not in ("B", "E", "i", "b", "e"):
+            raise ValueError(f"event {i} has unknown ph {ph!r}")
+        ts = ev["ts"]
+        if not isinstance(ts, (int, float)) or not ts >= 0.0 \
+                or ts != ts or ts == float("inf"):
+            raise ValueError(f"event {i} has bad ts {ts!r}")
+        track = (ev["pid"], ev["tid"])
+        if ts < last_ts.get(track, 0.0):
+            raise ValueError(
+                f"event {i} ts {ts} decreases on track {track} "
+                f"(prev {last_ts[track]})")
+        last_ts[track] = ts
+        counts["events"] += 1
+        if ph == "B":
+            open_spans.setdefault(track, []).append(ev["name"])
+        elif ph == "E":
+            stack = open_spans.get(track)
+            if not stack:
+                raise ValueError(
+                    f"event {i}: E {ev['name']!r} with no open B on "
+                    f"track {track}")
+            top = stack.pop()
+            if top != ev["name"]:
+                raise ValueError(
+                    f"event {i}: E {ev['name']!r} closes B {top!r} on "
+                    f"track {track}")
+            counts["spans"] += 1
+        elif ph == "i":
+            counts["instants"] += 1
+        else:                                   # async b/e
+            if "id" not in ev:
+                raise ValueError(f"event {i}: async {ph!r} missing id")
+            akey = (ev.get("cat"), ev["id"], ev["name"])
+            if ph == "b":
+                open_async[akey] = open_async.get(akey, 0) + 1
+            else:
+                if open_async.get(akey, 0) <= 0:
+                    raise ValueError(
+                        f"event {i}: async end {akey!r} with no open begin")
+                open_async[akey] -= 1
+                counts["async"] += 1
+    leftovers = {t: s for t, s in open_spans.items() if s}
+    if leftovers:
+        raise ValueError(f"unclosed B spans at end of trace: {leftovers!r}")
+    dangling = {k: n for k, n in open_async.items() if n}
+    if dangling:
+        raise ValueError(f"unclosed async spans: {dangling!r}")
+    return counts
+
+
+def load_trace(path: str) -> List[Dict[str, Any]]:
+    """Load a trace file; accepts the object form ``{"traceEvents": [...]}``
+    or a bare JSON array (both valid Chrome trace inputs)."""
+    with open(path) as f:
+        blob = json.load(f)
+    events = blob["traceEvents"] if isinstance(blob, dict) else blob
+    if not isinstance(events, list):
+        raise ValueError(f"{path}: traceEvents is not a list")
+    return events

@@ -1,0 +1,113 @@
+"""Validate an exported trace + metrics snapshot (CI ``obs-smoke`` gate).
+
+Usage::
+
+    python -m repro.obs.validate TRACE.json [--metrics METRICS.json]
+        [--max-decode-drift 1e9] [--min-decode-drift 1e-3]
+
+Checks:
+
+- the trace is schema-valid Chrome trace-event JSON (well-formed, known
+  ``ph`` codes, per-track monotonic timestamps, matched B/E span pairs,
+  matched async b/e request spans) — ``trace.validate_chrome_trace``;
+- the trace actually contains the serving vocabulary: ``step`` spans and
+  request lifecycle instants;
+- the metrics snapshot (``--metrics``) has per-phase step histograms with
+  samples, and every roofline drift ratio is finite and inside a loose
+  sanity band: swap ratios must be ~exactly 1.0 (byte accounting is
+  exact), the decode-time drift ratio inside
+  ``[--min-decode-drift, --max-decode-drift]`` (wide by default — the CPU
+  reference path runs far off the TPU roofline; the band only catches
+  NaN/inf/zero accounting breakage, see ``repro.obs.drift``).
+
+Exits 0 and prints a summary on success; raises (exit != 0) on the first
+violation.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+
+from repro.obs.trace import load_trace, validate_chrome_trace
+
+
+def validate_metrics(blob: dict, min_decode_drift: float,
+                     max_decode_drift: float) -> None:
+    stats = blob.get("stats", blob)
+    hists = stats.get("histograms", {})
+    for name in ("step/step_s", "step/decode_s"):
+        h = hists.get(name)
+        if not h or not h.get("count"):
+            raise ValueError(f"metrics: histogram {name!r} missing or empty")
+        for q in ("p50", "p90", "p99"):
+            v = h.get(q)
+            if v is None or not math.isfinite(v) or v < 0:
+                raise ValueError(f"metrics: {name}.{q} = {v!r} not finite")
+    if not stats.get("gauges"):
+        raise ValueError("metrics: no gauges recorded")
+    drift = blob.get("roofline_drift")
+    if drift is None:
+        raise ValueError("metrics: no roofline_drift section")
+    dec = drift.get("decode_step", {})
+    ratio = dec.get("drift_ratio")
+    if ratio is None or not math.isfinite(ratio):
+        raise ValueError(f"drift: decode drift_ratio = {ratio!r} not finite")
+    if not min_decode_drift <= ratio <= max_decode_drift:
+        raise ValueError(
+            f"drift: decode drift_ratio {ratio:.3g} outside sanity band "
+            f"[{min_decode_drift:g}, {max_decode_drift:g}]")
+    for key in ("swap_bytes_out", "swap_bytes_in"):
+        sec = drift.get(key)
+        if sec is None:
+            continue                       # contiguous run: no swap audit
+        r = sec.get("ratio")
+        if r is None or not math.isfinite(r):
+            raise ValueError(f"drift: {key}.ratio = {r!r} not finite")
+        if abs(r - 1.0) > 1e-9:
+            raise ValueError(
+                f"drift: {key}.ratio = {r!r} != 1.0 — spool byte "
+                f"accounting no longer matches roofline.swap_bytes "
+                f"(measured {sec.get('measured')}, "
+                f"modeled {sec.get('modeled')})")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Validate repro.obs trace/metrics artifacts")
+    ap.add_argument("trace", help="Chrome trace-event JSON path")
+    ap.add_argument("--metrics", default=None,
+                    help="metrics JSON path (from --metrics-json)")
+    ap.add_argument("--min-decode-drift", type=float, default=1e-3)
+    ap.add_argument("--max-decode-drift", type=float, default=1e9)
+    args = ap.parse_args(argv)
+
+    events = load_trace(args.trace)
+    counts = validate_chrome_trace(events)
+    names = {ev["name"] for ev in events}
+    required = {"step", "decode", "submit", "admit", "finish"}
+    missing = required - names
+    if missing:
+        raise ValueError(f"trace: missing expected event names {missing!r}")
+    print(f"trace OK: {counts['events']} events, {counts['spans']} spans, "
+          f"{counts['instants']} instants, {counts['async']} request spans")
+
+    if args.metrics:
+        with open(args.metrics) as f:
+            blob = json.load(f)
+        validate_metrics(blob, args.min_decode_drift, args.max_decode_drift)
+        drift = blob.get("roofline_drift", {})
+        dec = drift.get("decode_step", {})
+        print(f"metrics OK: decode drift {dec.get('drift_ratio'):.3g} "
+              f"over {dec.get('decode_steps')} steps"
+              + (f", swap ratio out/in = "
+                 f"{drift['swap_bytes_out']['ratio']:.6f}/"
+                 f"{drift['swap_bytes_in']['ratio']:.6f}"
+                 if "swap_bytes_out" in drift else ""))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

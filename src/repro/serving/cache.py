@@ -239,6 +239,18 @@ class PageAllocator:
         for p in pages:
             self.release(p)
 
+    def register_metrics(self, registry) -> None:
+        """Report pool state through ``registry`` as CALLBACK gauges —
+        evaluated at snapshot time only, so allocator hot paths (draw /
+        release on every provisioning step) stay untouched."""
+        registry.gauge("pool.pages_total", fn=lambda: self.n_pages)
+        registry.gauge("pool.pages_in_use", fn=lambda: self.in_use)
+        registry.gauge("pool.pages_free", fn=lambda: self.available)
+        registry.gauge("pool.pages_reserved", fn=lambda: self.n_reserved)
+        registry.gauge("pool.pages_peak", fn=lambda: self.peak_in_use)
+        registry.gauge("pool.pages_owned", fn=lambda: self.in_use_split[0])
+        registry.gauge("pool.pages_shared", fn=lambda: self.in_use_split[1])
+
 
 class PageSpool:
     """Host-memory tier for compressed KV pages — the middle rung of the
@@ -259,14 +271,36 @@ class PageSpool:
     ``put``), ``bytes_in`` host→device (every ``take``) — the measured
     swap-traffic numbers BENCH_preemption.json reports next to the
     ``roofline.swap_bytes`` model. ``held_bytes`` is the current host
-    footprint (the oversubscription headroom in use)."""
+    footprint (the oversubscription headroom in use).
 
-    def __init__(self):
+    Both traffic totals live on ``repro.obs`` counters (named
+    ``spool.bytes_out`` / ``spool.bytes_in`` in the registry passed at
+    construction; standalone counters otherwise), so one metrics snapshot
+    carries the same numbers the BENCH_preemption byte-exactness gate
+    asserts. The ``bytes_out``/``bytes_in`` int properties keep every
+    existing reader working unchanged."""
+
+    def __init__(self, registry=None):
+        from repro.obs.metrics import Counter
         self._entries: Dict[int, Any] = {}
         self._sizes: Dict[int, int] = {}
         self._next = 0
-        self.bytes_out = 0          # device -> host (spilled)
-        self.bytes_in = 0           # host -> device (restored)
+        if registry is not None and not getattr(registry, "null", False):
+            self._bytes_out = registry.counter("spool.bytes_out")
+            self._bytes_in = registry.counter("spool.bytes_in")
+        else:
+            self._bytes_out = Counter("spool.bytes_out")
+            self._bytes_in = Counter("spool.bytes_in")
+
+    @property
+    def bytes_out(self) -> int:
+        """Total device -> host bytes spilled (every counted ``put``)."""
+        return self._bytes_out.value
+
+    @property
+    def bytes_in(self) -> int:
+        """Total host -> device bytes restored (every ``take``)."""
+        return self._bytes_in.value
 
     @property
     def n_entries(self) -> int:
@@ -286,7 +320,7 @@ class PageSpool:
         self._entries[key] = data
         self._sizes[key] = size
         if count:
-            self.bytes_out += size
+            self._bytes_out.inc(size)
         return key
 
     def peek(self, key: int):
@@ -294,7 +328,7 @@ class PageSpool:
 
     def take(self, key: int):
         """Pop an entry for restore (counts toward ``bytes_in``)."""
-        self.bytes_in += self._sizes.pop(key)
+        self._bytes_in.inc(self._sizes.pop(key))
         return self._entries.pop(key)
 
     def drop(self, key: int) -> None:
@@ -513,6 +547,25 @@ class PrefixIndex:
         # engine step and would inflate them arbitrarily)
         self.hits = 0      # pages mapped from the index, admitted matches
         self.misses = 0    # committed admissions that matched nothing
+        # spill-tier traffic stats (entries == pages: one page per entry)
+        self.demotions = 0   # entries demoted device -> spool
+        self.promotions = 0  # entries promoted spool -> device
+        self.evictions = 0   # entries dropped outright (storage released)
+
+    def register_metrics(self, registry) -> None:
+        """Report index state through ``registry``: LAZY counters mirror
+        the plain-int stats (the scheduler mutates ``hits``/``misses``
+        directly at admission commit; eviction paths bump the rest), plus
+        callback gauges for residency."""
+        registry.counter("prefix.hits", fn=lambda: self.hits)
+        registry.counter("prefix.misses", fn=lambda: self.misses)
+        registry.counter("prefix.demotions", fn=lambda: self.demotions)
+        registry.counter("prefix.promotions", fn=lambda: self.promotions)
+        registry.counter("prefix.evictions", fn=lambda: self.evictions)
+        registry.gauge("prefix.device_entries",
+                       fn=lambda: len(self.held_pages))
+        registry.gauge("prefix.spooled_entries",
+                       fn=lambda: self.spooled_entries)
 
     def _bump(self) -> int:
         self._clock += 1
@@ -642,6 +695,7 @@ class PrefixIndex:
                 self._lru[child] = None
                 self._lru.move_to_end(child)
                 ent["used"] = self._bump()
+                self.promotions += 1
                 n_promoted += 1
             depth += 1
             node = child
@@ -660,6 +714,7 @@ class PrefixIndex:
                 ent["page"], ent["spool"] = page, None
                 self._partials.move_to_end(node)
                 ent["used"] = self._bump()
+                self.promotions += 1
                 n_promoted += 1
         return cache, n_promoted
 
@@ -748,9 +803,11 @@ class PrefixIndex:
             node = self._nodes.pop(nid)
             self._lru.pop(nid, None)
             self._release_entry_storage(node, allocator)
+            self.evictions += 1
             ent = self._partials.pop(nid, None)
             if ent is not None:
                 self._release_entry_storage(ent, allocator)
+                self.evictions += 1
 
     def _oldest_device_entries(self) -> Tuple[Optional[int], Optional[int]]:
         """(oldest full node id, oldest device-resident partial base id)."""
@@ -770,6 +827,7 @@ class PrefixIndex:
             gather_page_arrays(cache, [node["page"]]))
         allocator.release(node["page"])
         node["page"] = None
+        self.demotions += 1
         self._lru.pop(nid, None)
 
     def _evict_one(self, allocator: PageAllocator, spool: bool = False,
@@ -794,9 +852,11 @@ class PrefixIndex:
                     gather_page_arrays(cache, [ent["page"]]))
                 allocator.release(ent["page"])
                 ent["page"] = None
+                self.demotions += 1
             else:
                 allocator.release(ent["page"])
                 del self._partials[part]
+                self.evictions += 1
             return True
         if full is None:
             return False

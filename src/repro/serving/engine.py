@@ -28,6 +28,8 @@ sampling loop (kept for benchmarks and equivalence tests).
 from __future__ import annotations
 
 import collections
+import time
+from contextlib import contextmanager
 from dataclasses import dataclass, field
 from functools import partial
 from typing import Any, Deque, Dict, List, NamedTuple, Optional, Tuple
@@ -735,11 +737,28 @@ class Scheduler:
                  tile_overhead_bytes: Optional[int] = None,
                  mesh=None,
                  admission_policy: str = "wait",
-                 debug_invariants: bool = False):
+                 debug_invariants: bool = False,
+                 registry=None,
+                 tracer=None,
+                 trace_sync: bool = False,
+                 tracer_tid: int = 0):
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
         self.max_total = max_total_tokens
+        # telemetry is default-ON (a fresh MetricsRegistry): collection is
+        # host-side arithmetic only and the fuzz suite proves it changes no
+        # tokens/page accounting. Pass obs.NullRegistry() to opt out.
+        # ``tracer`` (an obs.EventTracer) opts into the event timeline;
+        # ``trace_sync`` adds one block_until_ready after decode dispatch
+        # for accurate device attribution (NOT default: it serializes the
+        # async dispatch pipeline). ``tracer_tid`` separates engines
+        # sharing one tracer (Router replicas) into distinct trace rows.
+        from repro.obs.metrics import MetricsRegistry
+        self.obs = registry if registry is not None else MetricsRegistry()
+        self.tracer = tracer
+        self.trace_sync = trace_sync
+        self.tracer_tid = tracer_tid
         if page_tokens == "auto":
             from repro.roofline import auto_page_tokens
             page_tokens = auto_page_tokens(
@@ -794,7 +813,8 @@ class Scheduler:
             self.busy_shared_page_steps = 0
             # host tier shared by preemption swaps AND prefix-index
             # demotions, so swap-traffic accounting aggregates in one place
-            self.spool = cache_mod.PageSpool()
+            # (byte counters live on the registry: satellite of ISSUE 9)
+            self.spool = cache_mod.PageSpool(registry=self.obs)
         # preempted requests awaiting restore: uid -> spooled entry
         self._preempted: "collections.OrderedDict[int, Dict[str, Any]]" = \
             collections.OrderedDict()
@@ -803,6 +823,8 @@ class Scheduler:
         self.swapped_pages = 0                    # pages spooled over all
                                                   # swap-outs (roofline
                                                   # swap_bytes cross-check)
+        self.restored_pages = 0                   # pages scattered back over
+                                                  # all swap-ins (drift audit)
         self.rejected: List[Request] = []         # admission_policy="reject"
         if share_prefix:
             self.prefix = cache_mod.PrefixIndex(page_tokens,
@@ -875,6 +897,79 @@ class Scheduler:
             # serving.sharded for the layout contract.
             from repro.serving.sharded import install_sharded_ops
             install_sharded_ops(self, mesh)
+        self._init_metrics()
+
+    # ------------------------------------------------------------------
+    # telemetry (repro.obs): per-phase step histograms, lifecycle counters,
+    # pool/spool/prefix gauges. Existing plain-int stats stay authoritative
+    # (nothing that mutates them changed); the registry mirrors them via
+    # LAZY counters read at snapshot time, so instrumentation cannot perturb
+    # scheduling state — the property the fuzz A/B test pins down.
+
+    _PHASES = ("step", "admit", "prefill", "provision", "compaction",
+               "decode", "sample", "preempt_out", "restore_in")
+
+    def _init_metrics(self) -> None:
+        reg = self.obs
+        self._phase_h = {name: reg.histogram(f"step/{name}_s")
+                         for name in self._PHASES}
+        self._c_tokens = reg.counter("engine.tokens_sampled")
+        self._c_submitted = reg.counter("engine.submitted")
+        self._c_admitted = reg.counter("engine.admitted")
+        self._c_compactions = reg.counter("engine.compactions")
+        reg.counter("engine.steps", fn=lambda: self.step_count)
+        reg.counter("engine.decode_steps", fn=lambda: self.decode_steps)
+        reg.counter("engine.finished", fn=lambda: len(self.finished))
+        reg.counter("engine.rejected", fn=lambda: len(self.rejected))
+        reg.counter("engine.preempts", fn=lambda: self.preempt_count)
+        reg.counter("engine.restores", fn=lambda: self.restore_count)
+        reg.counter("engine.swapped_pages", fn=lambda: self.swapped_pages)
+        reg.counter("engine.restored_pages", fn=lambda: self.restored_pages)
+        reg.counter("engine.cow_events", fn=lambda: self.cow_count)
+        reg.counter("engine.prefill_tokens",
+                    fn=lambda: self.prefill_token_total)
+        reg.gauge("engine.slots_active",
+                  fn=lambda: sum(1 for s in self.slots if s is not None))
+        reg.gauge("engine.waiting", fn=lambda: len(self.waiting))
+        reg.gauge("engine.pending_prefills", fn=lambda: len(self._pending))
+        reg.gauge("engine.preempted", fn=lambda: len(self._preempted))
+        if self.paged:
+            self.allocator.register_metrics(reg)
+            reg.gauge("spool.held_bytes", fn=lambda: self.spool.held_bytes)
+            reg.gauge("spool.entries", fn=lambda: self.spool.n_entries)
+        if self.share_prefix:
+            self.prefix.register_metrics(reg)
+            reg.counter("engine.shared_admissions",
+                        fn=lambda: self.shared_admissions)
+
+    @contextmanager
+    def _phase(self, name: str):
+        """Time one host-side phase into its ``step/<name>_s`` histogram
+        (and, with a tracer, a B/E span). Wraps EXISTING host boundaries
+        only — no device syncs: without ``trace_sync`` the decode phase
+        measures dispatch (JAX returns before the device finishes) and the
+        device time drains into whichever later phase first blocks."""
+        tr = self.tracer
+        if tr is not None:
+            tr.begin(name, tid=self.tracer_tid)
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            self._phase_h[name].observe(time.perf_counter() - t0)
+            if tr is not None:
+                tr.end(name, tid=self.tracer_tid)
+
+    def stats(self) -> Dict[str, Any]:
+        """THE stats accessor: the registry snapshot (counters / gauges /
+        per-phase histograms — see ROADMAP.md "Observability" for the
+        metric-name catalog) plus the ``occupancy`` ratios under an
+        ``"occupancy"`` key. Examples/benchmarks read this dict instead of
+        poking ``occupancy`` NamedTuple fields; the property remains for
+        programmatic use but new consumers should prefer ``stats()``."""
+        snap = self.obs.snapshot()
+        snap["occupancy"] = dict(self.occupancy._asdict())
+        return snap
 
     # ------------------------------------------------------------------
     def _check_admissible(self, req: Request) -> int:
@@ -908,6 +1003,11 @@ class Scheduler:
             req.uid = self._uid
         self._uid = max(self._uid, req.uid) + 1
         req.arrival_step = self.step_count
+        self._c_submitted.inc()
+        if self.tracer is not None:
+            self.tracer.instant("submit", tid=self.tracer_tid, uid=req.uid,
+                                prompt_tokens=len(req.prompt))
+            self.tracer.async_begin("req", req.uid, tid=self.tracer_tid)
         self.waiting.append(req)
         return req
 
@@ -920,7 +1020,11 @@ class Scheduler:
     @property
     def occupancy(self) -> Occupancy:
         """Slot AND page utilization (see ``Occupancy``), with drawn pages
-        split owned/shared so prefix aliasing is never double-counted."""
+        split owned/shared so prefix aliasing is never double-counted.
+
+        Prefer ``stats()`` for reporting: it carries these same ratios
+        under ``stats()["occupancy"]`` next to the full registry snapshot,
+        so examples/benchmarks no longer poke NamedTuple fields."""
         slots = self.busy_slot_steps / max(1, self.decode_steps * self.n_slots)
         pages = owned = shared = None
         if self.paged:
@@ -972,6 +1076,10 @@ class Scheduler:
 
     def _retire(self, req: Request) -> None:
         req.finish_step = self.step_count
+        if self.tracer is not None:
+            self.tracer.instant("finish", tid=self.tracer_tid, uid=req.uid,
+                                tokens=len(req.output_tokens))
+            self.tracer.async_end("req", req.uid, tid=self.tracer_tid)
         self.finished.append(req)
 
     def _record(self, req: Request, tok: int, logits: jax.Array) -> bool:
@@ -1017,6 +1125,10 @@ class Scheduler:
         parks in ``_preempted`` until ``_restore_preempted`` re-admits it.
         Mid-prefill (``_pending``) slots are never preempted — their state
         lives in the chunk carry, not in pages."""
+        with self._phase("preempt_out"):
+            self._preempt_slot_inner(slot)
+
+    def _preempt_slot_inner(self, slot: int) -> None:
         req = self.slots[slot]
         assert req is not None and slot not in self._pending
         pages = list(self._slot_pages[slot])
@@ -1044,6 +1156,9 @@ class Scheduler:
         req.preempt_count += 1
         self.preempt_count += 1
         self.swapped_pages += len(pages)
+        if self.tracer is not None:
+            self.tracer.instant("preempt", tid=self.tracer_tid,
+                                uid=req.uid, pages=len(pages))
         self._preempted[req.uid] = entry
 
     def _restore_slot(self, slot: int, entry: Dict[str, Any]) -> None:
@@ -1054,6 +1169,10 @@ class Scheduler:
         are refcount-1 (owned), so any CoW demand the original reservation
         covered can only have shrunk — the promises carried through the
         swap still suffice."""
+        with self._phase("restore_in"):
+            self._restore_slot_inner(slot, entry)
+
+    def _restore_slot_inner(self, slot: int, entry: Dict[str, Any]) -> None:
         req = entry["req"]
         self.allocator.reserve(entry["n_pages"] + entry["reserved"])
         pages = self.allocator.draw_many(entry["n_pages"])
@@ -1075,6 +1194,10 @@ class Scheduler:
         self.next_tokens = self.next_tokens.at[slot].set(
             jnp.int32(entry["next_token"]))
         self.restore_count += 1
+        self.restored_pages += len(pages)
+        if self.tracer is not None:
+            self.tracer.instant("restore", tid=self.tracer_tid,
+                                uid=req.uid, pages=len(pages))
 
     def _restore_preempted(self, free: List[int]) -> None:
         """Re-admit preempted requests into free slots, highest priority
@@ -1211,27 +1334,39 @@ class Scheduler:
                 self._n_comp[slot] += tt
                 self._w_len[slot] -= tt
             self._w_len[slot] += 1
+        n_compacting = sum(will)
+        if n_compacting:
+            # tile-group compactions the upcoming decode will run (the
+            # fused kernel executes them inside the jitted step; this host
+            # prediction is the same one that sizes the page draws)
+            self._c_compactions.inc(n_compacting)
         if events:
             # one free-list transaction for the whole step (page ids match
             # what per-slot draw() calls would have assigned), then one
             # block-table scatter. CoW events have refcount > 1, so the
             # released old pages can never re-enter this step's free pops.
-            pages = self.allocator.draw_many(len(events))
-            rows, cols = [], []
-            for (is_cow, slot, lp, old), page in zip(events, pages):
-                self._slot_reserved[slot] -= 1
-                if is_cow:
-                    self.cache = cache_mod.copy_page(self.cache, old, page)
-                    self.allocator.release(old)
-                    self._slot_pages[slot][lp] = page
-                    self.cow_count += 1
-                else:
-                    self._slot_pages[slot].append(page)
-                rows.append(slot)
-                cols.append(lp)
-            self.cache["block_table"] = self.cache["block_table"].at[
-                jnp.asarray(rows, jnp.int32), jnp.asarray(cols, jnp.int32)
-            ].set(jnp.asarray(pages, jnp.int32))
+            # The "compaction" phase times this host-side page-provisioning
+            # work (CoW copies + the block-table splice); the compaction
+            # arithmetic itself runs inside the jitted decode step.
+            with self._phase("compaction"):
+                pages = self.allocator.draw_many(len(events))
+                rows, cols = [], []
+                for (is_cow, slot, lp, old), page in zip(events, pages):
+                    self._slot_reserved[slot] -= 1
+                    if is_cow:
+                        self.cache = cache_mod.copy_page(self.cache, old,
+                                                         page)
+                        self.allocator.release(old)
+                        self._slot_pages[slot][lp] = page
+                        self.cow_count += 1
+                    else:
+                        self._slot_pages[slot].append(page)
+                    rows.append(slot)
+                    cols.append(lp)
+                self.cache["block_table"] = self.cache["block_table"].at[
+                    jnp.asarray(rows, jnp.int32),
+                    jnp.asarray(cols, jnp.int32)
+                ].set(jnp.asarray(pages, jnp.int32))
         if self.debug_invariants:
             import numpy as np
 
@@ -1292,7 +1427,11 @@ class Scheduler:
         """Sample the prefill's own output token; returns True if the slot
         is now actively decoding (False: finished on the prefill token)."""
         req.first_token_step = self.step_count
+        if self.tracer is not None:
+            self.tracer.instant("first_token", tid=self.tracer_tid,
+                                uid=req.uid, slot=slot)
         tok = self._sample_one(lg, req)
+        self._c_tokens.inc()
         if self._record(req, tok, lg):
             self._release_pages(slot)
             return False
@@ -1391,6 +1530,12 @@ class Scheduler:
                             # baseline in BENCH_preemption.json)
                             self.waiting.popleft()
                             req.rejected = True
+                            if self.tracer is not None:
+                                self.tracer.instant("reject",
+                                                    tid=self.tracer_tid,
+                                                    uid=req.uid)
+                                self.tracer.async_end("req", req.uid,
+                                                      tid=self.tracer_tid)
                             self.rejected.append(req)
                             continue
                         break        # wait for a retirement to free pages
@@ -1411,6 +1556,10 @@ class Scheduler:
                         self.prefix.misses += 1
                 req.shared_prefix_tokens = shared_tokens
             req.prefill_step = self.step_count
+            self._c_admitted.inc()
+            if self.tracer is not None:
+                self.tracer.instant("admit", tid=self.tracer_tid,
+                                    uid=req.uid, slot=slot)
             if self._can_chunk:
                 # CHUNKED admission: reserve the slot + pages now, run the
                 # forward in prefill_chunk-token slices between decode
@@ -1493,6 +1642,10 @@ class Scheduler:
             pend.done += n
             budget -= pend.chunk
             self._step_prefill_tokens += pend.chunk
+            if self.tracer is not None:
+                self.tracer.instant("chunk", tid=self.tracer_tid,
+                                    uid=pend.req.uid, done=pend.done,
+                                    total=T)
             if pend.done >= T:
                 del self._pending[slot]
                 self._complete_prefill(slot, pend)
@@ -1557,6 +1710,10 @@ class Scheduler:
                 pend.done += n
                 budget -= C
                 self._step_prefill_tokens += C
+                if self.tracer is not None:
+                    self.tracer.instant("chunk", tid=self.tracer_tid,
+                                        uid=pend.req.uid, done=pend.done,
+                                        total=len(pend.tokens))
                 if pend.done >= len(pend.tokens):
                     del self._pending[slot]
                     pend.carry = jax.tree_util.tree_map(
@@ -1586,11 +1743,22 @@ class Scheduler:
     # ------------------------------------------------------------------
     def step(self) -> None:
         """One engine iteration: admit → prefill chunks → batched decode →
-        sample/retire."""
+        sample/retire. Each phase is timed into its ``step/<name>_s``
+        histogram (and traced as a B/E span when a tracer is attached) at
+        the host boundaries that already exist — no added device syncs;
+        ``trace_sync=True`` blocks on the decode output for accurate
+        per-phase device attribution."""
+        with self._phase("step"):
+            self._step_inner()
+        self.step_count += 1
+
+    def _step_inner(self) -> None:
         self._step_prefill_tokens = 0     # this step's prefill compute:
-        self._admit()                     # one-shot fallbacks count too
+        with self._phase("admit"):        # one-shot fallbacks count too
+            self._admit()
         if self._pending:
-            self._run_prefill_chunks()
+            with self._phase("prefill"):
+                self._run_prefill_chunks()
         if self.prefill_chunk is not None:
             self.prefill_token_total += self._step_prefill_tokens
             self.max_prefill_step_tokens = max(self.max_prefill_step_tokens,
@@ -1599,10 +1767,15 @@ class Scheduler:
         active_flags = [s is not None for s in self.slots]
         if any(active_flags):
             if self.paged:
-                self._provision_pages(active_flags)
+                with self._phase("provision"):
+                    self._provision_pages(active_flags)
             active = jnp.asarray(active_flags)
-            logits, self.cache = self._decode(self.params, self.next_tokens,
-                                              self.cache, active=active)
+            with self._phase("decode"):
+                logits, self.cache = self._decode(self.params,
+                                                  self.next_tokens,
+                                                  self.cache, active=active)
+                if self.trace_sync:
+                    jax.block_until_ready(logits)
             self.decode_steps += 1
             self.busy_slot_steps += sum(active_flags)
             if self.paged:
@@ -1610,24 +1783,25 @@ class Scheduler:
                 owned, shared = self.allocator.in_use_split
                 self.busy_owned_page_steps += owned
                 self.busy_shared_page_steps += shared
-            batch_toks = self._sample_batch(logits)
-            upd_slots, upd_toks = [], []
-            for slot, req in enumerate(self.slots):
-                if req is None:
-                    continue
-                tok = (int(batch_toks[slot]) if batch_toks is not None
-                       else self._sample_one(logits[slot], req))
-                if self._record(req, tok, logits[slot]):
-                    self.slots[slot] = None          # released for reuse
-                    self._release_pages(slot)
-                else:
-                    upd_slots.append(slot)
-                    upd_toks.append(tok)
-            if upd_slots:                            # one splice per step,
-                self.next_tokens = self.next_tokens.at[   # not per slot
-                    jnp.asarray(upd_slots, jnp.int32)].set(
-                    jnp.asarray(upd_toks, jnp.int32))
-        self.step_count += 1
+            with self._phase("sample"):
+                batch_toks = self._sample_batch(logits)
+                upd_slots, upd_toks = [], []
+                for slot, req in enumerate(self.slots):
+                    if req is None:
+                        continue
+                    tok = (int(batch_toks[slot]) if batch_toks is not None
+                           else self._sample_one(logits[slot], req))
+                    self._c_tokens.inc()
+                    if self._record(req, tok, logits[slot]):
+                        self.slots[slot] = None      # released for reuse
+                        self._release_pages(slot)
+                    else:
+                        upd_slots.append(slot)
+                        upd_toks.append(tok)
+                if upd_slots:                        # one splice per step,
+                    self.next_tokens = self.next_tokens.at[   # not per slot
+                        jnp.asarray(upd_slots, jnp.int32)].set(
+                        jnp.asarray(upd_toks, jnp.int32))
 
     def run(self, max_steps: int = 1 << 20) -> List[Request]:
         """Drive until the queue and all slots drain; returns finished."""

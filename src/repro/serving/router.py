@@ -62,6 +62,7 @@ class Router:
                  n_pages: Optional[int] = None,
                  meshes: Optional[List[Any]] = None,
                  policy: str = "pack",
+                 tracer=None,
                  **sched_kwargs):
         if n_engines < 1:
             raise ValueError(f"n_engines={n_engines} must be >= 1")
@@ -72,6 +73,14 @@ class Router:
             raise ValueError(f"unknown routing policy {policy!r}")
         if meshes is not None and len(meshes) != n_engines:
             raise ValueError("meshes must list one mesh per engine")
+        if "registry" in sched_kwargs:
+            # one registry across replicas would collide: callback gauges
+            # (pool.*, spool.*) bind to ONE engine's allocator/spool and
+            # get-or-create would silently keep the first binding. Each
+            # engine keeps its own registry; stats() aggregates them.
+            raise ValueError(
+                "Router does not accept a shared registry= — each engine "
+                "owns one; read fleet totals via Router.stats()")
         self.cfg = cfg
         self.policy = policy
         self.n_engines = n_engines
@@ -83,6 +92,7 @@ class Router:
                       max_total_tokens=max_total_tokens, seed=seed + i,
                       n_pages=page_split[i],
                       mesh=(meshes[i] if meshes is not None else None),
+                      tracer=tracer, tracer_tid=i,
                       **sched_kwargs)
             for i in range(n_engines)]
         self.step_count = 0
@@ -226,6 +236,24 @@ class Router:
             page_den = sum(e.decode_steps * e.n_pages for e in self.engines)
             pages = page_num / max(1, page_den)
         return Occupancy(slot_num / max(1, slot_den), pages)
+
+    def stats(self) -> Dict[str, Any]:
+        """Fleet-level registry snapshot: per-replica registries folded
+        into one (counters/gauges sum, fixed-bucket histograms merge
+        exactly — see ``MetricsRegistry.aggregate``), plus the fleet
+        ``occupancy`` ratios and a compact per-engine summary. The same
+        metric names as ``Scheduler.stats()``, so dashboards/BENCH JSONs
+        read identically for one engine or sixteen."""
+        from repro.obs.metrics import MetricsRegistry
+        agg = MetricsRegistry.aggregate([e.obs for e in self.engines])
+        snap = agg.snapshot()
+        snap["occupancy"] = dict(self.occupancy._asdict())
+        snap["per_engine"] = [
+            {"steps": e.step_count, "decode_steps": e.decode_steps,
+             "finished": len(e.finished), "waiting": len(e.waiting),
+             "preempted": len(e._preempted)}
+            for e in self.engines]
+        return snap
 
     @property
     def pages_in_use(self) -> int:

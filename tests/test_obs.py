@@ -1,0 +1,331 @@
+"""repro.obs unit + integration tests: histogram/percentile math, lazy
+metrics, registry snapshots and aggregation, Chrome-trace validation, the
+roofline drift auditor on a live Scheduler run, Router.stats() fleet
+aggregation, and the artifact validator the CI obs-smoke job runs."""
+import json
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.obs import (Counter, EventTracer, Gauge, Histogram,
+                       MetricsRegistry, NullRegistry, TIME_BUCKETS_S,
+                       format_stats_line, validate_chrome_trace)
+
+KEY = jax.random.PRNGKey(0)
+CFG = get_config("starcoder2-3b").reduced().with_sparsity(0.5, 0.5)
+PARAMS = init_params(KEY, CFG)
+MAX_TOTAL = 96
+
+
+# ---------------------------------------------------------------- histogram
+
+def test_histogram_empty():
+    h = Histogram("t")
+    assert h.count == 0
+    assert h.percentile(50) is None
+    assert h.min is None and h.max is None and h.mean is None
+    assert h.summary()["p99"] is None
+    assert h.summary()["buckets"] == []
+
+
+def test_histogram_one_sample_exact():
+    h = Histogram("t")
+    h.observe(3.7e-3)
+    # the [min, max] clamp collapses every percentile onto the sample
+    for q in (0, 50, 90, 99, 100):
+        assert h.percentile(q) == pytest.approx(3.7e-3)
+    assert h.mean == pytest.approx(3.7e-3)
+
+
+def test_histogram_known_distribution():
+    h = Histogram("t")
+    vals = [1e-6 * (i + 1) for i in range(100)]       # 1..100 µs uniform
+    for v in vals:
+        h.observe(v)
+    assert h.count == 100
+    assert h.total == pytest.approx(sum(vals))
+    # p50's bucket upper bound must sit within a quarter-decade of the
+    # true median, and every estimate stays inside the observed range
+    for q in (50, 90, 99):
+        est = h.percentile(q)
+        true = float(np.percentile(vals, q))
+        assert h.min <= est <= h.max
+        assert est >= true * 0.99                      # upper-bound estimate
+        assert est <= true * 10 ** 0.25 * 1.01
+    assert h.percentile(100) == h.max
+
+
+def test_histogram_overflow_bucket():
+    h = Histogram("t")
+    h.observe(1e9)                                     # above every bound
+    assert h.counts[-1] == 1
+    assert h.percentile(99) == pytest.approx(1e9)      # clamped to max
+
+
+def test_histogram_bad_bounds_and_q():
+    with pytest.raises(ValueError, match="ascending"):
+        Histogram("t", bounds=(1.0, 1.0, 2.0))
+    h = Histogram("t")
+    h.observe(1.0)
+    with pytest.raises(ValueError, match="outside"):
+        h.percentile(101)
+
+
+def test_histogram_merge_exact():
+    a, b = Histogram("t"), Histogram("t")
+    for v in (1e-5, 2e-4, 3e-3):
+        a.observe(v)
+    for v in (5e-6, 7e-2):
+        b.observe(v)
+    a.merge(b)
+    assert a.count == 5
+    assert a.total == pytest.approx(1e-5 + 2e-4 + 3e-3 + 5e-6 + 7e-2)
+    assert a.min == pytest.approx(5e-6)
+    assert a.max == pytest.approx(7e-2)
+    # merged counts equal a histogram fed the union stream
+    u = Histogram("t")
+    for v in (1e-5, 2e-4, 3e-3, 5e-6, 7e-2):
+        u.observe(v)
+    assert a.counts == u.counts
+    assert a.percentile(50) == u.percentile(50)
+
+
+def test_histogram_merge_mismatched_bounds_raises():
+    a = Histogram("t")
+    b = Histogram("t", bounds=(1.0, 2.0))
+    with pytest.raises(ValueError, match="bounds differ"):
+        a.merge(b)
+
+
+def test_time_buckets_cover_serving_range():
+    assert TIME_BUCKETS_S[0] == pytest.approx(1e-6)
+    assert TIME_BUCKETS_S[-1] == pytest.approx(100.0)
+    assert all(b < c for b, c in zip(TIME_BUCKETS_S, TIME_BUCKETS_S[1:]))
+
+
+# ----------------------------------------------------- counters and gauges
+
+def test_lazy_counter_reads_callback_and_rejects_inc():
+    box = {"n": 3}
+    c = Counter("c", fn=lambda: box["n"])
+    assert c.value == 3
+    box["n"] = 9
+    assert c.value == 9                    # live view, not a copy
+    with pytest.raises(RuntimeError, match="lazy"):
+        c.inc()
+    d = Counter("d")
+    d.inc()
+    d.inc(4)
+    assert d.value == 5
+
+
+def test_callback_gauge_rejects_set():
+    g = Gauge("g", fn=lambda: 7)
+    assert g.value == 7
+    with pytest.raises(RuntimeError):
+        g.set(1)
+
+
+# ----------------------------------------------------------------- registry
+
+def test_registry_get_or_create_and_snapshot_json():
+    reg = MetricsRegistry()
+    assert reg.counter("a") is reg.counter("a")
+    assert reg.histogram("h") is reg.histogram("h")
+    reg.counter("a").inc(2)
+    reg.gauge("g").set(1.5)
+    reg.histogram("h").observe(1e-3)
+    snap = reg.snapshot()
+    json.dumps(snap)                       # JSON-serializable end to end
+    assert snap["counters"]["a"] == 2
+    assert snap["gauges"]["g"] == 1.5
+    assert snap["histograms"]["h"]["count"] == 1
+
+
+def test_registry_aggregate_sums_and_merges():
+    regs = []
+    for k in range(3):
+        r = MetricsRegistry()
+        r.counter("c").inc(k + 1)
+        r.gauge("g", fn=lambda k=k: k)     # callback gauges sum by value
+        r.histogram("h").observe(1e-4 * (k + 1))
+        regs.append(r)
+    regs.append(NullRegistry())            # skipped, not an error
+    agg = MetricsRegistry.aggregate(regs)
+    assert agg.counter("c").value == 6
+    assert agg.gauge("g").value == 0 + 1 + 2
+    assert agg.histogram("h").count == 3
+
+
+def test_null_registry_is_inert():
+    reg = NullRegistry()
+    c = reg.counter("x")
+    c.inc(100)
+    reg.histogram("h").observe(1.0)
+    assert c.value == 0
+    assert reg.snapshot() == {"counters": {}, "gauges": {}, "histograms": {}}
+
+
+def test_format_stats_line():
+    reg = MetricsRegistry()
+    reg.counter("engine.steps").inc(12)
+    reg.counter("engine.tokens_sampled").inc(30)
+    reg.gauge("engine.slots_active").set(2)
+    reg.histogram("step/step_s").observe(2e-3)
+    line = format_stats_line(reg.snapshot(), prefix="#")
+    assert line.startswith("# step=12 tok=30 active=2")
+    assert "step_p50=" in line
+
+
+# ------------------------------------------------------------------- tracer
+
+def test_tracer_spans_instants_async_validate():
+    tr = EventTracer()
+    with tr.span("step", tid=1):
+        with tr.span("decode", tid=1):
+            tr.instant("first_token", tid=1, uid=0)
+    tr.async_begin("req", 0, prompt_tokens=4)
+    tr.async_end("req", 0)
+    counts = validate_chrome_trace(tr.events)
+    assert counts == {"events": 7, "spans": 2, "instants": 1, "async": 1}
+
+
+@pytest.mark.parametrize("events,msg", [
+    ([{"ph": "B", "ts": 0, "pid": 0, "tid": 0}], "missing 'name'"),
+    ([{"name": "x", "ph": "Q", "ts": 0, "pid": 0, "tid": 0}], "unknown ph"),
+    ([{"name": "x", "ph": "i", "ts": -1, "pid": 0, "tid": 0}], "bad ts"),
+    ([{"name": "x", "ph": "i", "ts": 5, "pid": 0, "tid": 0},
+      {"name": "y", "ph": "i", "ts": 2, "pid": 0, "tid": 0}], "decreases"),
+    ([{"name": "x", "ph": "E", "ts": 0, "pid": 0, "tid": 0}], "no open B"),
+    ([{"name": "x", "ph": "B", "ts": 0, "pid": 0, "tid": 0},
+      {"name": "y", "ph": "E", "ts": 1, "pid": 0, "tid": 0}], "closes B"),
+    ([{"name": "x", "ph": "B", "ts": 0, "pid": 0, "tid": 0}], "unclosed B"),
+    ([{"name": "x", "ph": "b", "ts": 0, "pid": 0, "tid": 0}], "missing id"),
+    ([{"name": "x", "ph": "e", "ts": 0, "pid": 0, "tid": 0, "id": 1}],
+     "no open begin"),
+    ([{"name": "x", "ph": "b", "ts": 0, "pid": 0, "tid": 0, "id": 1}],
+     "unclosed async"),
+])
+def test_validate_chrome_trace_rejects(events, msg):
+    with pytest.raises(ValueError, match=msg):
+        validate_chrome_trace(events)
+
+
+def test_tracer_export_round_trip(tmp_path):
+    from repro.obs.trace import load_trace
+    tr = EventTracer()
+    with tr.span("step"):
+        pass
+    path = str(tmp_path / "trace.json")
+    assert tr.export(path) == 2
+    events = load_trace(path)
+    assert validate_chrome_trace(events)["spans"] == 1
+    # bare-array form also loads
+    with open(path, "w") as f:
+        json.dump(events, f)
+    assert load_trace(path) == events
+
+
+# ------------------------------------------- live scheduler: stats + drift
+
+def _serve(n_requests=3, **kw):
+    from repro.serving.engine import Request, Scheduler
+    rng = np.random.default_rng(0)
+    sched = Scheduler(CFG, PARAMS, n_slots=2, max_total_tokens=MAX_TOTAL,
+                      page_tokens=CFG.mustafar.tile_tokens, **kw)
+    for _ in range(n_requests):
+        sched.submit(Request(
+            prompt=rng.integers(0, CFG.vocab_size, size=9),
+            max_new_tokens=4))
+    sched.run(max_steps=2000)
+    return sched
+
+
+def test_scheduler_stats_and_drift():
+    tr = EventTracer()
+    sched = _serve(tracer=tr)
+    st = sched.stats()
+    json.dumps(st)
+    assert st["counters"]["engine.finished"] == 3
+    assert st["counters"]["engine.tokens_sampled"] \
+        == sum(len(r.output_tokens) for r in sched.finished)
+    assert st["histograms"]["step/step_s"]["count"] == sched.step_count
+    assert st["gauges"]["pool.pages_in_use"] == 0       # drained
+    assert isinstance(st["occupancy"], dict) and "slots" in st["occupancy"]
+    validate_chrome_trace(tr.events)
+
+    from repro.obs.drift import roofline_drift
+    drift = roofline_drift(sched)
+    json.dumps(drift)
+    dec = drift["decode_step"]
+    assert dec["decode_steps"] > 0
+    assert math.isfinite(dec["drift_ratio"]) and dec["drift_ratio"] > 0
+    assert dec["modeled_bytes"] > dec["modeled_metadata_bytes"] > 0
+    # no swap traffic moved: exact agreement, not inf/NaN
+    assert drift["swap_bytes_out"]["ratio"] == 1.0
+    assert drift["swap_bytes_in"]["ratio"] == 1.0
+
+
+def test_decode_step_model_dense_vs_mustafar():
+    from repro.obs.drift import decode_step_model
+    sparse = decode_step_model(CFG, 2, MAX_TOTAL)
+    import dataclasses
+    dense_cfg = dataclasses.replace(
+        CFG, mustafar=dataclasses.replace(CFG.mustafar, enabled=False))
+    dense = decode_step_model(dense_cfg, 2, MAX_TOTAL)
+    assert sparse["cache_bytes"] < dense["cache_bytes"]
+    assert sparse["seconds"] > 0
+
+
+def test_validate_metrics_artifact(tmp_path):
+    from repro.obs.drift import roofline_drift
+    from repro.obs.validate import main, validate_metrics
+    tr = EventTracer()
+    sched = _serve(tracer=tr)
+    trace_path = str(tmp_path / "trace.json")
+    tr.export(trace_path)
+    blob = {"stats": sched.stats(), "roofline_drift": roofline_drift(sched)}
+    mpath = str(tmp_path / "metrics.json")
+    with open(mpath, "w") as f:
+        json.dump(blob, f)
+    assert main([trace_path, "--metrics", mpath,
+                 "--max-decode-drift", "1e12"]) == 0
+    # a broken swap ratio must be caught
+    bad = json.loads(json.dumps(blob))
+    bad["roofline_drift"]["swap_bytes_out"]["ratio"] = 1.5
+    with pytest.raises(ValueError, match="swap_bytes_out"):
+        validate_metrics(bad, 1e-3, 1e12)
+    bad2 = json.loads(json.dumps(blob))
+    del bad2["stats"]["histograms"]["step/decode_s"]
+    with pytest.raises(ValueError, match="decode_s"):
+        validate_metrics(bad2, 1e-3, 1e12)
+
+
+def test_router_stats_aggregates_fleet():
+    from repro.serving.engine import Request
+    from repro.serving.router import Router
+    rng = np.random.default_rng(1)
+    router = Router(CFG, PARAMS, n_engines=2, n_slots=4,
+                    max_total_tokens=MAX_TOTAL,
+                    page_tokens=CFG.mustafar.tile_tokens)
+    for _ in range(4):
+        router.submit(Request(
+            prompt=rng.integers(0, CFG.vocab_size, size=9),
+            max_new_tokens=3))
+    router.run()
+    st = router.stats()
+    json.dumps(st)
+    assert st["counters"]["engine.finished"] == 4
+    assert st["counters"]["engine.finished"] \
+        == sum(len(e.finished) for e in router.engines)
+    # merged histogram count == sum over replicas (exact merge)
+    assert st["histograms"]["step/step_s"]["count"] \
+        == sum(e.obs.histogram("step/step_s").count for e in router.engines)
+    assert len(st["per_engine"]) == 2
+    with pytest.raises(ValueError, match="registry"):
+        Router(CFG, PARAMS, n_engines=2, n_slots=4,
+               max_total_tokens=MAX_TOTAL, registry=MetricsRegistry())

@@ -385,6 +385,52 @@ def test_zero_max_new_tokens_budget_covers_prefill():
     assert sched.allocator.n_reserved == 0
 
 
+@pytest.mark.parametrize("seed,share,chunk", [(21, False, None),
+                                              (22, True, 8)])
+def test_fuzz_instrumentation_changes_nothing(seed, share, chunk):
+    """Default-on telemetry is OBSERVATION only: the same seeded trace
+    served with the full instrumentation stack (metrics registry + event
+    tracer) and with it disabled (``NullRegistry``, no tracer) must
+    produce bit-identical output tokens AND identical allocator end
+    state — page accounting, peak, free list. The tracer's timeline must
+    also validate as Chrome trace-event JSON with every request closed."""
+    from repro.obs import EventTracer, NullRegistry, validate_chrome_trace
+
+    def run(registry, tracer):
+        arrivals, reqs = _make_trace(seed, 5,
+                                     prefix_len=40 if share else 0)
+        sched = Scheduler(CFG, PARAMS, n_slots=2,
+                          max_total_tokens=MAX_TOTAL, page_tokens=TT,
+                          share_prefix=share, prefill_chunk=chunk,
+                          registry=registry, tracer=tracer)
+        i = 0
+        while i < 5 or sched.has_work:
+            while i < 5 and arrivals[i] <= sched.step_count:
+                sched.submit(reqs[i])
+                i += 1
+            sched.step()
+            assert sched.step_count < 2000
+        return sched, reqs
+
+    tracer = EventTracer()
+    s_on, r_on = run(None, tracer)          # default registry, traced
+    s_off, r_off = run(NullRegistry(), None)
+    assert [r.output_tokens for r in r_on] \
+        == [r.output_tokens for r in r_off], "instrumentation moved tokens"
+    assert s_on.allocator.peak_in_use == s_off.allocator.peak_in_use
+    assert sorted(s_on.allocator._free) == sorted(s_off.allocator._free)
+    assert s_on.allocator.in_use == s_off.allocator.in_use
+    assert s_on.step_count == s_off.step_count
+    # the null path really recorded nothing; the live path really did
+    assert s_off.obs.snapshot() == {"counters": {}, "gauges": {},
+                                    "histograms": {}}
+    snap = s_on.obs.snapshot()
+    assert snap["counters"]["engine.finished"] == 5
+    assert snap["histograms"]["step/step_s"]["count"] == s_on.step_count
+    counts = validate_chrome_trace(tracer.events)
+    assert counts["async"] == 5              # every request span closed
+
+
 def test_heterogeneous_trace_page_bytes_beat_contiguous():
     """The paging payoff, asserted: on a heterogeneous-length trace the
     peak drawn-page bytes stay >= 20% below the contiguous per-slot pool
