@@ -96,6 +96,67 @@ def _bench_overhaul(rng) -> None:
          hbm_bytes=by_ragged, hbm_bytes_no_skip=by_full)
 
 
+def dispatch_overhead_main(rng=None) -> int:
+    """Calibrate ``roofline.TILE_OVERHEAD_BYTES`` from a measured dispatch.
+
+    The paged decode kernel pays a fixed per-grid-step cost (DMA issue +
+    scalar-prefetch index math) that ``auto_page_tokens`` models in
+    HBM-byte equivalents. This micro-benchmark measures it by DIFFERENCE:
+    the same compressed stream is decoded once as many small chunks and
+    once as one big chunk — identical bytes, different step counts — so
+
+        overhead_s    = (t_many - t_one) / (n_many - n_one)
+        overhead_bytes = overhead_s * HBM_BW          (819e9 on v5e)
+
+    and prints the ``REPRO_TILE_OVERHEAD_BYTES`` export to re-fit the
+    page-size model to THIS machine without editing source."""
+    import os
+
+    from repro.roofline import _tile_overhead_bytes
+
+    rng = rng or np.random.default_rng(7)
+    d, k, T = 128, 40, 2048
+    B, Hkv, Hq = 1, 4, 8
+    chunk_small, chunk_big = 128, T
+    x = jnp.asarray(rng.normal(size=(B, Hkv, T, d))).astype(jnp.bfloat16)
+    y = jnp.asarray(rng.normal(size=(B, Hkv, T, d))).astype(jnp.bfloat16)
+    ckv, ckb = pack_fixedk(x, topk_mask(x, k), k)
+    cvv, cvb = pack_fixedk(y, topk_mask(y, k), k)
+    W = 8
+    view = MustafarCacheView(ckv, ckb, cvv, cvb, jnp.full((B,), T),
+                             x[:, :, :W + 16, :], y[:, :, :W + 16, :],
+                             jnp.full((B,), W))
+    q = jnp.asarray(rng.normal(size=(B, Hq, d))).astype(jnp.bfloat16)
+    f_many = jax.jit(partial(decode_attention_mustafar_chunked,
+                             chunk=chunk_small))
+    f_one = jax.jit(partial(decode_attention_mustafar_chunked,
+                            chunk=chunk_big))
+    us_many = time_fn(f_many, q, view, iters=9)
+    us_one = time_fn(f_one, q, view, iters=9)
+    n_many, n_one = T // chunk_small, T // chunk_big
+    raw_s = (us_many - us_one) * 1e-6 / (n_many - n_one)
+    per_step_s = max(0.0, raw_s)
+    if raw_s <= 0:
+        print("# NOTE: negative/zero difference — no measurable per-step "
+              "cost on this backend (typical off-TPU, where there is no "
+              "DMA issue to pay); calibrate on the serving target")
+    suggested = int(round(per_step_s * HBM_BW))
+    current = _tile_overhead_bytes()
+    emit("kernels/dispatch_overhead", per_step_s * 1e6,
+         f"suggested_tile_overhead_bytes={suggested} (current {current})",
+         suggested_tile_overhead_bytes=suggested,
+         current_tile_overhead_bytes=current,
+         chunk_steps=(n_many, n_one))
+    print(f"# per-step dispatch overhead: {per_step_s*1e6:.1f} us "
+          f"({n_many} vs {n_one} chunks over T={T})")
+    print(f"# suggested calibration (overhead_s * {HBM_BW:.0f} B/s):")
+    print(f"export REPRO_TILE_OVERHEAD_BYTES={suggested}")
+    if os.environ.get("REPRO_TILE_OVERHEAD_BYTES"):
+        print("# (env override currently active: "
+              f"{os.environ['REPRO_TILE_OVERHEAD_BYTES']})")
+    return suggested
+
+
 def main(rng=None) -> None:
     rng = rng or np.random.default_rng(2)
     _bench_overhaul(rng)
@@ -156,4 +217,15 @@ def main(rng=None) -> None:
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dispatch-overhead", action="store_true",
+                    help="measure the per-grid-step kernel dispatch cost "
+                         "and print the suggested "
+                         "REPRO_TILE_OVERHEAD_BYTES calibration")
+    args = ap.parse_args()
+    if args.dispatch_overhead:
+        dispatch_overhead_main()
+    else:
+        main()

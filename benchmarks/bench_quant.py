@@ -1,0 +1,194 @@
+"""BENCH_quant: int8 quantized sparse pools vs bf16 (PR 10).
+
+Decode is memory-bound, so halving the compressed-VALUE bytes is the whole
+point of ``pool_dtype="int8"``. This suite sweeps (sparsity x pool_dtype)
+and reports, per combo:
+
+  * accuracy proxy — mean squared error of the greedy decode logits vs an
+    UNCOMPRESSED (mustafar-disabled) run of the same prompt. Pruning
+    dominates this error; int8-on-top must add almost nothing (the
+    per-tile symmetric absmax scale tracks the fake-quant oracle exactly);
+  * pool bytes — ``pool_value_bytes`` (packed values + scale leaves, the
+    component the dtype actually changes) and the total compressed-cache
+    bytes from ``cache_hbm_bytes``;
+  * measured steady-state decode tokens/sec through the live paged
+    Scheduler on a seeded trace (jit warmup drained before the clock);
+  * the decode roofline drift ratio (must be FINITE — accounting that
+    forgot the scale leaves or mis-sized int8 pools shows up here).
+
+Gates (asserted, also run as the CI ``quant-smoke`` job):
+  * int8 and bf16 produce IDENTICAL sampled outputs on the trace;
+  * int8 value-pool bytes <= 0.55x bf16 (0.5x + per-tile scales);
+  * int8 tokens/sec >= 0.9x bf16 (the dequant is one fused multiply on
+    the read path; it must not eat the byte savings).
+
+``smoke=True`` (CI) serves a shorter trace at one sparsity.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import replace
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.serving.cache import cache_hbm_bytes, pool_value_bytes
+
+ARCH = "starcoder2-3b"
+N_SLOTS = 2
+MAX_TOTAL = 96
+
+
+def _cfg(sparsity: float, pool_dtype: str):
+    cfg = get_config(ARCH).reduced().with_sparsity(sparsity, sparsity)
+    return replace(cfg, mustafar=replace(cfg.mustafar,
+                                         pool_dtype=pool_dtype))
+
+
+def _dense_logit_trace(params, cfg, prompt, n_new):
+    """Greedy decode logits under ``cfg`` (list of [V] arrays). The token
+    fed at each step comes from THIS run's own argmax."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.serving.engine import decode_step, prefill
+
+    lg, cache = prefill(params, jnp.asarray(prompt, jnp.int32)[None], cfg,
+                        max_total_tokens=MAX_TOTAL)
+    logits = [np.asarray(lg[0], np.float32)]
+    step = jax.jit(lambda p, t, c: decode_step(p, t, c, cfg))
+    tok = int(jnp.argmax(lg[0]))
+    while len(logits) < n_new:
+        lg, cache = step(params, jnp.asarray([tok], jnp.int32), cache)
+        logits.append(np.asarray(lg[0], np.float32))
+        tok = int(jnp.argmax(lg[0]))
+    return logits
+
+
+def _serve(cfg, params, page_tokens, trace_fn):
+    """Warmed, timed Scheduler run -> (finished requests, tok/s, drift)."""
+    from repro.obs.drift import roofline_drift
+    from repro.serving.engine import Request, Scheduler
+
+    sched = Scheduler(cfg, params, n_slots=N_SLOTS,
+                      max_total_tokens=MAX_TOTAL, page_tokens=page_tokens,
+                      fused_compaction=True)
+    wr = np.random.default_rng(77)
+    for L in (16, 24):                    # compile both prefill shapes
+        sched.submit(Request(prompt=wr.integers(0, cfg.vocab_size, size=L),
+                             max_new_tokens=2))
+    while sched.has_work:
+        sched.step()
+    n_warm = len(sched.finished)
+    arrivals, reqs = trace_fn()
+    base = sched.step_count
+    t0 = time.perf_counter()
+    i = 0
+    while i < len(reqs) or sched.has_work:
+        while i < len(reqs) and arrivals[i] + base <= sched.step_count:
+            sched.submit(reqs[i])
+            i += 1
+        sched.step()
+    dt = time.perf_counter() - t0
+    timed = sched.finished[n_warm:]
+    toks = sum(r.num_generated for r in timed)
+    return timed, toks / dt, roofline_drift(sched)
+
+
+def main(rng=None, smoke: bool = False) -> dict:
+    rng = rng or np.random.default_rng(0)
+    sparsities = (0.5,) if smoke else (0.5, 0.7)
+    n_requests = 4 if smoke else 8
+    gen = 8 if smoke else 16
+    n_logit_steps = 6 if smoke else 12
+    prompt_len = 40
+
+    import jax
+
+    from repro.models import init_params
+    from repro.serving.engine import Request
+
+    results = {}
+    for s in sparsities:
+        cfg_b = _cfg(s, "bf16")
+        cfg_q = _cfg(s, "int8")
+        params = init_params(jax.random.PRNGKey(0), cfg_b)
+        page_tokens = cfg_b.mustafar.tile_tokens
+
+        def trace():
+            r = np.random.default_rng(42)
+            arrivals = np.cumsum(r.exponential(1.0, size=n_requests)
+                                 ).astype(int)
+            lens = r.choice((16, 24), size=n_requests)
+            reqs = [Request(prompt=r.integers(0, cfg_b.vocab_size,
+                                              size=int(L)),
+                            max_new_tokens=gen) for L in lens]
+            return arrivals, reqs
+
+        # accuracy proxy: logit MSE vs the uncompressed cache
+        prompt = [int(t) for t in rng.integers(0, cfg_b.vocab_size,
+                                               size=prompt_len)]
+        cfg_d = replace(cfg_b, mustafar=replace(cfg_b.mustafar,
+                                                enabled=False))
+        lg_dense = _dense_logit_trace(params, cfg_d, prompt, n_logit_steps)
+        mse = {}
+        for tag, cfg in (("bf16", cfg_b), ("int8", cfg_q)):
+            lg = _dense_logit_trace(params, cfg, prompt, n_logit_steps)
+            mse[tag] = float(np.mean([np.mean((a - b) ** 2)
+                                      for a, b in zip(lg, lg_dense)]))
+
+        # live serving: same trace under both pool dtypes
+        per = {}
+        for tag, cfg in (("bf16", cfg_b), ("int8", cfg_q)):
+            timed, tps, drift = _serve(cfg, params, page_tokens, trace)
+            ratio = drift["decode_step"]["drift_ratio"]
+            assert ratio is not None and np.isfinite(ratio), \
+                f"{tag} s={s}: decode drift ratio {ratio!r} not finite"
+            pool_by = pool_value_bytes(cfg, MAX_TOTAL)
+            total_by = cache_hbm_bytes(cfg, N_SLOTS, MAX_TOTAL)["mustafar"]
+            per[tag] = {"timed": timed, "tps": tps, "pool_bytes": pool_by,
+                        "drift": ratio}
+            emit(f"quant/s{s}/{tag}", 1e6 / max(tps, 1e-9),
+                 f"tokens_per_s={tps:.1f} pool_bytes={pool_by} "
+                 f"logit_mse={mse[tag]:.3e} drift={ratio:.3g}",
+                 tokens_per_s=tps, pool_value_bytes=pool_by,
+                 cache_hbm_bytes=total_by, logit_mse_vs_dense=mse[tag],
+                 roofline_drift=ratio)
+
+        # -------- gates --------
+        outs_b = [r.output_tokens for r in per["bf16"]["timed"]]
+        outs_q = [r.output_tokens for r in per["int8"]["timed"]]
+        assert outs_b == outs_q, \
+            f"s={s}: int8 changed sampled outputs"
+        byte_ratio = per["int8"]["pool_bytes"] / per["bf16"]["pool_bytes"]
+        assert byte_ratio <= 0.55, \
+            f"s={s}: int8 pool bytes {byte_ratio:.3f}x bf16 (bar 0.55x)"
+        tps_ratio = per["int8"]["tps"] / per["bf16"]["tps"]
+        assert tps_ratio >= 0.9, \
+            f"s={s}: int8 {tps_ratio:.2f}x bf16 tokens/s (bar 0.9x)"
+        emit(f"quant/s{s}/gates", 0.0,
+             f"pool_bytes={byte_ratio:.3f}x tok_s={tps_ratio:.2f}x "
+             f"outputs_equal=True mse_excess="
+             f"{mse['int8'] - mse['bf16']:+.3e}",
+             pool_bytes_ratio=byte_ratio, tokens_per_s_ratio=tps_ratio,
+             outputs_equal=True, logit_mse_bf16=mse["bf16"],
+             logit_mse_int8=mse["int8"])
+        results[s] = {"pool_bytes_ratio": byte_ratio,
+                      "tokens_per_s_ratio": tps_ratio,
+                      "logit_mse": mse}
+    return results
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    r = main(smoke=args.smoke)
+    for s, v in r.items():
+        print(f"# s={s}: pool_bytes {v['pool_bytes_ratio']:.3f}x, "
+              f"tok/s {v['tokens_per_s_ratio']:.2f}x, "
+              f"mse bf16={v['logit_mse']['bf16']:.3e} "
+              f"int8={v['logit_mse']['int8']:.3e}")

@@ -13,7 +13,7 @@ import os
 import numpy as np
 
 from benchmarks import (bench_compression, bench_joint, bench_kernel,
-                        bench_pruning, bench_throughput, common)
+                        bench_pruning, bench_quant, bench_throughput, common)
 
 # suite key doubles as the BENCH_<key>.json filename stem
 SUITES = {
@@ -26,6 +26,7 @@ SUITES = {
     "prefix": bench_throughput.prefix_main,  # shared-prefix CoW + chunked
     "sharding": bench_throughput.sharding_main,  # KV-head shards + router
     "preemption": bench_throughput.preemption_main,  # swap-to-host tier
+    "quant": bench_quant.main,            # int8 vs bf16 pool storage
 }
 _ALIASES = {"kernel": "kernels"}          # pre-PR-2 suite name
 

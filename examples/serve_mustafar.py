@@ -21,6 +21,17 @@ from repro.serving.engine import Request, Scheduler
 
 
 OBS_EPILOG = """\
+quantized pools (--pool-dtype):
+
+  --pool-dtype int8 stores the compressed value pools as int8 with one
+    fp32 symmetric absmax scale per (page, head, tile_tokens tile) riding
+    in a sibling pool leaf — roughly halving compressed-value HBM bytes
+    on the memory-bound decode path. Bitmap planes, block tables, paging,
+    prefix sharing and preemption spooling are format-transparent (scales
+    ride in the page). The default bf16 keeps the exact PR 9 layout.
+    Accuracy: symmetric per-tile absmax on top-k magnitude-pruned values
+    (see benchmarks/bench_quant.py for the logit-MSE sweep).
+
 observability (repro.obs — default-on metrics, opt-in tracing):
 
   --metrics-json PATH writes the full telemetry snapshot after the drain:
@@ -76,6 +87,11 @@ def main():
     ap.add_argument("--dense", action="store_true",
                     help="disable Mustafar (dense-cache baseline)")
     ap.add_argument("--sparsity", type=float, default=0.7)
+    ap.add_argument("--pool-dtype", default="bf16",
+                    choices=("bf16", "int8"),
+                    help="storage width of the compressed value pools "
+                         "(int8 halves value bytes and adds per-tile fp32 "
+                         "scale leaves; see epilog)")
     ap.add_argument("--page-tokens", default="0",
                     help="paged compressed pools: tokens per page (multiple "
                          "of tile_tokens; 0 = contiguous per-slot pools; "
@@ -170,9 +186,14 @@ def main():
 
     cfg = get_config(args.arch).reduced()
     if args.dense:
+        if args.pool_dtype != "bf16":
+            ap.error("--pool-dtype quantizes the MUSTAFAR pools; "
+                     "drop --dense")
         cfg = replace(cfg, mustafar=replace(cfg.mustafar, enabled=False))
     else:
         cfg = cfg.with_sparsity(args.sparsity, args.sparsity)
+        cfg = replace(cfg, mustafar=replace(cfg.mustafar,
+                                            pool_dtype=args.pool_dtype))
     params = init_params(jax.random.PRNGKey(0), cfg)
     max_total = 64 + args.gen + 64 \
         + (args.prefix_len if args.share_prefix else 0)

@@ -25,6 +25,10 @@ class MustafarConfig:
     value_strategy: str = "per_token_magnitude"
     # k values are rounded to a multiple of this for lane alignment.
     k_align: int = 8
+    # storage dtype of the packed non-zero value pools: "bf16" (default) or
+    # "int8" (symmetric absmax per (head, tile_tokens) tile; a sibling fp32
+    # scale leaf rides beside each value pool — see serving.cache).
+    pool_dtype: str = "bf16"
 
     def keep_k(self, d_head: int, sparsity: float) -> int:
         """#nonzeros kept per token row, lane-aligned (fixed-k format)."""

@@ -18,7 +18,8 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.sparse_format import gather_pages, pad_to_words, unpack_fixedk
+from repro.core.sparse_format import (dequantize_fixedk, gather_pages,
+                                      pad_to_words, unpack_fixedk)
 
 NEG_INF = -1e30
 
@@ -38,6 +39,10 @@ class MustafarCacheView(NamedTuple):
     k_window: jax.Array       # [B, Hkv, W, d]
     v_window: jax.Array       # [B, Hkv, W, d]
     n_window: jax.Array       # [B] int32 — valid window tokens per row
+    # int8 pools only (pool_dtype="int8"): per-tile symmetric absmax fp32
+    # scales [B, Hkv, Tc//qt, 1]; None for bf16 pools (the PR 9 layout)
+    ck_scale: Optional[jax.Array] = None
+    cv_scale: Optional[jax.Array] = None
 
 
 class PagedMustafarCacheView(NamedTuple):
@@ -61,8 +66,15 @@ class PagedMustafarCacheView(NamedTuple):
     k_window: jax.Array       # [B, Hkv, W, d]
     v_window: jax.Array       # [B, Hkv, W, d]
     n_window: jax.Array       # [B] int32 — valid window tokens per row
+    # int8 pools only: scale pools [n_phys, Hkv, page_tokens//qt, 1] fp32 —
+    # scales ride IN the page (same block table); None for bf16 pools
+    ck_scale: Optional[jax.Array] = None
+    cv_scale: Optional[jax.Array] = None
 
     def to_contiguous(self) -> "MustafarCacheView":
+        # the scale pools' row axis counts TILES per page; gather_pages is
+        # agnostic to the row unit, so the gathered scale rows concatenate
+        # pagewise in the same order as the gathered value rows
         return MustafarCacheView(
             ck_values=gather_pages(self.ck_pool, self.block_table),
             ck_bitmap=gather_pages(self.ck_bitmap, self.block_table),
@@ -70,7 +82,11 @@ class PagedMustafarCacheView(NamedTuple):
             cv_bitmap=gather_pages(self.cv_bitmap, self.block_table),
             n_compressed=self.n_compressed,
             k_window=self.k_window, v_window=self.v_window,
-            n_window=self.n_window)
+            n_window=self.n_window,
+            ck_scale=None if self.ck_scale is None
+            else gather_pages(self.ck_scale, self.block_table),
+            cv_scale=None if self.cv_scale is None
+            else gather_pages(self.cv_scale, self.block_table))
 
 
 def _expand_gqa(x: jax.Array, n_q_heads: int) -> jax.Array:
@@ -101,9 +117,25 @@ def decode_attention_dense(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     return out.astype(q.dtype)
 
 
+def _dequantized(cache: MustafarCacheView) -> MustafarCacheView:
+    """Resolve int8 packed values to fp32 via the sibling scale leaves.
+
+    No-op for bf16 views (ck_scale is None). The jnp reference paths below
+    call this first, so everything downstream — unpack, einsum dtypes —
+    sees a plain float view; the Pallas kernels instead dequantize
+    in-register and never materialise the widened values."""
+    if cache.ck_scale is None:
+        return cache
+    return cache._replace(
+        ck_values=dequantize_fixedk(cache.ck_values, cache.ck_scale),
+        cv_values=dequantize_fixedk(cache.cv_values, cache.cv_scale),
+        ck_scale=None, cv_scale=None)
+
+
 def decode_attention_mustafar(q: jax.Array, cache: MustafarCacheView,
                               scale: Optional[float] = None) -> jax.Array:
     """Two-part decode attention over (compressed ⊕ window) with joint softmax."""
+    cache = _dequantized(cache)
     B, Hq, d = q.shape
     Tc = cache.ck_values.shape[2]
     W = cache.k_window.shape[2]
@@ -181,6 +213,7 @@ def decode_attention_mustafar_chunked(q: jax.Array, cache: MustafarCacheView,
     bounded by one chunk — this is the jnp mirror of the fused Pallas kernel
     and the production decode path.
     """
+    cache = _dequantized(cache)
     B, Hq, d = q.shape
     Tc = cache.ck_values.shape[2]
     scale = scale if scale is not None else d ** -0.5
@@ -246,7 +279,8 @@ def decode_attention_mustafar_kernelized(q: jax.Array, cache: MustafarCacheView,
     scale = scale if scale is not None else d ** -0.5
     _, acc, m, l = kops.decode_attention_fused(
         q, cache.ck_values, cache.ck_bitmap, cache.cv_values, cache.cv_bitmap,
-        cache.n_compressed, scale=scale, return_state=True)
+        cache.n_compressed, scale=scale, k_scale=cache.ck_scale,
+        v_scale=cache.cv_scale, return_state=True)
     # window part joins the same online softmax (shared chunked epilogue)
     return _merge_window(q, cache, scale, m, l, acc).astype(q.dtype)
 
@@ -268,6 +302,7 @@ def decode_attention_mustafar_kernelized_paged(
     _, acc, m, l = kops.decode_attention_fused_paged(
         q, cache.ck_pool, cache.ck_bitmap, cache.cv_pool, cache.cv_bitmap,
         cache.block_table, cache.n_compressed, scale=scale,
+        k_scale=cache.ck_scale, v_scale=cache.cv_scale,
         return_state=True)
     return _merge_window(q, cache, scale, m, l, acc).astype(q.dtype)
 
@@ -278,20 +313,26 @@ def hbm_bytes_dense(T: int, d: int, itemsize: int = 2) -> int:
 
 
 def hbm_bytes_mustafar(Tc: int, W: int, d: int, k_k: int, k_v: int,
-                       itemsize: int = 2) -> int:
+                       itemsize: int = 2, *,
+                       pool_itemsize: Optional[int] = None,
+                       quant_tile: Optional[int] = None) -> int:
     """Compressed K + V reads plus the dense window (paper Fig. 6a model).
 
-    ``itemsize`` is the PACKED-VALUE width — the pools store bf16
-    (itemsize=2, see ``serving.cache.POOL_DTYPE``) and the kernels compute
-    on bf16 directly (fp32 enters only at the MXU accumulators), so 2 is
-    both the storage and the streamed-bytes answer; an fp32 pool would
-    double the (k_k + k_v) term. Bitmap planes are stored as whole uint32
-    words, so a non-multiple-of-32 head dim (d=80: stablelm) reads
-    pad_to_words(d)/8 bytes per row, not d/8.
+    ``pool_itemsize`` is the PACKED-VALUE width (defaults to ``itemsize``,
+    the dense-window width): bf16 pools stream 2 bytes per non-zero, int8
+    pools (``pool_dtype="int8"``) stream 1 plus — when ``quant_tile`` is
+    given — one fp32 scale per quant tile per plane. The window stays in
+    the model dtype regardless of pool_dtype, which is why the two widths
+    are separate knobs (the seed conflated them). Bitmap planes are stored
+    as whole uint32 words, so a non-multiple-of-32 head dim (d=80:
+    stablelm) reads pad_to_words(d)/8 bytes per row, not d/8.
 
     ``Tc`` should be the row's VALID compressed depth, not the pool
     capacity: the fused kernel's scalar-prefetch grid never DMAs tiles past
     ``n_valid``, so a ragged row's bytes scale with its own fill.
     """
-    comp = Tc * ((k_k + k_v) * itemsize + 2 * (pad_to_words(d) // 8))
+    pool_itemsize = itemsize if pool_itemsize is None else pool_itemsize
+    comp = Tc * ((k_k + k_v) * pool_itemsize + 2 * (pad_to_words(d) // 8))
+    if quant_tile:
+        comp += 2 * (-(-Tc // quant_tile)) * 4      # K + V fp32 scale rows
     return comp + 2 * W * d * itemsize

@@ -1,4 +1,5 @@
-"""KIVI-style KV-cache quantization (paper §4.2.2 joint-application baseline).
+"""KIVI-style KV-cache quantization (paper §4.2.2 joint-application baseline)
+and the symmetric absmax oracle for the REAL int8 pools.
 
 KIVI: per-CHANNEL asymmetric quantization of the Key cache, per-TOKEN of the
 Value cache. We implement fake-quant (quantize→dequantize) since the accuracy
@@ -6,9 +7,15 @@ experiments in the paper were likewise run on a sparse-quantized cache ("the
 current Mustafar kernel does not support low-bit precision").
 
 Following Harma et al. (paper §4.2.2): prune FIRST, then quantize. With the
-fixed-k format only the packed non-zeros are quantized; scales/zeros are kept
-per group of 32.
-"""
+fixed-k format only the packed non-zeros are quantized.
+
+Since PR 10 the serving pools can actually STORE int8
+(``MustafarConfig(pool_dtype="int8")``): packed non-zeros are quantized by
+symmetric absmax per (head, ``tile_tokens``-token tile) with one fp32 scale
+per tile riding in a sibling pool leaf. ``symmetric_fake_quant`` below is the
+accuracy oracle for that path — the storage round-trip
+(``sparse_format.quantize_fixedk`` → ``dequantize_fixedk``) must reproduce it
+to fp32 tolerance (tests/test_joint_compression.py)."""
 from __future__ import annotations
 
 import jax
@@ -53,6 +60,30 @@ def kivi_quantize_value(v_cache: jax.Array, bits: int = 4, group: int = 32) -> j
     return _asym_quant(v_cache, bits, axis=-1, group=group).astype(v_cache.dtype)
 
 
-def quant_bytes_per_token(d: int, bits: int, group: int = 32) -> float:
-    """Storage model: packed ints + fp16 scale/zero per group."""
-    return d * bits / 8 + (d / group) * 4
+def symmetric_fake_quant(vals: jax.Array, tile: int) -> jax.Array:
+    """Quantize→dequantize oracle for the shipped int8 pool layout.
+
+    ``vals`` [..., T, k] are packed non-zeros; one symmetric absmax scale is
+    taken per (leading dims, ``tile``-token tile) — the whole [tile, k] block
+    shares a scalar, exactly the granularity of the pools' sibling scale
+    leaves. fp32 math, round-half-to-even, zero-blocks quantize to zeros.
+    ``T`` must be a multiple of ``tile``."""
+    x = vals.astype(jnp.float32)
+    T = x.shape[-2]
+    assert T % tile == 0, (T, tile)
+    xt = x.reshape(x.shape[:-2] + (T // tile, tile * x.shape[-1]))
+    # reciprocal multiply (not /127.0) — matches the kernel and the storage
+    # round-trip bit-for-bit across XLA lowerings (see quantize_fixedk)
+    scale = jnp.max(jnp.abs(xt), axis=-1, keepdims=True) \
+        * jnp.float32(1.0 / 127.0)
+    scale = jnp.where(scale == 0.0, 1.0, scale)
+    q = jnp.clip(jnp.round(xt / scale), -127, 127)
+    return (q * scale).reshape(x.shape)
+
+
+def quant_bytes_per_token(d: int, bits: int, tile_tokens: int = 64) -> float:
+    """Storage model for the SHIPPED layout: packed symmetric ints + one fp32
+    absmax scale per ``tile_tokens``-token tile (amortized per token). This
+    replaced the seed model (per-group-of-32 asymmetric fp16 scale+zero),
+    which described a layout nothing ever stored."""
+    return d * bits / 8 + 4.0 / tile_tokens

@@ -97,6 +97,51 @@ def prune_and_pack(x: jax.Array, k: int):
 
 
 # ----------------------------------------------------------------------
+# int8 quantized storage (PR 10): packed non-zeros stored int8 under the
+# UNCHANGED bitmap plane, with one symmetric absmax fp32 scale per
+# (leading dims, ``tile``-token tile). These two functions are the
+# canonical storage round-trip; ``core.quantization.symmetric_fake_quant``
+# is the independent oracle they must match to fp32 tolerance.
+
+def quantize_fixedk(values: jax.Array, tile: int):
+    """[..., T, k] float packed values -> (int8 [..., T, k],
+    fp32 scales [..., T//tile, 1]).
+
+    Symmetric absmax per [tile, k] block: ``scale = absmax/127`` (1.0 for
+    all-zero blocks so they stay exact zeros), ``q = clip(round(v/scale))``.
+    Because per-token top-k keeps each row's largest magnitude, the absmax
+    over packed values equals the absmax over the dense tile — quantizing
+    after packing loses nothing vs quantizing before."""
+    x = values.astype(jnp.float32)
+    T, k = x.shape[-2:]
+    assert T % tile == 0, (T, tile)
+    xt = x.reshape(x.shape[:-2] + (T // tile, tile * k))
+    # explicit reciprocal multiply, NOT division: XLA rewrites x/127.0 to
+    # x*(1/127) in some lowerings (the Pallas interpreter) but not others,
+    # which would put the kernel and this oracle one ulp apart
+    scale = jnp.max(jnp.abs(xt), axis=-1, keepdims=True) \
+        * jnp.float32(1.0 / 127.0)
+    scale = jnp.where(scale == 0.0, 1.0, scale)
+    q = jnp.clip(jnp.round(xt / scale), -127, 127).astype(jnp.int8)
+    return q.reshape(values.shape), scale
+
+
+def dequantize_fixedk(qvalues: jax.Array, scales: jax.Array,
+                      dtype=jnp.float32) -> jax.Array:
+    """Inverse of ``quantize_fixedk``. The quant tile is DERIVED from the
+    shapes (``T // n_scale_rows``), so readers need no config threading —
+    this also makes the function correct on page-gathered views, where both
+    leaves concatenate pagewise in the same order."""
+    T, k = qvalues.shape[-2:]
+    nt = scales.shape[-2]
+    assert T % nt == 0, (T, nt)
+    xt = qvalues.astype(jnp.float32).reshape(
+        qvalues.shape[:-2] + (nt, (T // nt) * k))
+    out = xt * scales.astype(jnp.float32)
+    return out.reshape(qvalues.shape).astype(dtype)
+
+
+# ----------------------------------------------------------------------
 # paged layout (vLLM-style block indirection over the fixed-k format)
 
 def gather_pages(pool: jax.Array, block_table: jax.Array) -> jax.Array:

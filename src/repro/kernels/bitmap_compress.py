@@ -113,6 +113,25 @@ def _compress_tile(x: jax.Array, k: int, d: int):
     return vals, words
 
 
+def _quantize_block(vals: jax.Array, qt: int):
+    """vals [T, k] fp -> (int8 [T, k], fp32 scales [T//qt, 1]).
+
+    Symmetric absmax per [qt, k] sub-block — the SAME jnp ops as the storage
+    oracle ``sparse_format.quantize_fixedk`` (fp32 math, round-half-to-even,
+    all-zero blocks keep scale 1.0 so they stay exact zeros), so kernel and
+    oracle agree bit-for-bit. Runs in the same dispatch as the compress: the
+    packed values are already in registers, no extra pass over the tile."""
+    T, k = vals.shape
+    xt = vals.astype(jnp.float32).reshape(T // qt, qt * k)
+    # reciprocal multiply (not /127.0): bit-identical across XLA lowerings
+    # — the oracle does the same (sparse_format.quantize_fixedk)
+    scale = jnp.max(jnp.abs(xt), axis=1, keepdims=True) \
+        * jnp.float32(1.0 / 127.0)
+    scale = jnp.where(scale == 0.0, 1.0, scale)
+    q = jnp.clip(jnp.round(xt / scale), -127, 127)
+    return q.reshape(T, k).astype(jnp.int8), scale
+
+
 def _compress_kernel(x_ref, vals_ref, bm_ref, *, k: int, d: int):
     x = x_ref[0]                                          # [T, d_pad]
     vals, words = _compress_tile(x, k, d)
@@ -120,13 +139,30 @@ def _compress_kernel(x_ref, vals_ref, bm_ref, *, k: int, d: int):
     bm_ref[0] = words
 
 
-@functools.partial(jax.jit, static_argnames=("k", "interpret", "tile_t"))
+def _compress_quant_kernel(x_ref, vals_ref, bm_ref, scale_ref, *,
+                           k: int, d: int, qt: int):
+    x = x_ref[0]                                          # [T, d_pad]
+    vals, words = _compress_tile(x, k, d)
+    q, s = _quantize_block(vals, qt)
+    vals_ref[0] = q
+    bm_ref[0] = words
+    scale_ref[0] = s
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "interpret", "tile_t", "quant_tile"))
 def mustafar_compress(x: jax.Array, k: int, *, interpret: bool = False,
-                      tile_t: int = TILE_T):
+                      tile_t: int = TILE_T, quant_tile: int | None = None):
     """x [R, T, d] -> (values [R, T, k], bitmap [R, T, ceil32(d)/32] uint32).
 
     R = flattened batch·heads·…; ``tile_t`` is the token-tile grid step
     (clamped to T). T must be a multiple of the (clamped) tile.
+
+    ``quant_tile`` switches on int8 pool emission: the packed values are
+    symmetric-absmax quantized per ``quant_tile``-token block IN THE SAME
+    dispatch and a third output ``scales [R, T//quant_tile, 1]`` fp32 is
+    returned (values come back int8). Requires ``tile_t % quant_tile == 0``
+    so a grid step owns whole quant blocks.
     """
     R, T, d = x.shape
     assert k <= d, (k, d)
@@ -140,22 +176,46 @@ def mustafar_compress(x: jax.Array, k: int, *, interpret: bool = False,
             f"pad the token dim or pass a tile_t that divides T")
     n_words = d_pad // 32
     grid = (R, T // tile_t)
-    kernel = functools.partial(_compress_kernel, k=k, d=d)
-    vals, bm = pl.pallas_call(
+    if quant_tile is None:
+        kernel = functools.partial(_compress_kernel, k=k, d=d)
+        return pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[pl.BlockSpec((1, tile_t, d_pad),
+                                   lambda r, t: (r, t, 0))],
+            out_specs=[
+                pl.BlockSpec((1, tile_t, k), lambda r, t: (r, t, 0)),
+                pl.BlockSpec((1, tile_t, n_words), lambda r, t: (r, t, 0)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((R, T, k), x.dtype),
+                jax.ShapeDtypeStruct((R, T, n_words), jnp.uint32),
+            ],
+            interpret=interpret,
+        )(x)
+    if tile_t % quant_tile:
+        raise ValueError(
+            f"mustafar_compress: tile_t={tile_t} must be a multiple of "
+            f"quant_tile={quant_tile} (a grid step owns whole quant blocks)")
+    nt = tile_t // quant_tile
+    kernel = functools.partial(_compress_quant_kernel, k=k, d=d,
+                               qt=quant_tile)
+    return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[pl.BlockSpec((1, tile_t, d_pad), lambda r, t: (r, t, 0))],
         out_specs=[
             pl.BlockSpec((1, tile_t, k), lambda r, t: (r, t, 0)),
             pl.BlockSpec((1, tile_t, n_words), lambda r, t: (r, t, 0)),
+            pl.BlockSpec((1, nt, 1), lambda r, t: (r, t, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((R, T, k), x.dtype),
+            jax.ShapeDtypeStruct((R, T, k), jnp.int8),
             jax.ShapeDtypeStruct((R, T, n_words), jnp.uint32),
+            jax.ShapeDtypeStruct((R, T // quant_tile, 1), jnp.float32),
         ],
         interpret=interpret,
     )(x)
-    return vals, bm
 
 
 # ----------------------------------------------------------------------
@@ -182,11 +242,35 @@ def _compress_scatter_kernel(phys_ref, offt_ref, kx_ref, vx_ref,
     cvb_ref[0, 0] = words
 
 
+def _compress_scatter_quant_kernel(phys_ref, offt_ref, kx_ref, vx_ref,
+                                   ckv_in, ckb_in, cvv_in, cvb_in,
+                                   cks_in, cvs_in,
+                                   ckv_ref, ckb_ref, cvv_ref, cvb_ref,
+                                   cks_ref, cvs_ref, *,
+                                   kk: int, kv: int, d: int):
+    """Quantized fused retirement: the retiring tile IS one quant block
+    (quant tile == tile_tokens), so each grid cell emits int8 values, bitmap
+    words, and ONE fp32 scale per head — all in the same dispatch."""
+    del phys_ref, offt_ref, ckv_in, ckb_in, cvv_in, cvb_in, cks_in, cvs_in
+    vals, words = _compress_tile(kx_ref[0, 0], kk, d)
+    q, s = _quantize_block(vals, vals.shape[0])
+    ckv_ref[0, 0] = q
+    ckb_ref[0, 0] = words
+    cks_ref[0, 0] = s
+    vals, words = _compress_tile(vx_ref[0, 0], kv, d)
+    q, s = _quantize_block(vals, vals.shape[0])
+    cvv_ref[0, 0] = q
+    cvb_ref[0, 0] = words
+    cvs_ref[0, 0] = s
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def mustafar_compress_scatter(k_tile: jax.Array, v_tile: jax.Array,
                               ck_vals: jax.Array, ck_bm: jax.Array,
                               cv_vals: jax.Array, cv_bm: jax.Array,
                               phys: jax.Array, off_tile: jax.Array, *,
+                              k_scale: jax.Array | None = None,
+                              v_scale: jax.Array | None = None,
                               interpret: bool = False):
     """Fused tile-group retirement: compress + scatter in ONE dispatch.
 
@@ -195,7 +279,11 @@ def mustafar_compress_scatter(k_tile: jax.Array, v_tile: jax.Array,
     is each row's pre-resolved physical destination page (the caller points
     masked rows at the write-discard scratch page) and ``off_tile`` [B] the
     in-page TILE index (token offset // tt — compaction offsets are always
-    tile-aligned). Returns the four updated pool leaves.
+    tile-aligned). Returns the four updated pool leaves — SIX with
+    ``k_scale``/``v_scale`` given (int8 pools): the retiring tile is exactly
+    one quant block, so each grid cell also emits one fp32 absmax scale per
+    head into block (phys[b], h, off_tile[b]) of the aliased scale pools
+    ``[n_phys, Hkv, page_tokens // tt, 1]``, still in the SAME dispatch.
 
     Scalar-prefetched ``phys``/``off_tile`` feed the OUTPUT index maps: grid
     cell (b, h) compresses row b's head-h tiles and emits the packed values
@@ -216,42 +304,53 @@ def mustafar_compress_scatter(k_tile: jax.Array, v_tile: jax.Array,
         k_tile = jnp.pad(k_tile, pad)
         v_tile = jnp.pad(v_tile, pad)
     assert pt % tt == 0, (pt, tt)
+    quant = k_scale is not None
+    assert quant == (v_scale is not None), "pass both scale pools or neither"
 
+    page_blk = lambda c: pl.BlockSpec(
+        (1, 1, tt, c), lambda b, h, ph, ot: (ph[b], h, ot[b], 0))
+    in_specs = [
+        pl.BlockSpec((1, 1, tt, d_pad), lambda b, h, ph, ot: (b, h, 0, 0)),
+        pl.BlockSpec((1, 1, tt, d_pad), lambda b, h, ph, ot: (b, h, 0, 0)),
+    ] + [pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)] * (6 if quant
+                                                                 else 4)
+    out_specs = [page_blk(kk), page_blk(n_words),
+                 page_blk(kv), page_blk(n_words)]
+    out_shape = [
+        jax.ShapeDtypeStruct(ck_vals.shape, ck_vals.dtype),
+        jax.ShapeDtypeStruct(ck_bm.shape, ck_bm.dtype),
+        jax.ShapeDtypeStruct(cv_vals.shape, cv_vals.dtype),
+        jax.ShapeDtypeStruct(cv_bm.shape, cv_bm.dtype),
+    ]
+    operands = [phys.astype(jnp.int32), off_tile.astype(jnp.int32),
+                k_tile, v_tile, ck_vals, ck_bm, cv_vals, cv_bm]
+    # inputs: 0=phys 1=off_tile 2=k_tile 3=v_tile 4..=pool leaves; the
+    # leaves alias outputs (donated — unvisited blocks keep their bytes)
+    aliases = {4: 0, 5: 1, 6: 2, 7: 3}
+    if quant:
+        assert k_scale.shape == (n_phys, Hkv, pt // tt, 1), k_scale.shape
+        scale_blk = pl.BlockSpec(
+            (1, 1, 1, 1), lambda b, h, ph, ot: (ph[b], h, ot[b], 0))
+        out_specs += [scale_blk, scale_blk]
+        out_shape += [jax.ShapeDtypeStruct(k_scale.shape, k_scale.dtype),
+                      jax.ShapeDtypeStruct(v_scale.shape, v_scale.dtype)]
+        operands += [k_scale, v_scale]
+        aliases.update({8: 4, 9: 5})
+        kernel = functools.partial(_compress_scatter_quant_kernel,
+                                   kk=kk, kv=kv, d=d)
+    else:
+        kernel = functools.partial(_compress_scatter_kernel, kk=kk, kv=kv,
+                                   d=d)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, Hkv),
-        in_specs=[
-            pl.BlockSpec((1, 1, tt, d_pad), lambda b, h, ph, ot: (b, h, 0, 0)),
-            pl.BlockSpec((1, 1, tt, d_pad), lambda b, h, ph, ot: (b, h, 0, 0)),
-            pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
-            pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
-            pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
-            pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, 1, tt, kk),
-                         lambda b, h, ph, ot: (ph[b], h, ot[b], 0)),
-            pl.BlockSpec((1, 1, tt, n_words),
-                         lambda b, h, ph, ot: (ph[b], h, ot[b], 0)),
-            pl.BlockSpec((1, 1, tt, kv),
-                         lambda b, h, ph, ot: (ph[b], h, ot[b], 0)),
-            pl.BlockSpec((1, 1, tt, n_words),
-                         lambda b, h, ph, ot: (ph[b], h, ot[b], 0)),
-        ],
+        in_specs=in_specs,
+        out_specs=out_specs,
     )
-    kernel = functools.partial(_compress_scatter_kernel, kk=kk, kv=kv, d=d)
-    # inputs: 0=phys 1=off_tile 2=k_tile 3=v_tile 4..7=pool leaves; the
-    # leaves alias outputs 0..3 (donated — unvisited blocks keep their bytes)
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=[
-            jax.ShapeDtypeStruct(ck_vals.shape, ck_vals.dtype),
-            jax.ShapeDtypeStruct(ck_bm.shape, ck_bm.dtype),
-            jax.ShapeDtypeStruct(cv_vals.shape, cv_vals.dtype),
-            jax.ShapeDtypeStruct(cv_bm.shape, cv_bm.dtype),
-        ],
-        input_output_aliases={4: 0, 5: 1, 6: 2, 7: 3},
+        out_shape=out_shape,
+        input_output_aliases=aliases,
         interpret=interpret,
-    )(phys.astype(jnp.int32), off_tile.astype(jnp.int32),
-      k_tile, v_tile, ck_vals, ck_bm, cv_vals, cv_bm)
+    )(*operands)

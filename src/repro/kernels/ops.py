@@ -14,7 +14,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.sparse_format import gather_pages
+from repro.core.sparse_format import (dequantize_fixedk, gather_pages,
+                                      quantize_fixedk)
 from repro.kernels import bitmap_compress, ref, sparse_decode
 
 
@@ -32,40 +33,75 @@ def _auto_tile(T: int, cap: int) -> int:
     return t
 
 
+def _auto_tile_q(T: int, cap: int, qt: int) -> int:
+    """Largest divisor of T that is <= cap AND a multiple of the quant block
+    ``qt`` (a kernel tile must cover whole quant blocks so the per-tile scale
+    slice lines up). T % qt == 0 by construction (scales exist), so qt itself
+    is always a valid floor."""
+    t = (min(cap, T) // qt) * qt
+    while t > qt and T % t:
+        t -= qt
+    return max(t, qt)
+
+
 # ----------------------------------------------------------------------
 def compress(x: jax.Array, k: int, *, use_pallas: Optional[bool] = None,
-             tile_t: Optional[int] = None):
+             tile_t: Optional[int] = None,
+             quant_tile: Optional[int] = None):
     """Per-token top-k prune + pack. x [..., T, d] -> (values, bitmap).
 
     ``tile_t`` overrides the kernel's token-tile grid step; by default the
     largest divisor of T at or under ``bitmap_compress.TILE_T`` is used, so
     any token count the callers produce (tile groups, ragged prefills)
-    tiles cleanly."""
+    tiles cleanly.
+
+    ``quant_tile`` switches on int8 pool storage: the packed values come
+    back int8 plus a third output — one fp32 symmetric absmax scale per
+    ``quant_tile`` tokens, [..., T // quant_tile, 1]. The bitmap plane is
+    bit-identical to the unquantized call (pruning happens BEFORE
+    quantization)."""
     lead = x.shape[:-2]
     T, d = x.shape[-2:]
     if use_pallas is None:
         use_pallas = _on_tpu()
     if not use_pallas:
-        return ref.mustafar_compress_ref(x, k)
+        vals, bm = ref.mustafar_compress_ref(x, k)
+        if quant_tile is None:
+            return vals, bm
+        q, s = quantize_fixedk(vals, quant_tile)
+        return q, bm, s
     xr = x.reshape(-1, T, d)
-    vals, bm = bitmap_compress.mustafar_compress(
-        xr, k, interpret=not _on_tpu(),
-        tile_t=tile_t if tile_t is not None
-        else _auto_tile(T, bitmap_compress.TILE_T))
-    return (vals.reshape(*lead, T, k), bm.reshape(*lead, T, bm.shape[-1]))
+    if quant_tile is None:
+        tt = tile_t if tile_t is not None \
+            else _auto_tile(T, bitmap_compress.TILE_T)
+        vals, bm = bitmap_compress.mustafar_compress(
+            xr, k, interpret=not _on_tpu(), tile_t=tt)
+        return (vals.reshape(*lead, T, k), bm.reshape(*lead, T, bm.shape[-1]))
+    tt = tile_t if tile_t is not None \
+        else _auto_tile_q(T, bitmap_compress.TILE_T, quant_tile)
+    vals, bm, scales = bitmap_compress.mustafar_compress(
+        xr, k, interpret=not _on_tpu(), tile_t=tt, quant_tile=quant_tile)
+    return (vals.reshape(*lead, T, k), bm.reshape(*lead, T, bm.shape[-1]),
+            scales.reshape(*lead, T // quant_tile, 1))
 
 
 def compress_scatter(k_tile: jax.Array, v_tile: jax.Array,
                      ck_vals: jax.Array, ck_bm: jax.Array,
                      cv_vals: jax.Array, cv_bm: jax.Array,
                      phys: jax.Array, off: jax.Array, *,
+                     k_scale: Optional[jax.Array] = None,
+                     v_scale: Optional[jax.Array] = None,
                      use_pallas: Optional[bool] = None):
     """Fused tile-group retirement into paged pools (compress-as-you-evict).
 
     ``k_tile``/``v_tile`` [B, Hkv, tt, d] retiring window tiles; pool leaves
     [n_phys, Hkv, page_tokens, ·]; ``phys`` [B] pre-resolved destination
     page per row (scratch page for masked rows); ``off`` [B] in-page TOKEN
-    offset (tile-aligned). Returns the four updated pool leaves.
+    offset (tile-aligned). Returns the four updated pool leaves — six when
+    ``k_scale``/``v_scale`` [n_phys, Hkv, page_tokens // tt, 1] are given
+    (int8 pools): values are quantized in the same dispatch, one symmetric
+    absmax fp32 scale per retiring tile lands in the sibling scale pool at
+    tile row ``off // tt``.
 
     On TPU this is ONE Pallas dispatch — the compressed values/bitmaps DMA
     straight into their destination page blocks through scalar-prefetched
@@ -77,22 +113,34 @@ def compress_scatter(k_tile: jax.Array, v_tile: jax.Array,
     B, Hkv, tt, d = k_tile.shape
     kk = ck_vals.shape[-1]
     kv = cv_vals.shape[-1]
+    quant = k_scale is not None
     if use_pallas is None:
         use_pallas = _on_tpu()
     if use_pallas:
         return bitmap_compress.mustafar_compress_scatter(
             k_tile, v_tile, ck_vals, ck_bm, cv_vals, cv_bm,
-            phys, off // tt, interpret=not _on_tpu())
+            phys, off // tt, k_scale=k_scale, v_scale=v_scale,
+            interpret=not _on_tpu())
     ck_v, ck_b = ref.mustafar_compress_ref(k_tile, kk)   # [B,Hkv,tt,·]
     cv_v, cv_b = ref.mustafar_compress_ref(v_tile, kv)
+    if quant:
+        ck_v, ck_s = quantize_fixedk(ck_v, tt)           # scales [B,Hkv,1,1]
+        cv_v, cv_s = quantize_fixedk(cv_v, tt)
     idx_p = phys[:, None]                                # [B,1] page
     idx_t = off[:, None] + jnp.arange(tt)[None, :]       # [B,tt] token rows
     def scat(pool, tiles):
         # advanced indices on dims 0/2 -> [B, tt, Hkv, c] value layout
         return pool.at[idx_p, :, idx_t].set(
             jnp.swapaxes(tiles, 1, 2).astype(pool.dtype))
-    return (scat(ck_vals, ck_v), scat(ck_bm, ck_b),
-            scat(cv_vals, cv_v), scat(cv_bm, cv_b))
+    out = (scat(ck_vals, ck_v), scat(ck_bm, ck_b),
+           scat(cv_vals, cv_v), scat(cv_bm, cv_b))
+    if not quant:
+        return out
+    idx_ts = (off // tt)[:, None]                        # [B,1] tile rows
+    def scat_scale(pool, s):
+        return pool.at[idx_p, :, idx_ts].set(
+            jnp.swapaxes(s, 1, 2).astype(pool.dtype))
+    return out + (scat_scale(k_scale, ck_s), scat_scale(v_scale, cv_s))
 
 
 def _group_q(q: jax.Array, n_kv_heads: int):
@@ -142,6 +190,8 @@ def decode_attention_fused(q: jax.Array,
                            ck_values: jax.Array, ck_bitmap: jax.Array,
                            cv_values: jax.Array, cv_bitmap: jax.Array,
                            n_valid: jax.Array, *, scale: Optional[float] = None,
+                           k_scale: Optional[jax.Array] = None,
+                           v_scale: Optional[jax.Array] = None,
                            use_pallas: Optional[bool] = None,
                            return_state: bool = False):
     """Fused single-pass decode attention over the compressed cache.
@@ -154,25 +204,41 @@ def decode_attention_fused(q: jax.Array,
     returns ``(acc, m, l)`` [B,Hq,d]/[B,Hq,1]/[B,Hq,1] — the unnormalised
     online-softmax state — so callers can merge further operands (the dense
     local window) into the same running softmax before normalising.
+
+    ``k_scale``/``v_scale`` [B,Hkv,T//qt,1] fp32 mark int8 caches: the
+    Pallas kernel dequantizes in-register after the (int8-width) HBM read;
+    the jnp path dequantizes eagerly and runs the same reference.
     """
     B, Hkv, T, kk = ck_values.shape
     d = q.shape[-1]
     scale = scale if scale is not None else d ** -0.5
     qg, G = _group_q(q, Hkv)
     nv = jnp.repeat(n_valid.astype(jnp.int32), Hkv)
+    quant = k_scale is not None
+    ks = vs = None
+    if quant:
+        ks = k_scale.reshape(B * Hkv, -1, 1)
+        vs = v_scale.reshape(B * Hkv, -1, 1)
     args = (qg,
             ck_values.reshape(B * Hkv, T, kk), ck_bitmap.reshape(B * Hkv, T, -1),
             cv_values.reshape(B * Hkv, T, -1), cv_bitmap.reshape(B * Hkv, T, -1))
     if use_pallas is None:
         use_pallas = _on_tpu()
     if use_pallas:
+        tile_t = min(T, sparse_decode.TILE_T) if not quant else \
+            _auto_tile_q(T, sparse_decode.TILE_T, T // ks.shape[1])
         res = sparse_decode.decode_attention_fused(
-            *args, nv, d=d, scale=scale, interpret=not _on_tpu(),
-            tile_t=min(T, sparse_decode.TILE_T), return_state=return_state)
-    elif return_state:
-        res = ref.decode_attention_fused_state_ref(*args, nv, d, scale)
+            *args, nv, d=d, scale=scale, k_scale=ks, v_scale=vs,
+            interpret=not _on_tpu(), tile_t=tile_t, return_state=return_state)
     else:
-        res = ref.decode_attention_fused_ref(*args, nv, d, scale)
+        if quant:
+            qg_, ckv, ckb, cvv, cvb = args
+            args = (qg_, dequantize_fixedk(ckv, ks), ckb,
+                    dequantize_fixedk(cvv, vs), cvb)
+        if return_state:
+            res = ref.decode_attention_fused_state_ref(*args, nv, d, scale)
+        else:
+            res = ref.decode_attention_fused_ref(*args, nv, d, scale)
     if return_state:
         o, acc, m, l = res
         return (o.reshape(B, Hkv * G, d), acc.reshape(B, Hkv * G, d),
@@ -185,6 +251,8 @@ def decode_attention_fused_paged(q: jax.Array,
                                  cv_pool: jax.Array, cv_bitmap: jax.Array,
                                  block_table: jax.Array, n_valid: jax.Array,
                                  *, scale: Optional[float] = None,
+                                 k_scale: Optional[jax.Array] = None,
+                                 v_scale: Optional[jax.Array] = None,
                                  use_pallas: Optional[bool] = None,
                                  return_state: bool = False):
     """Fused decode attention over PAGED compressed pools.
@@ -199,25 +267,40 @@ def decode_attention_fused_paged(q: jax.Array,
     (and inside traced pjit graphs) the pools are gathered into the
     contiguous layout and the jnp oracle runs — bit-identical numerics, so
     the CPU serving path needs no special casing.
+
+    ``k_scale``/``v_scale`` [n_phys,Hkv,page_tokens//qt,1] fp32 mark int8
+    pools: scales ride IN the page (same block table, one gather), values
+    dequantize in-register on TPU / eagerly on the gathered view off-TPU.
     """
     B, Hq, d = q.shape
     n_phys, Hkv, page_tokens, kk = ck_pool.shape
     scale = scale if scale is not None else d ** -0.5
     qg, G = _group_q(q, Hkv)
     nv = jnp.repeat(n_valid.astype(jnp.int32), Hkv)
+    quant = k_scale is not None
     if use_pallas is None:
         use_pallas = _on_tpu()
     if use_pallas:
+        tile_t = _auto_tile(page_tokens, sparse_decode.TILE_T) if not quant \
+            else _auto_tile_q(page_tokens, sparse_decode.TILE_T,
+                              page_tokens // k_scale.shape[2])
         res = sparse_decode.decode_attention_fused_paged(
             qg, ck_pool, ck_bitmap, cv_pool, cv_bitmap,
-            block_table, nv, d=d, scale=scale, interpret=not _on_tpu(),
-            tile_t=_auto_tile(page_tokens, sparse_decode.TILE_T),
-            return_state=return_state)
+            block_table, nv, d=d, scale=scale,
+            k_scale=k_scale, v_scale=v_scale, interpret=not _on_tpu(),
+            tile_t=tile_t, return_state=return_state)
     else:
         T = block_table.shape[1] * page_tokens
         args = tuple(
             gather_pages(pool, block_table).reshape(B * Hkv, T, -1)
             for pool in (ck_pool, ck_bitmap, cv_pool, cv_bitmap))
+        if quant:
+            # scale "token" axis counts TILES per page — gather_pages is
+            # agnostic to the row unit, pagewise order matches the values
+            ks = gather_pages(k_scale, block_table).reshape(B * Hkv, -1, 1)
+            vs = gather_pages(v_scale, block_table).reshape(B * Hkv, -1, 1)
+            args = (dequantize_fixedk(args[0], ks), args[1],
+                    dequantize_fixedk(args[2], vs), args[3])
         if return_state:
             res = ref.decode_attention_fused_state_ref(qg, *args, nv, d, scale)
         else:

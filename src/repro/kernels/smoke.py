@@ -107,11 +107,83 @@ def main() -> int:
             np.asarray(w.astype(jnp.float32))[:n_phys2 - 1],
             err_msg=f"compress-scatter {name} diverged")
 
+    # int8 quantized pools (PR 10): the SAME dispatch also emits per-tile
+    # symmetric absmax scales; bitmap unchanged, quantization matches the
+    # jnp storage round-trip bit-for-bit, and the fused decode dequantizes
+    # in-register to match a reference run over dequantized fp pools
+    from repro.core.sparse_format import dequantize_fixedk, quantize_fixedk
+
+    qt = 16
+    kvq, kbq, ks = mustafar_compress(kx, k, interpret=True, tile_t=64,
+                                     quant_tile=qt)
+    vvq, vbq, vs = mustafar_compress(vx, k, interpret=True, tile_t=64,
+                                     quant_tile=qt)
+    np.testing.assert_array_equal(np.asarray(kbq), np.asarray(kb_r))
+    kq_ref, ks_ref = quantize_fixedk(kv_r, qt)
+    np.testing.assert_array_equal(np.asarray(kvq), np.asarray(kq_ref))
+    np.testing.assert_array_equal(np.asarray(ks), np.asarray(ks_ref))
+    assert kvq.dtype == jnp.int8 and ks.dtype == jnp.float32
+
+    out_q, acc_q, _, l_q = decode_attention_fused(
+        q, kvq, kbq, vvq, vbq, n_valid, d=d, scale=d ** -0.5,
+        k_scale=ks, v_scale=vs, interpret=True, tile_t=tile_t,
+        return_state=True)
+    o_qref, *_ = ref.decode_attention_fused_state_ref(
+        q, dequantize_fixedk(kvq, ks), kb_r,
+        dequantize_fixedk(vvq, vs), vb_r, n_valid, d, scale=d ** -0.5)
+    np.testing.assert_allclose(np.asarray(out_q), np.asarray(o_qref),
+                               rtol=1e-4, atol=1e-4)
+
+    # paged quantized decode: scatter int8 pools + scale pools into the
+    # same shuffled pages — bit-exact vs the contiguous quantized kernel
+    paged_q = []
+    for arr, rows in ((kvq, pt), (kbq, pt), (vvq, pt), (vbq, pt),
+                      (ks, pt // qt), (vs, pt // qt)):
+        a = np.asarray(arr)
+        pool = np.zeros((n_phys, Hkv, rows, a.shape[-1]), a.dtype)
+        for b in range(BH):
+            for lp in range(MP):
+                pool[bt[b, lp], 0] = a[b, lp * rows:(lp + 1) * rows]
+        paged_q.append(jnp.asarray(pool))
+    out_pq = decode_attention_fused_paged(
+        q, *paged_q[:4], jnp.asarray(bt), n_valid, d=d, scale=d ** -0.5,
+        k_scale=paged_q[4], v_scale=paged_q[5], interpret=True,
+        tile_t=tile_t)
+    np.testing.assert_array_equal(
+        np.asarray(out_pq), np.asarray(acc_q / jnp.maximum(l_q, 1e-30)))
+
+    # quantized compress-scatter parity (int8 pools + sibling scale pools)
+    pools_q = tuple(
+        jnp.asarray(rng.integers(0, 2 ** 31,
+                                 size=(n_phys2, Hkv2, pt, c)), jnp.uint32)
+        if bm else
+        jnp.asarray(rng.integers(-127, 128,
+                                 size=(n_phys2, Hkv2, pt, c)), jnp.int8)
+        for bm, c in ((False, k), (True, nw), (False, k), (True, nw)))
+    scales_q = tuple(
+        jnp.asarray(rng.normal(size=(n_phys2, Hkv2, pt // tt2, 1)),
+                    jnp.float32) for _ in range(2))
+    got_q = compress_scatter(kt, vt, *pools_q, phys2, off2,
+                             k_scale=scales_q[0], v_scale=scales_q[1],
+                             use_pallas=True)
+    want_q = compress_scatter(kt, vt, *pools_q, phys2, off2,
+                              k_scale=scales_q[0], v_scale=scales_q[1],
+                              use_pallas=False)
+    assert len(got_q) == 6 and got_q[4].dtype == jnp.float32
+    for name, g, w in zip(("ck_vals", "ck_bm", "cv_vals", "cv_bm",
+                           "ck_scale", "cv_scale"), got_q, want_q):
+        np.testing.assert_array_equal(
+            np.asarray(g.astype(jnp.float32))[:n_phys2 - 1],
+            np.asarray(w.astype(jnp.float32))[:n_phys2 - 1],
+            err_msg=f"quantized compress-scatter {name} diverged")
+
     print("kernel smoke OK: compress -> fused decode round-trip matches "
           f"oracle (BH={BH}, T={T}, d={d}, k={k}, "
           f"n_valid={list(map(int, n_valid))}); paged decode bit-exact "
           f"(page_tokens={pt}, {BH * MP} pages shuffled); fused "
-          f"compress-scatter bit-exact (B={B2}, scratch-masked row)")
+          f"compress-scatter bit-exact (B={B2}, scratch-masked row); "
+          f"int8 pools (quant_tile={qt}) bit-match the jnp round-trip, "
+          "contiguous+paged quantized decode and scatter parity OK")
     return 0
 
 

@@ -162,8 +162,28 @@ def sparse_av(p: jax.Array, values: jax.Array, bitmap: jax.Array, *, d: int,
 # Avoids materialising [BH, G, T] scores in HBM — the paper's two-kernel
 # formulation pays 2·G·T fp32 of extra HBM traffic that this removes.
 
+def _dequant_rows(vals, scale_col, qt: int):
+    """vals [T, k] int8, scale_col [T//qt, 1] fp32 -> fp32 [T, k].
+
+    In-register dequantization of a packed tile: row r's scale is
+    ``scale_col[r // qt]`` (one symmetric absmax scale per qt-token quant
+    block). Runs on the already-resident VMEM tile right before the MXU
+    product — int8 pools pay int8 HBM bytes, never a widened pool."""
+    T = vals.shape[0]
+    rows = lax.broadcasted_iota(jnp.int32, (T, 1), 0) // qt
+    return vals.astype(jnp.float32) * \
+        jnp.take_along_axis(scale_col, rows, axis=0)
+
+
 def _fused_kernel(nv_ref, q_ref, kv_ref, kb_ref, vv_ref, vb_ref,
-                  acc_ref, m_ref, l_ref, *, d, kk, kv, scale, tile_t):
+                  *refs, d, kk, kv, scale, tile_t, qt=None):
+    # refs: (acc, m, l) outputs, preceded by (ks, vs) scale inputs when
+    # quantized (qt = quant-block tokens, None for bf16 pools)
+    if qt is None:
+        ks_ref = vs_ref = None
+        acc_ref, m_ref, l_ref = refs
+    else:
+        ks_ref, vs_ref, acc_ref, m_ref, l_ref = refs
     b = pl.program_id(0)
     t = pl.program_id(1)
     nv = nv_ref[b]
@@ -184,7 +204,11 @@ def _fused_kernel(nv_ref, q_ref, kv_ref, kb_ref, vv_ref, vb_ref,
     @pl.when(t * tile_t < nv)
     def _tile():
         q = q_ref[0]                                           # [G, d]
-        k_dense = _decompress(kv_ref[0], kb_ref[0], d, kk)     # [T, d_pad]
+        kvals, vvals = kv_ref[0], vv_ref[0]                    # [T, k]
+        if qt is not None:
+            kvals = _dequant_rows(kvals, ks_ref[0], qt)
+            vvals = _dequant_rows(vvals, vs_ref[0], qt)
+        k_dense = _decompress(kvals, kb_ref[0], d, kk)         # [T, d_pad]
         s = _dot_compressed(q, k_dense[:, :d],
                             (((1,), (1,)), ((), ()))) * scale  # [G, T]
         # mask invalid tokens of the last (partially valid) tile
@@ -196,7 +220,7 @@ def _fused_kernel(nv_ref, q_ref, kv_ref, kb_ref, vv_ref, vb_ref,
         m_new = jnp.maximum(m_prev, m_cur)
         alpha = jnp.exp(m_prev - m_new)                        # rescale factor
         p = jnp.exp(s - m_new)                                 # [G, T]
-        v_dense = _decompress(vv_ref[0], vb_ref[0], d, kv)     # [T, d_pad]
+        v_dense = _decompress(vvals, vb_ref[0], d, kv)         # [T, d_pad]
         pv = _dot_compressed(p, v_dense[:, :d],
                              (((1,), (0,)), ((), ())))         # [G, d]
         acc_ref[0] = acc_ref[0] * alpha + pv.astype(acc_ref.dtype)
@@ -211,6 +235,8 @@ def decode_attention_fused(q: jax.Array,
                            ck_values: jax.Array, ck_bitmap: jax.Array,
                            cv_values: jax.Array, cv_bitmap: jax.Array,
                            n_valid: jax.Array, *, d: int, scale: float,
+                           k_scale: jax.Array | None = None,
+                           v_scale: jax.Array | None = None,
                            interpret: bool = False, tile_t: int = TILE_T,
                            return_state: bool = False):
     """Fused compressed-cache decode attention on a scalar-prefetch grid.
@@ -228,15 +254,28 @@ def decode_attention_fused(q: jax.Array,
     ``(acc [BH,G,d] unnormalised, m [BH,G,1], l [BH,G,1])`` so a caller can
     continue the running softmax over extra operands (the dense local
     window) before normalising.
+
+    ``k_scale``/``v_scale`` [BH, T//qt, 1] fp32 switch on int8 pools:
+    values are dequantized in-register (``_dequant_rows``) right before the
+    MXU products, so HBM reads stay at int8 width. ``tile_t`` must be a
+    multiple of the quant block ``qt = T // k_scale.shape[1]``.
     """
     BH, G, _ = q.shape
     T, kk = ck_values.shape[1:]
     kv = cv_values.shape[-1]
     W = ck_bitmap.shape[-1]
     assert T % tile_t == 0, (T, tile_t)
+    quant = k_scale is not None
+    assert quant == (v_scale is not None), "pass both scale planes or neither"
+    qt = None
+    if quant:
+        qt = T // k_scale.shape[1]
+        assert k_scale.shape == v_scale.shape == (BH, T // qt, 1), \
+            (k_scale.shape, v_scale.shape, BH, T, qt)
+        assert tile_t % qt == 0, (tile_t, qt)
     grid = (BH, T // tile_t)
     kernel = functools.partial(_fused_kernel, d=d, kk=kk, kv=kv,
-                               scale=scale, tile_t=tile_t)
+                               scale=scale, tile_t=tile_t, qt=qt)
 
     def tile_idx(b, t, nv_ref):
         # clamp to the row's last valid tile: steps past the row's depth
@@ -244,16 +283,24 @@ def decode_attention_fused(q: jax.Array,
         last = jnp.maximum((nv_ref[b] + tile_t - 1) // tile_t - 1, 0)
         return (b, jnp.minimum(t, last), 0)
 
+    in_specs = [
+        pl.BlockSpec((1, G, d), lambda b, t, nv: (b, 0, 0)),
+        pl.BlockSpec((1, tile_t, kk), tile_idx),
+        pl.BlockSpec((1, tile_t, W), tile_idx),
+        pl.BlockSpec((1, tile_t, kv), tile_idx),
+        pl.BlockSpec((1, tile_t, W), tile_idx),
+    ]
+    operands = [n_valid.astype(jnp.int32), q,
+                ck_values, ck_bitmap, cv_values, cv_bitmap]
+    if quant:
+        # scale planes tile with the values: block index t covers scale
+        # rows [t·tile_t/qt, (t+1)·tile_t/qt) — same index map, smaller rows
+        in_specs += [pl.BlockSpec((1, tile_t // qt, 1), tile_idx)] * 2
+        operands += [k_scale, v_scale]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, G, d), lambda b, t, nv: (b, 0, 0)),
-            pl.BlockSpec((1, tile_t, kk), tile_idx),
-            pl.BlockSpec((1, tile_t, W), tile_idx),
-            pl.BlockSpec((1, tile_t, kv), tile_idx),
-            pl.BlockSpec((1, tile_t, W), tile_idx),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, G, d), lambda b, t, nv: (b, 0, 0)),
             pl.BlockSpec((1, G, 1), lambda b, t, nv: (b, 0, 0)),
@@ -269,7 +316,7 @@ def decode_attention_fused(q: jax.Array,
             jax.ShapeDtypeStruct((BH, G, 1), jnp.float32),   # running sum
         ],
         interpret=interpret,
-    )(n_valid.astype(jnp.int32), q, ck_values, ck_bitmap, cv_values, cv_bitmap)
+    )(*operands)
     out = acc / jnp.maximum(l, 1e-30)
     if return_state:
         return out, acc, m, l
@@ -286,7 +333,14 @@ def decode_attention_fused(q: jax.Array,
 # block as the previous step and the pipeline issues no new HBM DMA.
 
 def _fused_paged_kernel(nv_ref, bt_ref, q_ref, kv_ref, kb_ref, vv_ref, vb_ref,
-                        acc_ref, m_ref, l_ref, *, d, kk, kv, scale, tile_t):
+                        *refs, d, kk, kv, scale, tile_t, qt=None):
+    # refs: (acc, m, l) outputs, preceded by (ks, vs) scale inputs when the
+    # pools are int8-quantized (qt = quant-block tokens, None for bf16)
+    if qt is None:
+        ks_ref = vs_ref = None
+        acc_ref, m_ref, l_ref = refs
+    else:
+        ks_ref, vs_ref, acc_ref, m_ref, l_ref = refs
     b = pl.program_id(0)
     t = pl.program_id(1)
     nv = nv_ref[b]
@@ -302,7 +356,11 @@ def _fused_paged_kernel(nv_ref, bt_ref, q_ref, kv_ref, kb_ref, vv_ref, vb_ref,
     @pl.when(t * tile_t < nv)
     def _tile():
         q = q_ref[0]                                           # [G, d]
-        k_dense = _decompress(kv_ref[0, 0], kb_ref[0, 0], d, kk)
+        kvals, vvals = kv_ref[0, 0], vv_ref[0, 0]              # [T, k]
+        if qt is not None:
+            kvals = _dequant_rows(kvals, ks_ref[0, 0], qt)
+            vvals = _dequant_rows(vvals, vs_ref[0, 0], qt)
+        k_dense = _decompress(kvals, kb_ref[0, 0], d, kk)
         s = _dot_compressed(q, k_dense[:, :d],
                             (((1,), (1,)), ((), ()))) * scale  # [G, T]
         token_idx = t * tile_t + lax.broadcasted_iota(jnp.int32, s.shape, 1)
@@ -313,7 +371,7 @@ def _fused_paged_kernel(nv_ref, bt_ref, q_ref, kv_ref, kb_ref, vv_ref, vb_ref,
         m_new = jnp.maximum(m_prev, m_cur)
         alpha = jnp.exp(m_prev - m_new)
         p = jnp.exp(s - m_new)
-        v_dense = _decompress(vv_ref[0, 0], vb_ref[0, 0], d, kv)
+        v_dense = _decompress(vvals, vb_ref[0, 0], d, kv)
         pv = _dot_compressed(p, v_dense[:, :d], (((1,), (0,)), ((), ())))
         acc_ref[0] = acc_ref[0] * alpha + pv.astype(acc_ref.dtype)
         l_ref[0] = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
@@ -328,6 +386,8 @@ def decode_attention_fused_paged(q: jax.Array,
                                  cv_pool: jax.Array, cv_bitmap: jax.Array,
                                  block_table: jax.Array, n_valid: jax.Array,
                                  *, d: int, scale: float,
+                                 k_scale: jax.Array | None = None,
+                                 v_scale: jax.Array | None = None,
                                  interpret: bool = False,
                                  tile_t: int = TILE_T,
                                  return_state: bool = False):
@@ -365,9 +425,19 @@ def decode_attention_fused_paged(q: jax.Array,
     T = max_pages * page_tokens
     assert page_tokens % tile_t == 0, (page_tokens, tile_t)
     assert BH == block_table.shape[0] * Hkv, (BH, block_table.shape, Hkv)
+    quant = k_scale is not None
+    assert quant == (v_scale is not None), "pass both scale planes or neither"
+    qt = None
+    if quant:
+        # scale pools [n_phys, Hkv, page_tokens // qt, 1] ride in the page
+        qt = page_tokens // k_scale.shape[2]
+        assert k_scale.shape == v_scale.shape == \
+            (n_phys, Hkv, page_tokens // qt, 1), \
+            (k_scale.shape, v_scale.shape, n_phys, Hkv, page_tokens, qt)
+        assert tile_t % qt == 0, (tile_t, qt)
     grid = (BH, T // tile_t)
     kernel = functools.partial(_fused_paged_kernel, d=d, kk=kk, kv=kv,
-                               scale=scale, tile_t=tile_t)
+                               scale=scale, tile_t=tile_t, qt=qt)
 
     def page_idx(b, t, nv_ref, bt_ref):
         # clamp to the row's last valid tile (DMA-skip), then translate the
@@ -378,16 +448,24 @@ def decode_attention_fused_paged(q: jax.Array,
         phys = jnp.clip(phys, 0, n_phys - 1)
         return (phys, b % Hkv, (tok % page_tokens) // tile_t, 0)
 
+    in_specs = [
+        pl.BlockSpec((1, G, d), lambda b, t, nv, bt: (b, 0, 0)),
+        pl.BlockSpec((1, 1, tile_t, kk), page_idx),
+        pl.BlockSpec((1, 1, tile_t, W), page_idx),
+        pl.BlockSpec((1, 1, tile_t, kv), page_idx),
+        pl.BlockSpec((1, 1, tile_t, W), page_idx),
+    ]
+    operands = [n_valid.astype(jnp.int32), block_table.astype(jnp.int32),
+                q, ck_pool, ck_bitmap, cv_pool, cv_bitmap]
+    if quant:
+        # the scale rows count TILES not tokens, but page_idx already
+        # returns BLOCK indices — identical arithmetic for the smaller rows
+        in_specs += [pl.BlockSpec((1, 1, tile_t // qt, 1), page_idx)] * 2
+        operands += [k_scale, v_scale]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, G, d), lambda b, t, nv, bt: (b, 0, 0)),
-            pl.BlockSpec((1, 1, tile_t, kk), page_idx),
-            pl.BlockSpec((1, 1, tile_t, W), page_idx),
-            pl.BlockSpec((1, 1, tile_t, kv), page_idx),
-            pl.BlockSpec((1, 1, tile_t, W), page_idx),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, G, d), lambda b, t, nv, bt: (b, 0, 0)),
             pl.BlockSpec((1, G, 1), lambda b, t, nv, bt: (b, 0, 0)),
@@ -403,8 +481,7 @@ def decode_attention_fused_paged(q: jax.Array,
             jax.ShapeDtypeStruct((BH, G, 1), jnp.float32),
         ],
         interpret=interpret,
-    )(n_valid.astype(jnp.int32), block_table.astype(jnp.int32),
-      q, ck_pool, ck_bitmap, cv_pool, cv_bitmap)
+    )(*operands)
     out = acc / jnp.maximum(l, 1e-30)
     if return_state:
         return out, acc, m, l

@@ -55,7 +55,8 @@ def decode_step_model(cfg, n_slots: int, max_total_tokens: int,
     pruning is disabled) + paged block-table metadata."""
     import numpy as np
     from repro.core.attention import hbm_bytes_dense, hbm_bytes_mustafar
-    from repro.serving.cache import max_compressed_tokens
+    from repro.serving.cache import (max_compressed_tokens, pool_dtype,
+                                     pool_quantized)
 
     m = cfg.mustafar
     d = cfg.d_head
@@ -65,8 +66,14 @@ def decode_step_model(cfg, n_slots: int, max_total_tokens: int,
         k_k = m.keep_k(d, m.key_sparsity)
         k_v = m.keep_k(d, m.value_sparsity)
         tc = max_compressed_tokens(cfg, max_total_tokens)
-        per_row = hbm_bytes_mustafar(tc, m.local_window + m.tile_tokens,
-                                     d, k_k, k_v, itemsize=itemsize)
+        # cache term streams at the POOL width (int8 pools read half the
+        # value bytes plus per-tile fp32 scales); params and the dense
+        # window stay in the model dtype
+        per_row = hbm_bytes_mustafar(
+            tc, m.local_window + m.tile_tokens, d, k_k, k_v,
+            itemsize=itemsize,
+            pool_itemsize=int(np.dtype(pool_dtype(cfg)).itemsize),
+            quant_tile=m.tile_tokens if pool_quantized(cfg) else None)
     else:
         per_row = hbm_bytes_dense(max_total_tokens, d, itemsize=itemsize)
     cache_bytes = n_attn * n_slots * cfg.n_kv_heads * per_row

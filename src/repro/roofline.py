@@ -389,11 +389,17 @@ def scan_corrections(cfg: ModelConfig, shape: ShapeConfig,
             kv = m.keep_k(d, m.value_sparsity)
             n_attn = len(cfg.attention_layers())
             from repro.core.sparse_format import pad_to_words
-            itemsize = 2   # packed values are bf16 (serving.cache.POOL_DTYPE)
+            from repro.serving.cache import pool_dtype, pool_quantized
+            # packed values stream at the configured pool width (bf16=2,
+            # int8=1 + per-tile fp32 scales riding beside the values)
+            itemsize = int(np.dtype(pool_dtype(cfg)).itemsize)
             # per-chunk: read compressed K+V chunk, decompress, 2 matvecs
             # (bitmap stored as whole uint32 words: pad_to_words(d)/8 bytes)
             body_by = B * cfg.n_kv_heads * chunk * (
                 (kk + kv) * itemsize + 2 * (pad_to_words(d) // 8))
+            if pool_quantized(cfg):
+                body_by += B * cfg.n_kv_heads * 2 * \
+                    (chunk // m.tile_tokens) * 4
             # gather decompression is O(d) per row for K and for V (bit
             # expand + cumsum + gather — the old one-hot formulation charged
             # an extra O(d·k) MXU contraction here)

@@ -52,12 +52,37 @@ from repro.models.model import structural_period
 
 CONTEXT_SHARDS = 16  # production mesh "data" size; batch-1 pools shard Tc
 
-# Compressed pools store packed values in bf16 REGARDLESS of the compute
-# dtype: the decode kernels load bf16 and feed the MXU at native width (fp32
-# only in the accumulators), so a wider pool would double compressed-cache
-# HBM bytes for no accuracy the softmax can see. The dense window keeps the
-# compute dtype (it is read-modified every step).
-POOL_DTYPE = jnp.bfloat16
+# Compressed pools store packed values NARROWER than the compute dtype —
+# decode is bandwidth-bound on pool bytes, so pool width is a knob
+# (``MustafarConfig.pool_dtype``), never the compute dtype:
+#   "bf16" (default) — kernels load bf16 and feed the MXU at native width
+#     (fp32 only in the accumulators); a wider pool would double
+#     compressed-cache HBM bytes for no accuracy the softmax can see.
+#   "int8" — symmetric absmax quantization per (head, tile_tokens-token
+#     tile) at compression time; one fp32 scale per tile rides in a sibling
+#     ``ck_scale``/``cv_scale`` pool leaf and readers dequantize in-register
+#     before the MXU product. Bitmap planes / block tables are unchanged.
+# The dense window always keeps the compute dtype (read-modified every step).
+POOL_DTYPE = jnp.bfloat16         # the "bf16" mapping (back-compat alias)
+SCALE_DTYPE = jnp.float32         # per-tile absmax scales (int8 pools only)
+
+_POOL_DTYPES = {"bf16": jnp.bfloat16, "int8": jnp.int8}
+
+
+def pool_dtype(cfg: ModelConfig):
+    """jnp dtype of the packed value pools for ``cfg`` (bf16 | int8)."""
+    try:
+        return _POOL_DTYPES[cfg.mustafar.pool_dtype]
+    except KeyError:
+        raise ValueError(
+            f"unknown pool_dtype={cfg.mustafar.pool_dtype!r}; "
+            f"expected one of {sorted(_POOL_DTYPES)}") from None
+
+
+def pool_quantized(cfg: ModelConfig) -> bool:
+    """True when value pools store int8 + sibling per-tile scale leaves."""
+    pool_dtype(cfg)  # validate the knob even on the bf16 path
+    return cfg.mustafar.pool_dtype == "int8"
 
 
 def plan_pools(cfg: ModelConfig, max_total_tokens: int,
@@ -356,9 +381,9 @@ def gather_page_arrays(cache, pages):
     idx = np.asarray(list(pages), np.int32)
     out = []
     for lc in cache["blocks"]:
-        if all(kn in lc for kn in _POOL_KEYS):
+        if _is_pool_layer(lc):
             out.append({name: np.asarray(lc[name][:, idx])
-                        for name in _POOL_KEYS})
+                        for name in _pool_keys(lc)})
         else:
             out.append(None)
     return out
@@ -382,11 +407,11 @@ def scatter_page_arrays(cache, data, pages):
     the returned cache."""
     new_blocks = []
     for lc, entry in zip(cache["blocks"], data):
-        if entry is None or not all(kn in lc for kn in _POOL_KEYS):
+        if entry is None or not _is_pool_layer(lc):
             new_blocks.append(lc)
             continue
         nl = dict(lc)
-        for name in _POOL_KEYS:
+        for name in _pool_keys(lc):
             leaf = nl[name]
             host = entry[name]
             for i, phys in enumerate(pages):
@@ -461,7 +486,7 @@ def prefix_cache_fingerprint(cfg: ModelConfig, page_tokens: int) -> Dict[str, An
         "key_sparsity": m.key_sparsity,
         "value_sparsity": m.value_sparsity,
         "page_tokens": page_tokens,
-        "pool_dtype": str(jnp.dtype(POOL_DTYPE)),
+        "pool_dtype": str(jnp.dtype(pool_dtype(cfg))),
     }
 
 
@@ -999,9 +1024,9 @@ def copy_page(cache, src: int, dst: int):
     dst = jnp.int32(dst)
     new_blocks = []
     for lc in cache["blocks"]:
-        if all(kn in lc for kn in _POOL_KEYS):
+        if _is_pool_layer(lc):
             nl = dict(lc)
-            for name in _POOL_KEYS:
+            for name in _pool_keys(lc):
                 nl[name] = _copy_page_leaf(lc[name], src, dst)
             new_blocks.append(nl)
         else:
@@ -1031,14 +1056,23 @@ def layer_cache_shapes(cfg: ModelConfig, kind: str, B: int,
         if m.enabled:
             kk = m.keep_k(d, m.key_sparsity)
             kv = m.keep_k(d, m.value_sparsity)
+            pdt = pool_dtype(cfg)
             spec = {
-                "ck_vals": ((B, Hkv, Tc_max, kk), POOL_DTYPE),
+                "ck_vals": ((B, Hkv, Tc_max, kk), pdt),
                 "ck_bm": ((B, Hkv, Tc_max, W32), jnp.uint32),
-                "cv_vals": ((B, Hkv, Tc_max, kv), POOL_DTYPE),
+                "cv_vals": ((B, Hkv, Tc_max, kv), pdt),
                 "cv_bm": ((B, Hkv, Tc_max, W32), jnp.uint32),
-                "k_win": ((B, Hkv, Wbuf, d), cdt),
-                "v_win": ((B, Hkv, Wbuf, d), cdt),
             }
+            if pool_quantized(cfg):
+                # one fp32 absmax scale per (head, tile_tokens-token tile);
+                # the row axis counts TILES — a leaf's quant tile is always
+                # derivable as vals_rows // scale_rows, so readers need no
+                # extra config threading.
+                nt = Tc_max // m.tile_tokens
+                spec["ck_scale"] = ((B, Hkv, nt, 1), SCALE_DTYPE)
+                spec["cv_scale"] = ((B, Hkv, nt, 1), SCALE_DTYPE)
+            spec["k_win"] = ((B, Hkv, Wbuf, d), cdt)
+            spec["v_win"] = ((B, Hkv, Wbuf, d), cdt)
         else:
             spec = {
                 "k": ((B, Hkv, max_total_tokens, d), cdt),
@@ -1058,8 +1092,25 @@ def layer_cache_shapes(cfg: ModelConfig, kind: str, B: int,
 
 
 # pool leaves that switch from slot-major [B, Hkv, Tc, ·] to page-major
-# [n_pages, Hkv, page_tokens, ·] under paging
-_POOL_KEYS = ("ck_vals", "ck_bm", "cv_vals", "cv_bm")
+# [n_pages, Hkv, page_tokens, ·] under paging. The scale leaves exist ONLY
+# for quantized (int8) pools — every pool-generic path below iterates
+# ``_pool_keys(lc)`` (present leaves) so bf16 caches keep their exact PR 9
+# shapes — and their row axis counts TILES, not tokens (rows-per-page =
+# page_tokens // tile_tokens), so generic page splicing must use each
+# leaf's own rows-per-page rather than assuming page_tokens.
+_VALUE_POOL_KEYS = ("ck_vals", "ck_bm", "cv_vals", "cv_bm")
+_SCALE_KEYS = ("ck_scale", "cv_scale")
+_POOL_KEYS = _VALUE_POOL_KEYS + _SCALE_KEYS
+
+
+def _is_pool_layer(lc) -> bool:
+    """True for an attention layer cache holding compressed pools."""
+    return all(kn in lc for kn in _VALUE_POOL_KEYS)
+
+
+def _pool_keys(lc):
+    """The pool leaves actually present (scales only under int8)."""
+    return tuple(kn for kn in _POOL_KEYS if kn in lc)
 
 
 def init_cache(cfg: ModelConfig, B: int, max_total_tokens: int,
@@ -1094,9 +1145,13 @@ def init_cache(cfg: ModelConfig, B: int, max_total_tokens: int,
         spec = layer_cache_shapes(cfg, kind, B, max_total_tokens, enc_ctx)
         if paged and kind == "attn":
             for name in _POOL_KEYS:
+                if name not in spec:
+                    continue
                 (_, _, _, c), dt = spec[name]
-                spec[name] = ((n_pages + 1, cfg.n_kv_heads, page_tokens, c),
-                              dt)
+                # scale leaves hold one row per tile, not per token
+                rows = (page_tokens // cfg.mustafar.tile_tokens
+                        if name in _SCALE_KEYS else page_tokens)
+                spec[name] = ((n_pages + 1, cfg.n_kv_heads, rows, c), dt)
         blocks.append({k: jnp.zeros((n_periods,) + shp, dt)
                        for k, (shp, dt) in spec.items()})
     out = {
@@ -1114,35 +1169,49 @@ def init_cache(cfg: ModelConfig, B: int, max_total_tokens: int,
 # ----------------------------------------------------------------------
 # compaction (tile-group retirement: window -> compressed pools)
 
-# leaves mutated by tile-group retirement (cross_k/cross_v etc. pass through)
-_COMPACT_KEYS = ("ck_vals", "ck_bm", "cv_vals", "cv_bm", "k_win", "v_win")
+# leaves mutated by tile-group retirement (cross_k/cross_v etc. pass
+# through; the scale leaves join only when present, i.e. int8 pools)
+_COMPACT_KEYS = ("ck_vals", "ck_bm", "cv_vals", "cv_bm",
+                 "ck_scale", "cv_scale", "k_win", "v_win")
+
+
+def _compact_keys(lc):
+    return tuple(k for k in _COMPACT_KEYS if k in lc)
 
 
 def _compact_layer_seq(cfg: ModelConfig, lc: Dict[str, jax.Array],
                        n_compressed: jax.Array) -> Dict[str, jax.Array]:
     """ONE sequence's tile-group retirement: compress the oldest tile_tokens
     of its window into its pools at offset ``n_compressed`` (scalar) and roll
-    the window left. Leaves carry no batch dim (k_win [Hkv, Wbuf, d])."""
+    the window left. Leaves carry no batch dim (k_win [Hkv, Wbuf, d]).
+    Quantized pools additionally receive one absmax scale per head at tile
+    slot ``n_compressed // tile_tokens`` — computed in the same compress
+    dispatch, not an extra pass over the tile."""
     m = cfg.mustafar
     d = cfg.d_head
     tt = m.tile_tokens
     kk = m.keep_k(d, m.key_sparsity)
     kv = m.keep_k(d, m.value_sparsity)
+    quant = pool_quantized(cfg)
 
     k_tile = lc["k_win"][:, :tt, :]                    # [Hkv,tt,d]
     v_tile = lc["v_win"][:, :tt, :]
-    ck_v, ck_b = kops.compress(k_tile, kk)
-    cv_v, cv_b = kops.compress(v_tile, kv)
+    qt = tt if quant else None
+    ck = kops.compress(k_tile, kk, quant_tile=qt)
+    cv = kops.compress(v_tile, kv, quant_tile=qt)
 
-    def upd(pool, tile):
+    def upd(pool, tile, step=1):
         return jax.lax.dynamic_update_slice(
-            pool, tile.astype(pool.dtype), (0, n_compressed, 0))
+            pool, tile.astype(pool.dtype), (0, n_compressed // step, 0))
 
     out = dict(lc)
-    out["ck_vals"] = upd(lc["ck_vals"], ck_v)
-    out["ck_bm"] = upd(lc["ck_bm"], ck_b)
-    out["cv_vals"] = upd(lc["cv_vals"], cv_v)
-    out["cv_bm"] = upd(lc["cv_bm"], cv_b)
+    out["ck_vals"] = upd(lc["ck_vals"], ck[0])
+    out["ck_bm"] = upd(lc["ck_bm"], ck[1])
+    out["cv_vals"] = upd(lc["cv_vals"], cv[0])
+    out["cv_bm"] = upd(lc["cv_bm"], cv[1])
+    if quant:
+        out["ck_scale"] = upd(lc["ck_scale"], ck[2], step=tt)
+        out["cv_scale"] = upd(lc["cv_scale"], cv[2], step=tt)
     # roll the window left by tile_tokens (retired tokens drop out)
     out["k_win"] = jnp.roll(lc["k_win"], -tt, axis=1)
     out["v_win"] = jnp.roll(lc["v_win"], -tt, axis=1)
@@ -1160,11 +1229,12 @@ def compact_layer(cfg: ModelConfig, lc: Dict[str, jax.Array],
     no ``lax.cond``, so slots trigger independently of any global counter.
     (The compress runs for every slot every call; the select discards the
     unneeded ones. That is the static-shape price of raggedness.)"""
-    sub = {k: lc[k] for k in _COMPACT_KEYS}
+    keys = _compact_keys(lc)
+    sub = {k: lc[k] for k in keys}
     comp = jax.vmap(lambda one, nc: _compact_layer_seq(cfg, one, nc))(
         sub, n_compressed)
     out = dict(lc)
-    for k in _COMPACT_KEYS:
+    for k in keys:
         if need is None:
             out[k] = comp[k]
         else:
@@ -1195,10 +1265,12 @@ def compact_layer_paged(cfg: ModelConfig, lc: Dict[str, jax.Array],
     kv = m.keep_k(d, m.value_sparsity)
     n_phys, _, pt, _ = lc["ck_vals"].shape
 
+    quant = pool_quantized(cfg)
     k_tile = lc["k_win"][:, :, :tt, :]                 # [B,Hkv,tt,d]
     v_tile = lc["v_win"][:, :, :tt, :]
-    ck_v, ck_b = kops.compress(k_tile, kk)             # [B,Hkv,tt,·]
-    cv_v, cv_b = kops.compress(v_tile, kv)
+    qt = tt if quant else None
+    ck = kops.compress(k_tile, kk, quant_tile=qt)      # [B,Hkv,tt,·]
+    cv = kops.compress(v_tile, kv, quant_tile=qt)
 
     lp = n_compressed // pt                            # [B] logical page
     off = n_compressed % pt                            # [B] in-page offset
@@ -1207,19 +1279,23 @@ def compact_layer_paged(cfg: ModelConfig, lc: Dict[str, jax.Array],
     phys = jnp.where(ok, jnp.clip(phys, 0, n_phys - 1), n_phys - 1)
     off = jnp.where(ok, off, 0)
 
-    def scatter(pool, tiles):
+    def scatter(pool, tiles, offs):
         def body(p, xs):
             tile, pg, o = xs                           # tile [Hkv, tt, ·]
             return jax.lax.dynamic_update_slice(
                 p, tile[None].astype(p.dtype), (pg, 0, o, 0)), None
-        p, _ = jax.lax.scan(body, pool, (tiles, phys, off))
+        p, _ = jax.lax.scan(body, pool, (tiles, phys, offs))
         return p
 
     out = dict(lc)
-    out["ck_vals"] = scatter(lc["ck_vals"], ck_v)
-    out["ck_bm"] = scatter(lc["ck_bm"], ck_b)
-    out["cv_vals"] = scatter(lc["cv_vals"], cv_v)
-    out["cv_bm"] = scatter(lc["cv_bm"], cv_b)
+    out["ck_vals"] = scatter(lc["ck_vals"], ck[0], off)
+    out["ck_bm"] = scatter(lc["ck_bm"], ck[1], off)
+    out["cv_vals"] = scatter(lc["cv_vals"], cv[0], off)
+    out["cv_bm"] = scatter(lc["cv_bm"], cv[1], off)
+    if quant:
+        # scale pools hold one row per tile: in-page tile slot = off // tt
+        out["ck_scale"] = scatter(lc["ck_scale"], ck[2], off // tt)
+        out["cv_scale"] = scatter(lc["cv_scale"], cv[2], off // tt)
     wmask = need.reshape((-1, 1, 1, 1))
     out["k_win"] = jnp.where(wmask, jnp.roll(lc["k_win"], -tt, axis=2),
                              lc["k_win"])
@@ -1261,12 +1337,15 @@ def compact_layer_paged_fused(cfg: ModelConfig, lc: Dict[str, jax.Array],
     k_tile = lc["k_win"][:, :, :, :tt, :]              # [P,B,Hkv,tt,d]
     v_tile = lc["v_win"][:, :, :, :tt, :]
     fold = lambda a: a.reshape((-1,) + a.shape[2:])
-    pools = [fold(lc[name]) for name in _POOL_KEYS]
+    names = _pool_keys(lc)                             # scales ride when int8
+    pools = [fold(lc[name]) for name in names]
     new_pools = kops.compress_scatter(
-        fold(k_tile), fold(v_tile), *pools, phys_pb, off_pb)
+        fold(k_tile), fold(v_tile), *pools[:4], phys_pb, off_pb,
+        k_scale=pools[4] if len(pools) > 4 else None,
+        v_scale=pools[5] if len(pools) > 4 else None)
 
     out = dict(lc)
-    for name, pool in zip(_POOL_KEYS, new_pools):
+    for name, pool in zip(names, new_pools):
         out[name] = pool.reshape(lc[name].shape)
     wmask = need.reshape((1, -1, 1, 1, 1))
     out["k_win"] = jnp.where(wmask, jnp.roll(lc["k_win"], -tt, axis=3),
@@ -1329,14 +1408,21 @@ def build_layer_cache_from_prefill(cfg: ModelConfig, k: jax.Array, v: jax.Array,
         kk = m.keep_k(d, m.key_sparsity)
         kv_ = m.keep_k(d, m.value_sparsity)
         if comp > S:
-            ck_v, ck_b = kops.compress(kT[:, :, S:comp], kk)
-            cv_v, cv_b = kops.compress(vT[:, :, S:comp], kv_)
+            qt = m.tile_tokens if pool_quantized(cfg) else None
+            ck = kops.compress(kT[:, :, S:comp], kk, quant_tile=qt)
+            cv = kops.compress(vT[:, :, S:comp], kv_, quant_tile=qt)
             lc["ck_vals"] = jax.lax.dynamic_update_slice(
-                lc["ck_vals"], ck_v.astype(lc["ck_vals"].dtype), (0, 0, S, 0))
-            lc["ck_bm"] = jax.lax.dynamic_update_slice(lc["ck_bm"], ck_b, (0, 0, S, 0))
+                lc["ck_vals"], ck[0].astype(lc["ck_vals"].dtype), (0, 0, S, 0))
+            lc["ck_bm"] = jax.lax.dynamic_update_slice(lc["ck_bm"], ck[1], (0, 0, S, 0))
             lc["cv_vals"] = jax.lax.dynamic_update_slice(
-                lc["cv_vals"], cv_v.astype(lc["cv_vals"].dtype), (0, 0, S, 0))
-            lc["cv_bm"] = jax.lax.dynamic_update_slice(lc["cv_bm"], cv_b, (0, 0, S, 0))
+                lc["cv_vals"], cv[0].astype(lc["cv_vals"].dtype), (0, 0, S, 0))
+            lc["cv_bm"] = jax.lax.dynamic_update_slice(lc["cv_bm"], cv[1], (0, 0, S, 0))
+            if qt is not None:
+                St = S // m.tile_tokens                # tile-row offset
+                lc["ck_scale"] = jax.lax.dynamic_update_slice(
+                    lc["ck_scale"], ck[2].astype(SCALE_DTYPE), (0, 0, St, 0))
+                lc["cv_scale"] = jax.lax.dynamic_update_slice(
+                    lc["cv_scale"], cv[2].astype(SCALE_DTYPE), (0, 0, St, 0))
         lc["k_win"] = jax.lax.dynamic_update_slice(
             lc["k_win"], kT[:, :, comp:].astype(lc["k_win"].dtype), (0, 0, 0, 0))
         lc["v_win"] = jax.lax.dynamic_update_slice(
@@ -1404,13 +1490,16 @@ def write_slot_paged(cfg: ModelConfig, cache, solo_cache, slot,
     new_blocks = []
     for shared_lc, solo_lc in zip(cache["blocks"], solo_cache["blocks"]):
         nl = dict(shared_lc)
-        paged_attn = all(kn in shared_lc for kn in _POOL_KEYS)
+        paged_attn = _is_pool_layer(shared_lc)
         for name, leaf in shared_lc.items():
             src = solo_lc[name].astype(leaf.dtype)
             if paged_attn and name in _POOL_KEYS:
+                # each leaf's own rows-per-page: page_tokens for value/bitmap
+                # planes, page_tokens // tile_tokens for scale leaves
+                rpp = leaf.shape[3]
                 for i, phys in enumerate(pages):
                     logical = n_shared + i
-                    chunk = src[:, :, :, logical * pt:(logical + 1) * pt]
+                    chunk = src[:, :, :, logical * rpp:(logical + 1) * rpp]
                     leaf = jax.lax.dynamic_update_slice(
                         leaf, chunk, (0, phys, 0, 0, 0))
                 nl[name] = leaf
@@ -1431,18 +1520,34 @@ def write_slot_paged(cfg: ModelConfig, cache, solo_cache, slot,
     return out
 
 
-def page_bytes(cfg: ModelConfig, page_tokens: int) -> int:
-    """HBM bytes one physical page costs across all attention layers
-    (packed K+V values at POOL_DTYPE width + both bitmap planes)."""
+def pool_value_bytes(cfg: ModelConfig, tokens: int) -> int:
+    """Packed-VALUE bytes (plus scale leaves when quantized) for ``tokens``
+    compressed tokens per KV head per attention layer, summed over heads and
+    layers — exactly the HBM term ``pool_dtype`` shrinks. Bitmap planes are
+    dtype-independent and excluded (see ``page_bytes`` for the full page)."""
     m = cfg.mustafar
     d, Hkv = cfg.d_head, cfg.n_kv_heads
-    pool_itemsize = jnp.dtype(POOL_DTYPE).itemsize
-    W32 = pad_to_words(d) // 32
+    pool_itemsize = jnp.dtype(pool_dtype(cfg)).itemsize
     kk = m.keep_k(d, m.key_sparsity)
     kv = m.keep_k(d, m.value_sparsity)
     n_attn = len(cfg.attention_layers())
-    return n_attn * Hkv * page_tokens * (
-        (kk + kv) * pool_itemsize + 2 * W32 * 4)
+    per_head = tokens * (kk + kv) * pool_itemsize
+    if pool_quantized(cfg):
+        per_head += 2 * (tokens // m.tile_tokens) * \
+            jnp.dtype(SCALE_DTYPE).itemsize
+    return n_attn * Hkv * per_head
+
+
+def page_bytes(cfg: ModelConfig, page_tokens: int) -> int:
+    """HBM bytes one physical page costs across all attention layers
+    (packed K+V values at the configured ``pool_dtype`` width + both bitmap
+    planes + the per-tile scale rows when quantized — scales ride IN the
+    page, so a swapped or shared page stays self-contained)."""
+    d, Hkv = cfg.d_head, cfg.n_kv_heads
+    W32 = pad_to_words(d) // 32
+    n_attn = len(cfg.attention_layers())
+    return pool_value_bytes(cfg, page_tokens) \
+        + n_attn * Hkv * page_tokens * 2 * W32 * 4
 
 
 def cache_hbm_bytes(cfg: ModelConfig, B: int, max_total_tokens: int,
@@ -1451,9 +1556,10 @@ def cache_hbm_bytes(cfg: ModelConfig, B: int, max_total_tokens: int,
                     mesh_model: int = 1) -> Dict[str, int]:
     """Static accounting of cache memory (dense vs Mustafar) — Fig. 6b terms.
 
-    Packed values are sized at the bf16 ``POOL_DTYPE`` width (pools never
-    widen with the compute dtype); the dense window and the dense baseline
-    use the compute dtype.
+    Packed values are sized at the configured ``pool_dtype`` width (bf16
+    default, int8 adds the per-tile fp32 scale leaves; pools never widen
+    with the compute dtype); the dense window and the dense baseline use
+    the compute dtype.
 
     With ``page_tokens`` set, three paged keys are added: ``paged_pool``
     (``(n_pages + 1)`` physical pages incl. the scratch page, at
@@ -1475,21 +1581,17 @@ def cache_hbm_bytes(cfg: ModelConfig, B: int, max_total_tokens: int,
                          + win / mesh_model
     """
     itemsize = jnp.dtype(cfg.dtype).itemsize
-    pool_itemsize = jnp.dtype(POOL_DTYPE).itemsize
     d, Hkv = cfg.d_head, cfg.n_kv_heads
     if mesh_model > 1 and Hkv % mesh_model:
         raise ValueError(f"n_kv_heads={Hkv} not divisible by "
                          f"mesh_model={mesh_model}")
     n_attn = len(cfg.attention_layers())
     dense = n_attn * B * Hkv * max_total_tokens * d * 2 * itemsize
-    m = cfg.mustafar
     Tc_max, Wbuf = plan_pools(cfg, max_total_tokens, batch=B)
     W32 = pad_to_words(d) // 32
-    kk = m.keep_k(d, m.key_sparsity)
-    kv = m.keep_k(d, m.value_sparsity)
     win = n_attn * B * Hkv * 2 * Wbuf * d * itemsize
-    must = n_attn * B * Hkv * Tc_max * (
-        (kk + kv) * pool_itemsize + 2 * W32 * 4) + win
+    must = B * pool_value_bytes(cfg, Tc_max) \
+        + n_attn * B * Hkv * Tc_max * 2 * W32 * 4 + win
     out = {"dense": dense, "mustafar": must,
            "ratio": must / max(dense, 1)}
     if page_tokens is not None:

@@ -202,14 +202,16 @@ def _attn_decode(bp, h, cfg: ModelConfig, lc, position, w_len, n_compressed,
                 cv_pool=lc["cv_vals"], cv_bitmap=lc["cv_bm"],
                 block_table=block_table, n_compressed=n_compressed,
                 k_window=lc["k_win"], v_window=lc["v_win"],
-                n_window=w_len + 1)
+                n_window=w_len + 1,
+                ck_scale=lc.get("ck_scale"), cv_scale=lc.get("cv_scale"))
         else:
             view = MustafarCacheView(
                 ck_values=lc["ck_vals"], ck_bitmap=lc["ck_bm"],
                 cv_values=lc["cv_vals"], cv_bitmap=lc["cv_bm"],
                 n_compressed=n_compressed,
                 k_window=lc["k_win"], v_window=lc["v_win"],
-                n_window=w_len + 1)
+                n_window=w_len + 1,
+                ck_scale=lc.get("ck_scale"), cv_scale=lc.get("cv_scale"))
         # formulation choice (two-pass / fused Pallas kernel / chunked scan)
         # lives in models.attention.decode_attention_auto: sharding-friendly
         # two-pass for B==1 and small pools, the DMA-skipping fused kernel
@@ -735,6 +737,7 @@ class Scheduler:
                  fused_compaction: Optional[bool] = None,
                  prefill_lanes: Optional[int] = None,
                  tile_overhead_bytes: Optional[int] = None,
+                 pool_dtype: Optional[str] = None,
                  mesh=None,
                  admission_policy: str = "wait",
                  debug_invariants: bool = False,
@@ -742,6 +745,18 @@ class Scheduler:
                  tracer=None,
                  trace_sync: bool = False,
                  tracer_tid: int = 0):
+        # ``pool_dtype`` ("bf16"|"int8") overrides cfg.mustafar.pool_dtype:
+        # the storage width of the compressed value pools (int8 adds
+        # sibling per-tile fp32 scale leaves — see serving.cache). All
+        # downstream consumers read the width off cfg, so overriding here
+        # threads it everywhere (shapes, kernels, accounting, fingerprint).
+        if pool_dtype is not None and pool_dtype != cfg.mustafar.pool_dtype:
+            from dataclasses import replace as _dc_replace
+            if pool_dtype not in ("bf16", "int8"):
+                raise ValueError(f"unknown pool_dtype {pool_dtype!r} "
+                                 "(expected 'bf16' or 'int8')")
+            cfg = _dc_replace(cfg, mustafar=_dc_replace(
+                cfg.mustafar, pool_dtype=pool_dtype))
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots

@@ -253,9 +253,11 @@ def cache_partition_spec(path_names, shape, cfg: ModelConfig, mesh: Mesh,
     def with_lead(*entries):
         return P(None, *entries)
 
-    if paged and name in ("ck_vals", "ck_bm", "cv_vals", "cv_bm"):
-        # paged pool leaf [n_phys, Hkv, page_tokens, k]: heads on "model",
-        # physical pages replicated (ids must be device-agnostic)
+    if paged and name in ("ck_vals", "ck_bm", "cv_vals", "cv_bm",
+                          "ck_scale", "cv_scale"):
+        # paged pool leaf [n_phys, Hkv, page_tokens, k] (scale pools
+        # [n_phys, Hkv, page_tokens//qt, 1] shard the same way): heads on
+        # "model", physical pages replicated (ids must be device-agnostic)
         _, Hkv, _, _ = core
         return with_lead(None, _maybe(Hkv, mesh, MODEL), None, None)
 
@@ -263,7 +265,10 @@ def cache_partition_spec(path_names, shape, cfg: ModelConfig, mesh: Mesh,
     b_ax = dp if _fits(B, mesh, dp) else (
         ("data",) if _fits(B, mesh, ("data",)) else None)
 
-    if name in ("ck_vals", "ck_bm", "cv_vals", "cv_bm"):   # [B,Hkv,Tc,k]
+    if name in ("ck_vals", "ck_bm", "cv_vals", "cv_bm",
+                "ck_scale", "cv_scale"):                    # [B,Hkv,Tc,k]
+        # (scale leaves [B,Hkv,Tc//qt,1] ride beside the value pools and
+        # shard identically — the token-tile dim splits with the token dim)
         _, Hkv, Tc, _ = core
         h_ax = _maybe(Hkv, mesh, MODEL)
         if b_ax is not None:

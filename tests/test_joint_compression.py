@@ -1,4 +1,5 @@
-"""H2O eviction + KIVI quantization joint-application invariants (paper §4.2)."""
+"""H2O eviction + KIVI quantization joint-application invariants (paper §4.2)
+plus the symmetric-quantization storage model and its oracle contract."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -6,7 +7,10 @@ import pytest
 
 from repro.core.eviction import accumulate_attention, h2o_keep_mask
 from repro.core.quantization import (kivi_quantize_key, kivi_quantize_value,
-                                     quant_bytes_per_token)
+                                     quant_bytes_per_token,
+                                     symmetric_fake_quant)
+from repro.core.sparse_format import (dequantize_fixedk, prune_and_pack,
+                                      quantize_fixedk)
 from repro.core import pruning
 
 
@@ -57,5 +61,49 @@ def test_kivi_prune_then_quantize_preserves_zeros(rng):
 
 
 def test_quant_storage_model():
+    """The model describes the SHIPPED layout: packed symmetric ints plus
+    ONE fp32 absmax scale per tile_tokens tile (amortized per token) — not
+    the seed's per-group-of-32 asymmetric fp16 scale+zero, which nothing
+    ever stored."""
     assert quant_bytes_per_token(128, 4) < 128 * 2 * 0.35
     assert quant_bytes_per_token(128, 2) < quant_bytes_per_token(128, 4)
+    # exact: d·bits/8 value bytes + 4-byte scale amortized over the tile
+    assert quant_bytes_per_token(128, 8, tile_tokens=64) == \
+        pytest.approx(128 + 4.0 / 64)
+    # coarser tiles amortize the scale further
+    assert quant_bytes_per_token(128, 8, tile_tokens=128) < \
+        quant_bytes_per_token(128, 8, tile_tokens=32)
+
+
+def test_symmetric_quant_roundtrip_matches_oracle(rng):
+    """The storage round-trip (quantize_fixedk -> dequantize_fixedk) must
+    reproduce the fake-quant oracle BIT-FOR-BIT: both use the same jnp ops
+    (fp32, round-half-to-even, reciprocal-multiply scale), which is the
+    contract the real int8 pools are held to."""
+    x = jnp.asarray(rng.normal(size=(2, 3, 64, 32)).astype(np.float32))
+    vals, _ = prune_and_pack(x, 8)
+    for tile in (16, 32, 64):
+        q, s = quantize_fixedk(vals, tile)
+        assert q.dtype == jnp.int8
+        assert s.shape == (2, 3, 64 // tile, 1) and s.dtype == jnp.float32
+        np.testing.assert_array_equal(
+            np.asarray(dequantize_fixedk(q, s)),
+            np.asarray(symmetric_fake_quant(vals, tile)))
+
+
+def test_symmetric_quant_zero_blocks_stay_zero():
+    vals = jnp.zeros((1, 1, 32, 8), jnp.float32)
+    q, s = quantize_fixedk(vals, 16)
+    assert (np.asarray(q) == 0).all()
+    assert (np.asarray(s) == 1.0).all()       # zero-guard scale
+    assert (np.asarray(dequantize_fixedk(q, s)) == 0.0).all()
+
+
+def test_symmetric_quant_error_bounded(rng):
+    """Per-tile absmax int8: max error <= scale/2 per element."""
+    x = jnp.asarray(rng.normal(size=(4, 64, 16)).astype(np.float32))
+    q, s = quantize_fixedk(x, 16)
+    deq = np.asarray(dequantize_fixedk(q, s))
+    err = np.abs(deq - np.asarray(x))
+    bound = np.repeat(np.asarray(s), 16, axis=-2)[..., 0] / 2 + 1e-7
+    assert (err <= bound[..., None]).all()

@@ -1,0 +1,260 @@
+"""Int8 quantized sparse page pools (PR 10).
+
+What this module pins down:
+
+  * FORMAT TRANSPARENCY — switching ``pool_dtype`` from bf16 to int8
+    changes the VALUE pools only: bitmap planes and block tables are
+    BIT-IDENTICAL between the two (pruning decides what survives, the
+    pool dtype only decides how survivors are stored).
+  * ORACLE CONTRACT — dequantizing a real int8 pool reproduces the
+    ``symmetric_fake_quant`` accuracy oracle bit-for-bit on the packed
+    fp32 values (the KIVI-module contract from the paper's §4.2.2
+    joint-application experiments).
+  * SPOOL ROUND-TRIP — preempt -> restore and prefix demote -> promote
+    move the int8 leaves AND their sibling fp32 scale leaves through the
+    host spool byte-exactly (outputs identical to an uninterrupted int8
+    run).
+  * FINGERPRINT REFUSAL — a prefix cache persisted under one pool dtype
+    is refused by a scheduler running the other (the compressed bytes
+    would be reinterpreted wrongly).
+"""
+import os
+import tempfile
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.quantization import symmetric_fake_quant
+from repro.core.sparse_format import dequantize_fixedk, prune_and_pack
+from repro.models import init_params
+from repro.serving import cache as cache_mod
+from repro.serving.cache import (build_layer_cache_from_prefill,
+                                 gather_page_arrays, init_cache,
+                                 pool_value_bytes, prefill_split,
+                                 scatter_page_arrays)
+from repro.serving.engine import Request, Scheduler, decode_step, prefill
+
+KEY = jax.random.PRNGKey(0)
+CFG = get_config("starcoder2-3b").reduced().with_sparsity(0.5, 0.5)
+CFG_Q = replace(CFG, mustafar=replace(CFG.mustafar, pool_dtype="int8"))
+PARAMS = init_params(KEY, CFG)          # weights don't depend on pool dtype
+MAX_TOTAL = 96
+TT = CFG.mustafar.tile_tokens           # 16 in the reduced cfg
+_PREFIX_RNG = np.random.default_rng(300)
+PREFIX = [int(t) for t in _PREFIX_RNG.integers(0, CFG.vocab_size, size=56)]
+
+
+def _req(seed, n_prompt, gen, priority=0, prefix=()):
+    r = np.random.default_rng(seed)
+    prompt = list(prefix) + [int(t) for t in
+                             r.integers(0, CFG.vocab_size, size=n_prompt)]
+    return Request(prompt=prompt, max_new_tokens=gen, priority=priority)
+
+
+def _solo_greedy(cfg, prompt, n_new):
+    """Contiguous lockstep reference run under ``cfg`` (tokens only)."""
+    lg, cache = prefill(PARAMS, jnp.asarray(prompt, jnp.int32)[None], cfg,
+                        max_total_tokens=MAX_TOTAL)
+    toks = [int(jnp.argmax(lg[0]))]
+    step = jax.jit(lambda p, t, c: decode_step(p, t, c, cfg))
+    while len(toks) < n_new:
+        lg, cache = step(PARAMS, jnp.asarray([toks[-1]], jnp.int32), cache)
+        toks.append(int(jnp.argmax(lg[0])))
+    return toks
+
+
+def _assert_drained_clean(sched):
+    if sched.share_prefix:
+        sched.prefix.clear(sched.allocator)
+    assert sched.allocator.in_use == 0
+    assert sched.allocator.n_reserved == 0
+    assert sched.spool.n_entries == 0, "host spool leaked entries"
+
+
+# ----------------------------------------------------------------------
+# format transparency + oracle contract (cache level)
+
+def test_int8_pools_bitmaps_identical_and_match_oracle(rng):
+    """Build one layer's cache from the SAME dense prefill under bf16 and
+    int8 pools: bitmaps must be bit-identical, and dequantizing the int8
+    pool must reproduce the fake-quant oracle on the packed fp32 values."""
+    B, T, Hkv, d = 2, 80, CFG.n_kv_heads, CFG.d_head
+    k = jnp.asarray(rng.normal(size=(B, T, Hkv, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, T, Hkv, d)).astype(np.float32))
+    lc_b = build_layer_cache_from_prefill(CFG, k, v, MAX_TOTAL)
+    lc_q = build_layer_cache_from_prefill(CFG_Q, k, v, MAX_TOTAL)
+    comp, _ = prefill_split(CFG, T)
+    assert comp > 0 and comp % TT == 0
+    np.testing.assert_array_equal(np.asarray(lc_b["ck_bm"]),
+                                  np.asarray(lc_q["ck_bm"]))
+    np.testing.assert_array_equal(np.asarray(lc_b["cv_bm"]),
+                                  np.asarray(lc_q["cv_bm"]))
+    assert lc_q["ck_vals"].dtype == jnp.int8
+    assert lc_q["ck_scale"].dtype == jnp.float32
+    assert "ck_scale" not in lc_b and "cv_scale" not in lc_b
+
+    m = CFG.mustafar
+    for src, vals_key, sc_key, kk in (
+            (jnp.swapaxes(k, 1, 2), "ck_vals", "ck_scale",
+             m.keep_k(d, m.key_sparsity)),
+            (jnp.swapaxes(v, 1, 2), "cv_vals", "cv_scale",
+             m.keep_k(d, m.value_sparsity))):
+        packed, _ = prune_and_pack(src[:, :, :comp], kk)
+        oracle = np.asarray(symmetric_fake_quant(packed, TT))
+        deq = np.asarray(dequantize_fixedk(
+            lc_q[vals_key][:, :, :comp],
+            lc_q[sc_key][:, :, :comp // TT]))
+        np.testing.assert_array_equal(deq, oracle)
+
+
+def test_int8_paged_engine_matches_bf16_metadata():
+    """Same workload through a bf16 and an int8 paged scheduler: sampled
+    outputs, block tables, and bitmap planes all bit-identical (the int8
+    error at this operating point never flips a greedy argmax, and the
+    paging machinery never looks inside the value pools)."""
+    scheds = {}
+    for name in ("bf16", "int8"):
+        sched = Scheduler(CFG, PARAMS, n_slots=2, max_total_tokens=MAX_TOTAL,
+                          page_tokens=TT, debug_invariants=True,
+                          pool_dtype=name)
+        for seed in (401, 402):
+            sched.submit(_req(seed, 24, 12))
+        for _ in range(8):                 # prefill + a few decode steps
+            sched.step()
+        scheds[name] = sched
+    sb, sq = scheds["bf16"], scheds["int8"]
+    assert sq.cfg.mustafar.pool_dtype == "int8"
+    np.testing.assert_array_equal(np.asarray(sb.cache["block_table"]),
+                                  np.asarray(sq.cache["block_table"]))
+    for blk_b, blk_q in zip(sb.cache["blocks"], sq.cache["blocks"]):
+        for key in ("ck_bm", "cv_bm"):
+            if key in blk_b:
+                np.testing.assert_array_equal(np.asarray(blk_b[key]),
+                                              np.asarray(blk_q[key]))
+        if "ck_vals" in blk_q:
+            assert blk_q["ck_vals"].dtype == jnp.int8
+            assert blk_b["ck_vals"].dtype == jnp.bfloat16
+    sb.run()
+    sq.run()
+    done_b = {tuple(r.prompt): r.output_tokens for r in sb.finished}
+    done_q = {tuple(r.prompt): r.output_tokens for r in sq.finished}
+    assert done_b == done_q, "int8 flipped a greedy sample"
+    _assert_drained_clean(sb)
+    _assert_drained_clean(sq)
+
+
+def test_int8_pool_bytes_halved():
+    assert pool_value_bytes(CFG_Q, 64) <= 0.55 * pool_value_bytes(CFG, 64)
+
+
+# ----------------------------------------------------------------------
+# spool round-trips (preempt/restore, demote/promote) under int8
+
+def test_int8_preempt_restore_bit_exact():
+    """The PR 8 preemption scenario with int8 pools: the swapped-out pages
+    now include int8 value leaves AND fp32 scale leaves, and the splice
+    back must still be byte-exact vs an uninterrupted int8 run."""
+    sched = Scheduler(CFG, PARAMS, n_slots=2, max_total_tokens=MAX_TOTAL,
+                      page_tokens=TT, n_pages=5,
+                      admission_policy="preempt", debug_invariants=True,
+                      pool_dtype="int8")
+    bg = _req(101, 24, 56, priority=0)
+    hi = _req(102, 24, 24, priority=1)
+    sched.submit(bg)
+    for _ in range(6):
+        sched.step()
+    assert bg.num_generated >= 4
+    sched.submit(hi)
+    sched.run()
+    assert sched.preempt_count >= 1, "pool pressure never preempted"
+    assert sched.restore_count == sched.preempt_count
+    assert bg.output_tokens == _solo_greedy(CFG_Q, bg.prompt,
+                                            bg.max_new_tokens)
+    assert hi.output_tokens == _solo_greedy(CFG_Q, hi.prompt,
+                                            hi.max_new_tokens)
+    assert sched.spool.bytes_in > 0
+    _assert_drained_clean(sched)
+
+
+def test_int8_prefix_spill_promotes_back_bit_exact():
+    sched = Scheduler(CFG, PARAMS, n_slots=1, max_total_tokens=MAX_TOTAL,
+                      page_tokens=TT, share_prefix=True,
+                      debug_invariants=True, pool_dtype="int8")
+    first = _req(131, 4, 8, prefix=PREFIX)
+    sched.submit(first)
+    sched.run()
+    assert len(sched.prefix.held_pages) > 0
+    sched.prefix.evict_until(sched.allocator, sched.n_pages,
+                             spool=True, cache=sched.cache)
+    assert sched.prefix.spooled_entries > 0
+    second = _req(132, 6, 8, prefix=PREFIX)
+    sched.submit(second)
+    sched.run()
+    assert second.shared_prefix_tokens > 0, "spool hit never promoted"
+    assert second.output_tokens == _solo_greedy(CFG_Q, second.prompt,
+                                                second.max_new_tokens)
+    _assert_drained_clean(sched)
+
+
+def test_page_gather_scatter_round_trips_scale_leaves(rng):
+    """The spool payload for an int8 cache carries SIX pool leaves per
+    layer (values + bitmaps + scales); gather -> zero -> scatter must put
+    every byte back, scales included."""
+    cache = init_cache(CFG_Q, 2, MAX_TOTAL, page_tokens=TT)
+    bi = next(i for i, b in enumerate(cache["blocks"]) if "ck_vals" in b)
+    blk = dict(cache["blocks"][bi])
+    for key, leaf in blk.items():
+        if key in cache_mod._POOL_KEYS:
+            if leaf.dtype == jnp.int8:
+                fill = rng.integers(-127, 128, size=leaf.shape)
+            elif leaf.dtype == jnp.uint32:
+                fill = rng.integers(0, 2**32, size=leaf.shape)
+            else:
+                fill = rng.normal(size=leaf.shape)
+            blk[key] = jnp.asarray(fill).astype(leaf.dtype)
+    blocks = list(cache["blocks"])
+    blocks[bi] = blk
+    cache["blocks"] = tuple(blocks)
+    pages = [1, 3]
+    data = gather_page_arrays(cache, pages)
+    assert any(layer is not None and "ck_scale" in layer
+               and "cv_scale" in layer for layer in data), \
+        "scale leaves missing from spool payload"
+    wiped = dict(cache)
+    wiped["blocks"] = tuple(
+        {k: jnp.zeros_like(v) for k, v in b.items()}
+        for b in cache["blocks"])
+    restored = scatter_page_arrays(wiped, data, pages)
+    for key in cache_mod._POOL_KEYS:
+        if key not in cache["blocks"][bi]:
+            continue
+        np.testing.assert_array_equal(
+            np.asarray(restored["blocks"][bi][key][:, pages]),
+            np.asarray(cache["blocks"][bi][key][:, pages]), err_msg=key)
+
+
+# ----------------------------------------------------------------------
+# fingerprint refusal
+
+def test_prefix_load_rejects_pool_dtype_mismatch():
+    donor = Scheduler(CFG, PARAMS, n_slots=1, max_total_tokens=MAX_TOTAL,
+                      page_tokens=TT, share_prefix=True)
+    donor.submit(_req(151, 4, 8, prefix=PREFIX))
+    donor.run()
+    path = os.path.join(tempfile.mkdtemp(), "prefix_cache.pkl")
+    donor.save_prefix_cache(path)
+    other = Scheduler(CFG, PARAMS, n_slots=1, max_total_tokens=MAX_TOTAL,
+                      page_tokens=TT, share_prefix=True, pool_dtype="int8")
+    with pytest.raises(ValueError, match="fingerprint"):
+        other.load_prefix_cache(path)
+    _assert_drained_clean(donor)
+
+
+def test_scheduler_rejects_unknown_pool_dtype():
+    with pytest.raises(ValueError, match="pool_dtype"):
+        Scheduler(CFG, PARAMS, n_slots=1, max_total_tokens=MAX_TOTAL,
+                  pool_dtype="fp4")
